@@ -1,0 +1,75 @@
+"""Kernel microbench: OVSF execution paths vs dense GEMM.
+
+CPU wall-clock is NOT the TPU story (interpret-mode Pallas is a correctness
+tool); the meaningful output here is (a) jnp-path relative timings on CPU as
+a sanity signal and (b) the analytical per-path roofline terms for a
+representative decode-shaped GEMM on v5e constants.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ovsf
+from repro.hwmodel import perf_model as pm
+from repro.kernels import ops
+
+
+def _time(fn, *args, reps=5) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(print_fn=print) -> list[dict]:
+    rows = []
+    M, d_in, d_out, rho = 16, 2048, 2048, 0.5
+    key = jax.random.PRNGKey(0)
+    W = jax.random.normal(key, (d_in, d_out)) * 0.02
+    x = jax.random.normal(key, (M, d_in))
+    spec = ovsf.OVSFSpec(d_in, d_out, rho=rho, seg=16)
+    p = ovsf.compress_matrix(W, spec)
+
+    dense = jax.jit(lambda a, b: a @ b)
+    spectral = jax.jit(lambda a, al, ix: ops.ovsf_matmul(
+        a, al, ix, path="spectral", use_pallas=False))
+    mat = jax.jit(lambda a, al, ix: ops.ovsf_matmul(
+        a, al, ix, path="materialize", use_pallas=False))
+
+    t_dense = _time(dense, x, W)
+    t_spec = _time(spectral, x, p["alphas"], p["idx"])
+    t_mat = _time(mat, x, p["alphas"], p["idx"])
+    for name, t in [("dense", t_dense), ("ovsf_spectral", t_spec),
+                    ("ovsf_materialize", t_mat)]:
+        print_fn(f"kernel_bench,cpu_wall,{name},{t:.1f}us")
+        rows.append(dict(kind="cpu", name=name, us=t))
+
+    # analytical decode-shape roofline per path (v5e)
+    for path in ("materialize", "fused", "spectral"):
+        l = pm.GemmLayer("bench", M=8, d_in=4096, d_out=4096, rho=0.5,
+                         ovsf=True, exec_path=path, seg=16)
+        t = pm.layer_timing(l)
+        print_fn(f"kernel_bench,v5e_model,{path},ii={t.ii*1e6:.2f}us,"
+                 f"bound={t.bound},mem_w={t.t_mem_w*1e6:.2f}us,"
+                 f"wgen={t.t_wgen*1e6:.2f}us,eng={t.t_eng*1e6:.2f}us")
+        rows.append(dict(kind="v5e", name=path, ii_us=t.ii * 1e6,
+                         bound=t.bound))
+    ld = pm.GemmLayer("dense", M=8, d_in=4096, d_out=4096)
+    t = pm.layer_timing(ld)
+    print_fn(f"kernel_bench,v5e_model,dense,ii={t.ii*1e6:.2f}us,bound={t.bound}")
+    rows.append(dict(kind="v5e", name="dense", ii_us=t.ii * 1e6, bound=t.bound))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+"""Recompute the HLO analysis for every dry-run cell from the saved
+zstd-compressed HLO (no recompilation). Run after analyzer improvements.
+
+  PYTHONPATH=src python -m benchmarks.reanalyze --dir results/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import zstandard as zstd
+
+from repro.hwmodel.hlo_analysis import analyze_hlo
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    args = ap.parse_args()
+    n = 0
+    for jf in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        hf = jf[:-5] + ".hlo.zst"
+        if not os.path.exists(hf):
+            continue
+        with open(jf) as f:
+            rec = json.load(f)
+        if rec.get("status") != "OK":
+            continue
+        with open(hf, "rb") as f:
+            txt = zstd.ZstdDecompressor().decompress(f.read()).decode()
+        st = analyze_hlo(txt, n_devices=rec.get("n_devices", 256))
+        rec["analysis"] = st.merged()
+        with open(jf + ".tmp", "w") as f:
+            json.dump(rec, f, indent=1, default=float)
+        os.replace(jf + ".tmp", jf)
+        n += 1
+        print(f"reanalyzed {os.path.basename(jf)}: "
+              f"flops {st.flops:.3e} hbm {st.hbm_bytes:.3e} "
+              f"coll {st.collective_bytes:.3e}")
+    print(f"done: {n} cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,155 @@
+"""Roofline analysis (deliverable g): read the dry-run artifacts and derive
+the three roofline terms per (arch x shape x mesh), the dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPs utilisation, and a one-line improvement note.
+
+  compute term    = HLO_FLOPs_per_chip / 197e12         (bf16 peak)
+  memory term     = HLO_bytes_per_chip / 819e9           (HBM bw)
+  collective term = link_bytes_per_chip / 50e9           (ICI per link)
+
+HLO_FLOPs / bytes come from repro.hwmodel.hlo_analysis (loop-corrected,
+fusion-granularity memory model, ring-model collectives) — see DESIGN.md for
+why raw ``cost_analysis`` is insufficient (no while-trip multiplication).
+
+  PYTHONPATH=src python -m benchmarks.roofline --dir results/dryrun [--csv]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+
+# dense params (ovsf-on default config) and active params per arch, in B
+# (from eval_shape; active = routed top-k + shared + attn for MoE)
+_NOTES = {
+    "C": "compute-bound: raise MXU efficiency (block shapes, bf16 accum, "
+         "fuse wgen into consumer GEMM)",
+    "M": "memory-bound: cut HBM bytes (OVSF rho<0.5, spectral path, int8 "
+         "KV/alphas, wider TP to split weight reads)",
+    "N": "collective-bound: reshard to cut all-gathers (FSDP prefetch "
+         "bucketing, alpha-domain reduction, EP-local dispatch)",
+}
+
+
+def model_flops(rec: dict, n_active: float, n_total: float) -> float:
+    """6*N*D for train, 2*N_active*tokens for inference, global."""
+    shape = rec["shape"]
+    seq = {"train_4k": 4096, "prefill_32k": 32768, "decode_32k": 1,
+           "long_500k": 1}[shape]
+    batch = {"train_4k": 256, "prefill_32k": 32, "decode_32k": 128,
+             "long_500k": 1}[shape]
+    tokens = seq * batch
+    if rec["kind"] == "train":
+        return 6.0 * n_active * tokens
+    return 2.0 * n_active * tokens
+
+
+def active_params(arch: str) -> tuple[float, float]:
+    """(active, total) dense-equivalent param counts for MODEL_FLOPS."""
+    from repro.configs import get_config
+    from repro.configs.base import OVSFConfig
+    from repro.models import registry as R
+    import jax
+    cfg = get_config(arch).replace(ovsf=OVSFConfig(enable=False))
+    specs = R.model_init_specs(cfg)
+    total = sum(int(v.size) for v in jax.tree_util.tree_leaves(specs))
+    if cfg.n_experts:
+        flat, _ = jax.tree_util.tree_flatten_with_path(specs)
+        expert = sum(
+            int(v.size) for p, v in flat
+            if any(str(getattr(k, "key", "")) in ("gate", "up", "down")
+                   for k in p) and v.ndim == 3)
+        active = total - expert + expert * cfg.top_k / cfg.n_experts
+    else:
+        active = total
+    return float(active), float(total)
+
+
+def load(dir_: str, variant: str = "default") -> list[dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dir_, f"*.{variant}.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def row(rec: dict, cache: dict) -> dict:
+    if rec["status"] != "OK":
+        return {"cell": f"{rec['arch']}.{rec['shape']}.{rec['mesh']}",
+                "status": rec["status"],
+                "note": rec.get("reason", rec.get("error", ""))[:90]}
+    a = rec["analysis"]
+    t_c = a["flops"] / PEAK
+    t_m = a["hbm_bytes"] / HBM
+    t_n = a["collective_bytes"] / ICI
+    dom = max((("C", t_c), ("M", t_m), ("N", t_n)), key=lambda kv: kv[1])[0]
+    if rec["arch"] not in cache:
+        cache[rec["arch"]] = active_params(rec["arch"])
+    n_active, n_total = cache[rec["arch"]]
+    mf = model_flops(rec, n_active, n_total)
+    hlo_global = a["flops"] * rec["n_devices"]
+    step = max(t_c, t_m, t_n)
+    bound_frac = {"C": t_c, "M": t_m, "N": t_n}[dom] / max(t_c + 0e0, 1e-30)
+    return {
+        "cell": f"{rec['arch']}.{rec['shape']}.{rec['mesh']}",
+        "status": "OK",
+        "variant": rec.get("variant", "default"),
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_n,
+        "dominant": dom,
+        "step_s": step,
+        "model_flops": mf,
+        "useful_ratio": mf / max(hlo_global, 1e-30),
+        "mfu_at_bound": mf / max(step, 1e-30) / (rec["n_devices"] * PEAK),
+        "mem_per_dev_gb": rec["memory"]["total_per_device"] / 1e9,
+        "note": _NOTES[dom],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--variant", default="default")
+    ap.add_argument("--csv", action="store_true")
+    ap.add_argument("--mesh", default="single",
+                    help="roofline table mesh (single per assignment)")
+    args = ap.parse_args()
+
+    cache: dict = {}
+    rows = [row(r, cache) for r in load(args.dir, args.variant)
+            if r["mesh"] == args.mesh or args.mesh == "both"]
+    rows.sort(key=lambda r: r["cell"])
+    if args.csv:
+        print("cell,status,compute_s,memory_s,collective_s,dominant,step_s,"
+              "useful_ratio,mfu_at_bound,mem_per_dev_gb")
+        for r in rows:
+            if r["status"] != "OK":
+                print(f"{r['cell']},{r['status']},,,,,,,,")
+                continue
+            print(f"{r['cell']},OK,{r['compute_s']:.3e},{r['memory_s']:.3e},"
+                  f"{r['collective_s']:.3e},{r['dominant']},{r['step_s']:.3e},"
+                  f"{r['useful_ratio']:.3f},{r['mfu_at_bound']:.4f},"
+                  f"{r['mem_per_dev_gb']:.1f}")
+        return
+    hdr = (f"{'cell':46s} {'compute':>9s} {'memory':>9s} {'collect':>9s} "
+           f"{'dom':>3s} {'useful':>6s} {'MFU@b':>6s} {'GB/dev':>6s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        if r["status"] != "OK":
+            print(f"{r['cell']:46s} {r['status']}: {r['note']}")
+            continue
+        print(f"{r['cell']:46s} {r['compute_s']:9.3e} {r['memory_s']:9.3e} "
+              f"{r['collective_s']:9.3e} {r['dominant']:>3s} "
+              f"{r['useful_ratio']:6.2f} {r['mfu_at_bound']:6.3f} "
+              f"{r['mem_per_dev_gb']:6.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Benchmark harness entry point — one section per paper table.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run table45    # one table
+
+Each line is ``name,...`` CSV; roofline tables read the dry-run artifacts in
+results/dryrun (run ``python -m repro.launch.dryrun`` first for those).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks import (kernel_bench, table1_autotune, table3_basis,
+                        table45_throughput, table6_squeezenet,
+                        table10_balance)
+
+SECTIONS = {
+    "table1": table1_autotune.run,
+    "table3": table3_basis.run,
+    "table45": table45_throughput.run,
+    "table6": table6_squeezenet.run,
+    "table10": table10_balance.run,
+    "kernels": kernel_bench.run,
+}
+
+
+def main() -> None:
+    which = sys.argv[1:] or list(SECTIONS)
+    for name in which:
+        fn = SECTIONS.get(name)
+        if fn is None:
+            print(f"unknown section {name}; have {list(SECTIONS)}")
+            continue
+        t0 = time.perf_counter()
+        print(f"== {name} ==")
+        fn()
+        print(f"== {name} done in {time.perf_counter() - t0:.1f}s ==")
+
+    # roofline summary (if the dry-run has been run)
+    if os.path.isdir("results/dryrun") and not sys.argv[1:]:
+        print("== roofline (from results/dryrun) ==")
+        try:
+            from benchmarks import roofline
+            sys.argv = ["roofline", "--dir", "results/dryrun"]
+            roofline.main()
+        except Exception as e:  # noqa: BLE001
+            print(f"roofline skipped: {e}")
+
+
+if __name__ == "__main__":
+    main()

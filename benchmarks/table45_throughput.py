@@ -1,0 +1,67 @@
+"""Paper Tables 4/5: ResNet34/18 throughput (inf/s) under different
+compression schemes at 1x/2x/4x memory bandwidth on ZC706 constants —
+reproduced with the §5 analytical model.
+
+Schemes: vanilla baseline, Taylor-pruned variants (channel keep ratios),
+OVSF50, OVSF25, and the combined Tay82+OVSF50/25. Paper reference points
+(ResNet18, measured): base (12.0, 23.5, 40.1); OVSF50 (19.4, 33.8, 49.9).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.hwmodel import cnn_workload as cw, perf_model as pm
+from repro.models.cnn import CNNConfig
+
+PAPER_REF = {
+    ("resnet18", "base"): (12.0, 23.5, 40.1),
+    ("resnet18", "OVSF50"): (19.4, 33.8, 49.9),
+    ("resnet18", "OVSF25"): (19.4, 34.8, 51.0),
+    ("resnet34", "base"): (8.6, 16.8, 28.7),
+    ("resnet34", "OVSF50"): (18.1, 21.8, 31.1),
+    ("resnet34", "OVSF25"): (18.4, 27.3, 33.5),
+}
+
+SCHEMES = [
+    ("base", dict(ovsf_enable=False, block_rhos=(1.0,) * 4), None),
+    ("Tay82", dict(ovsf_enable=False, block_rhos=(1.0,) * 4), 0.905),  # ~82% params ~ .905 ch
+    ("Tay72", dict(ovsf_enable=False, block_rhos=(1.0,) * 4), 0.85),
+    ("Tay56", dict(ovsf_enable=False, block_rhos=(1.0,) * 4), 0.75),
+    ("OVSF50", dict(ovsf_enable=True, block_rhos=(1.0, 0.5, 0.5, 0.5)), None),
+    ("OVSF25", dict(ovsf_enable=True, block_rhos=(1.0, 0.4, 0.25, 0.125)), None),
+    ("Tay82+OVSF50", dict(ovsf_enable=True,
+                          block_rhos=(1.0, 0.5, 0.5, 0.5)), 0.905),
+]
+
+
+def run(print_fn=print, depths=("resnet18", "resnet34")) -> list[dict]:
+    rows = []
+    for depth in depths:
+        for name, ckw, keep in SCHEMES:
+            cfg = CNNConfig(name=depth, depth=depth, **ckw)
+            layers = cw.cnn_gemm_layers(cfg, batch=1)
+            if keep:
+                layers = cw.pruned_variant(layers, keep)
+                if ckw["ovsf_enable"]:
+                    layers = [dataclasses.replace(
+                        l, ovsf=cfg.block_rhos != (1.0,) * 4 and l.d_in > 256,
+                        rho=0.5 if l.d_in > 256 else 1.0, seg=16,
+                        exec_path="fused") for l in layers]
+            infs = []
+            for mult in (1.0, 2.0, 4.0):
+                hw = dataclasses.replace(cw.ZC706, hbm_bw=1.1e9 * mult)
+                infs.append(1.0 / pm.model_timing(layers, hw).total_s)
+            ref = PAPER_REF.get((depth, name))
+            rows.append(dict(depth=depth, scheme=name, inf_s=infs, paper=ref))
+            ref_s = (" paper=" + "/".join(f"{r:.1f}" for r in ref)) if ref else ""
+            print_fn(f"table45,{depth},{name},"
+                     + "/".join(f"{i:.1f}" for i in infs) + ref_s)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+"""Paper Table 6: SqueezeNet on ZU7EV at 1x/2x/4x/12x bandwidth.
+
+Paper reference (inf/s): base (72.9, 145.2, 290.4, 687.4),
+OVSF50 (129.8, 252.9, 452.1, 792.1), OVSF25 (129.8, 252.9, 456.8, 800.6).
+Expected structure: large OVSF gains at constrained bandwidth (+78% at 1x),
+shrinking to ~15% at 12x where compute dominates.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.hwmodel import cnn_workload as cw, perf_model as pm
+from repro.models.cnn import CNNConfig
+
+PAPER = {
+    "base": (72.9, 145.2, 290.4, 687.4),
+    "OVSF50": (129.8, 252.9, 452.1, 792.1),
+    "OVSF25": (129.8, 252.9, 456.8, 800.6),
+}
+
+
+def run(print_fn=print) -> list[dict]:
+    rows = []
+    schemes = [
+        ("base", dict(ovsf_enable=False, block_rhos=(1.0,) * 4)),
+        ("OVSF50", dict(ovsf_enable=True, block_rhos=(1.0, 0.5, 0.5, 0.5))),
+        ("OVSF25", dict(ovsf_enable=True,
+                        block_rhos=(1.0, 0.4, 0.25, 0.125))),
+    ]
+    for name, ckw in schemes:
+        cfg = CNNConfig(name="squeezenet1_1", depth="squeezenet", **ckw)
+        layers = cw.cnn_gemm_layers(cfg, batch=1)
+        infs = []
+        for mult in (1.0, 2.0, 4.0, 12.0):
+            hw = dataclasses.replace(cw.ZU7EV, hbm_bw=1.1e9 * mult)
+            infs.append(1.0 / pm.model_timing(layers, hw).total_s)
+        rows.append(dict(scheme=name, inf_s=infs, paper=PAPER[name]))
+        print_fn(f"table6,squeezenet,{name},"
+                 + "/".join(f"{i:.0f}" for i in infs)
+                 + " paper=" + "/".join(f"{p:.0f}" for p in PAPER[name]))
+    base = rows[0]["inf_s"]
+    o50 = rows[1]["inf_s"]
+    gains = [o / b for o, b in zip(o50, base)]
+    print_fn("table6,gain_OVSF50_over_base,"
+             + "/".join(f"{g:.2f}x" for g in gains)
+             + " paper=1.78x/1.74x/1.56x/1.15x")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

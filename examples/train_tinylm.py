@@ -1,0 +1,81 @@
+"""End-to-end training driver: a ~100M-param TinyLlama-family OVSF model
+trained for a few hundred steps on the synthetic pipeline, under the
+fault-tolerant supervisor (periodic async checkpoints; restart-safe).
+
+  PYTHONPATH=src python examples/train_tinylm.py [--steps 300] [--params-check]
+
+A mid-run failure is injected once (--inject-failure, default on) to
+demonstrate checkpoint/restart recovery; the loss curve continues exactly
+where it left off because the data stream is a pure function of the step.
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import OVSFConfig
+from repro.data.synthetic import TokenStream
+from repro.models import registry as R
+from repro.runtime import supervisor
+from repro.train import optim, steps
+
+
+def build_cfg():
+    # ~100M-param member of the tinyllama family (reduced width/depth)
+    return get_config("tinyllama_1_1b").replace(
+        name="tinyllama_100m",
+        n_layers=8, d_model=768, n_heads=12, n_kv_heads=4, head_dim=64,
+        d_ff=2048, vocab=32000, dtype="float32", remat=False,
+        ovsf=OVSFConfig(enable=True, rho=0.5, min_dim=256,
+                        exec_path="spectral"),
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt", default="/tmp/repro_tinylm_ckpt")
+    ap.add_argument("--inject-failure", action="store_true", default=True)
+    ap.add_argument("--no-inject-failure", dest="inject_failure",
+                    action="store_false")
+    args = ap.parse_args()
+
+    cfg = build_cfg()
+    key = jax.random.PRNGKey(0)
+    state = steps.train_state_init(key, cfg)
+    n = R.param_count(state["params"])
+    print(f"[train_tinylm] {cfg.name}: {n/1e6:.1f}M params "
+          f"(OVSF rho=0.5 spectral)")
+
+    ocfg = optim.OptConfig(lr=6e-4, warmup_steps=20, total_steps=args.steps)
+    step = jax.jit(steps.make_train_step(cfg, ocfg), donate_argnums=(0,))
+    stream = TokenStream(cfg.vocab, args.seq, args.batch, seed=1)
+
+    boom = {"armed": args.inject_failure}
+
+    def injector(s):
+        if s == args.steps // 2 and boom["armed"]:
+            boom["armed"] = False
+            raise RuntimeError("injected mid-run failure (demo)")
+
+    scfg = supervisor.SupervisorConfig(ckpt_dir=args.ckpt, save_every=50,
+                                       log_every=25)
+    state, rep = supervisor.run(step, state, stream.batch_at, args.steps,
+                                scfg, failure_injector=injector)
+    first = np.mean(rep.losses[:10])
+    last = np.mean(rep.losses[-10:])
+    print(f"[train_tinylm] done: {rep.steps_run} steps, "
+          f"{rep.failures} failure(s), {rep.restores} restore(s); "
+          f"loss {first:.3f} -> {last:.3f}")
+    assert last < first, "loss did not improve"
+
+
+if __name__ == "__main__":
+    main()

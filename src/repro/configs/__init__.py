@@ -1,0 +1,5 @@
+"""Arch configs. ``get_config(name)`` loads CONFIG from the module."""
+from repro.configs.base import (ARCHS, PAPER_ARCHS, SHAPES, ModelConfig,
+                                OVSFConfig, ShapeConfig, get_config,
+                                get_smoke_config, input_specs,
+                                shape_applicable, smoke_variant)

@@ -1,0 +1,226 @@
+"""Config dataclasses, input-shape sets, and the arch registry.
+
+Every assigned architecture is a ``ModelConfig`` in its own module under
+``repro.configs``; reduced smoke variants derive from the full config via
+``smoke_variant``. Input shapes return ShapeDtypeStructs only (no allocation)
+so full-size configs are exercised exclusively through ``.lower().compile()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# OVSF (paper technique) configuration
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class OVSFConfig:
+    enable: bool = False
+    rho: float = 0.5                      # default OVSF ratio
+    # per weight-type overrides, e.g. (("mlp_down", 0.25), ("attn_o", 1.0)).
+    # (Transformer stacks are layer-homogeneous so ratios are per weight-type;
+    #  the CNN models keep the paper's per-layer ratios.)
+    rho_overrides: tuple[tuple[str, float], ...] = ()
+    strategy: str = "iterative"           # sequential | iterative (paper §6.1)
+    exec_path: str = "materialize"        # materialize | fused | spectral
+    # Code segment length L0. 16 = the paper's implemented formulation
+    # (codes of length K*K=16 per channel pair, Alg. 1 / Eq. 4): exact rho
+    # compression, rho*L0 generation MACs per weight. 0 = monolithic
+    # next_pow2(d_in) codes (Fig. 1's general form).
+    seg_len: int = 16
+    min_dim: int = 512                    # skip matrices smaller than this
+    targets: tuple[str, ...] = ("attn", "mlp", "expert")
+    alpha_dtype: str = ""                 # reserved (int8 alphas); not wired yet
+
+    def rho_for(self, name: str) -> float:
+        for pat, r in self.rho_overrides:
+            if pat in name:
+                return r
+        return self.rho
+
+
+# ---------------------------------------------------------------------------
+# Model configuration (one parametric stack covers all assigned families)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0           # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    mlp_gated: bool = True      # SwiGLU; False -> classic 2-matrix GELU MLP
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    # --- SSM (mamba) ---
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64      # mamba2 head size
+    ssm_chunk: int = 64         # chunked-scan chunk length
+    mamba_version: int = 1
+    # --- hybrid (zamba2-style shared attention) ---
+    attn_every: int = 0         # apply the shared attn block every k SSM blocks
+    # --- encoder-decoder (whisper; frontend is a stub per assignment) ---
+    encoder_layers: int = 0
+    encoder_seq: int = 1500     # whisper 30s frame count
+    # --- VLM (llava; anyres frontend is a stub per assignment) ---
+    vlm_image_tokens: int = 0   # leading positions fed by precomputed embeds
+    # --- numerics / execution ---
+    dtype: str = "bfloat16"
+    remat: bool = True
+    kv_cache_dtype: str = ""    # "" -> dtype; "int8" is a beyond-paper opt
+    flash_decode_seq_shard: bool = True   # SP: shard decode KV seq over model axis
+    fsdp: bool = True           # shard params over 'data'; False replicates
+                                # (decode: kills per-step weight all-gathers)
+    ovsf: OVSFConfig = dataclasses.field(default_factory=OVSFConfig)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def act_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic sequence handling (SSM/hybrid) per the assignment."""
+        return self.family in ("ssm", "hybrid")
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assignment block: 4 shapes per LM arch)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                   # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Whether an (arch x shape) cell is lowerable, and why not if not."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, ("pure full-attention arch: 500k dense-KV decode is "
+                       "quadratic-memory; skipped per assignment (see DESIGN.md)")
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+    train  -> {"tokens" [, "frames" | "image_embeds"]}
+    prefill-> same as train (producing logits + cache)
+    decode -> {"tokens": (B, 1)} (cache specs come from serving.cache)
+    """
+    B, S = shape.global_batch, shape.seq_len
+    f32 = jnp.dtype(cfg.dtype)
+    i32 = jnp.int32
+    sd = jax.ShapeDtypeStruct
+    if shape.kind == "decode":
+        specs = {"tokens": sd((B, 1), i32)}
+    else:
+        specs = {"tokens": sd((B, S), i32)}
+    if cfg.family == "encdec" and shape.kind != "decode":
+        specs["frames"] = sd((B, cfg.encoder_seq, cfg.d_model), f32)
+    if cfg.family == "vlm" and shape.kind != "decode":
+        n_img = min(cfg.vlm_image_tokens or S // 4, S // 2)
+        specs["image_embeds"] = sd((B, n_img, cfg.d_model), f32)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+ARCHS = (
+    "qwen1_5_32b", "qwen2_5_14b", "tinyllama_1_1b", "starcoder2_15b",
+    "zamba2_1_2b", "kimi_k2_1t_a32b", "olmoe_1b_7b", "whisper_tiny",
+    "falcon_mamba_7b", "llava_next_34b",
+)
+PAPER_ARCHS = ("resnet18", "resnet34", "resnet50", "squeezenet1_1")
+
+
+def get_config(name: str) -> ModelConfig:
+    """Load ``repro.configs.<name>.CONFIG`` (dashes normalised)."""
+    mod_name = name.replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    mod_name = name.replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    if hasattr(mod, "SMOKE_CONFIG"):
+        return mod.SMOKE_CONFIG
+    return smoke_variant(mod.CONFIG)
+
+
+def smoke_variant(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """Reduced same-family config: small widths/layers/experts/vocab."""
+    kw: dict[str, Any] = dict(
+        name=cfg.name + "_smoke",
+        n_layers=min(cfg.n_layers, 2),
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=min(max(cfg.n_kv_heads, 1), 2) if cfg.n_heads else 0,
+        head_dim=32,
+        d_ff=256,
+        vocab=512,
+        dtype="float32",
+        remat=False,
+    )
+    if cfg.n_experts:
+        kw.update(n_experts=8, top_k=2, d_ff=64)
+    if cfg.ssm_state:
+        kw.update(ssm_state=8, ssm_chunk=16, ssm_head_dim=16)
+    if cfg.attn_every:
+        kw.update(attn_every=2, n_layers=4)
+    if cfg.encoder_layers:
+        kw.update(encoder_layers=2, encoder_seq=16)
+    if cfg.vlm_image_tokens:
+        kw.update(vlm_image_tokens=4)
+    if cfg.ovsf.enable:
+        kw["ovsf"] = dataclasses.replace(cfg.ovsf, min_dim=32)
+    kw.update(overrides)
+    return cfg.replace(**kw)

@@ -1,0 +1,334 @@
+"""OVSF (orthogonal variable spreading factor) code machinery — paper §2.2/2.3, §6.1.
+
+OVSF codes of length L = 2^k are the rows of the Sylvester-Hadamard matrix H_L
+(Eq. (1) of the paper).  Because H_L @ H_L.T = L * I, projecting a real vector onto
+the code set *is* the Walsh-Hadamard transform, and the L2-optimal rho*L-subset of
+codes for reconstructing a given vector is exactly the set with the largest |alpha|
+("iterative drop" in the paper's terminology; provably optimal for an orthogonal
+basis, which explains the paper's Table 3 finding that iterative >= sequential).
+
+All functions here are pure-jnp and jit/vmap friendly; the Pallas kernels in
+``repro.kernels`` are the performance path and validate against these.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Literal, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Code construction (paper Eq. (1))
+# ---------------------------------------------------------------------------
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n."""
+    if n <= 1:
+        return 1
+    return 1 << (int(n - 1).bit_length())
+
+
+def hadamard_matrix(L: int, dtype=jnp.float32) -> jnp.ndarray:
+    """Sylvester-construction Hadamard matrix H_L, rows = OVSF codes (+-1).
+
+    H[i, j] = (-1)^popcount(i & j) — closed form of the recursive Kronecker
+    construction in Eq. (1). Exactly the form the fused Pallas kernel generates
+    in-register on TPU.
+    """
+    if L & (L - 1):
+        raise ValueError(f"OVSF code length must be a power of two, got {L}")
+    i = jnp.arange(L, dtype=jnp.uint32)
+    # parity of popcount(i & j)
+    anded = i[:, None] & i[None, :]
+    par = popcount_u32(anded) & jnp.uint32(1)
+    return jnp.where(par == 0, jnp.array(1, dtype), jnp.array(-1, dtype))
+
+
+def popcount_u32(x: jnp.ndarray) -> jnp.ndarray:
+    """Branch-free popcount for uint32 arrays (usable inside Pallas kernels)."""
+    x = x.astype(jnp.uint32)
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return (x * jnp.uint32(0x01010101)) >> 24
+
+
+def ovsf_codes(L: int, rows: Optional[jnp.ndarray] = None, dtype=jnp.float32) -> jnp.ndarray:
+    """Return (len(rows), L) matrix of OVSF codes; all L codes when rows is None."""
+    H = hadamard_matrix(L, dtype=dtype)
+    if rows is None:
+        return H
+    return H[rows]
+
+
+# ---------------------------------------------------------------------------
+# Fast Walsh-Hadamard transform (reference; Pallas kernel mirrors this)
+# ---------------------------------------------------------------------------
+
+def fwht(x: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """Unnormalised fast Walsh-Hadamard transform along ``axis``.
+
+    fwht(x) == x @ H_L (H symmetric => also H_L @ x for vectors).
+    O(L log L); inverse is fwht(y)/L.
+    """
+    axis = axis % x.ndim
+    x = jnp.moveaxis(x, axis, -1)
+    L = x.shape[-1]
+    if L & (L - 1):
+        raise ValueError(f"FWHT length must be a power of two, got {L}")
+    k = int(np.log2(L))
+    shape = x.shape[:-1]
+    y = x.reshape(shape + (L,))
+    for step in range(k):
+        h = 1 << step
+        y = y.reshape(shape + (L // (2 * h), 2, h))
+        a = y[..., 0, :]
+        b = y[..., 1, :]
+        y = jnp.stack([a + b, a - b], axis=-2)
+    y = y.reshape(shape + (L,))
+    return jnp.moveaxis(y, -1, axis)
+
+
+def ifwht(y: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """Inverse FWHT (H_L^-1 = H_L / L)."""
+    L = y.shape[axis % y.ndim]
+    return fwht(y, axis=axis) / L
+
+
+# ---------------------------------------------------------------------------
+# Alpha regression + basis selection (paper §6.1)
+# ---------------------------------------------------------------------------
+
+BasisStrategy = Literal["sequential", "iterative"]
+
+
+def regress_alphas(w: jnp.ndarray, L: Optional[int] = None) -> jnp.ndarray:
+    """Project weight vectors onto the full OVSF basis.
+
+    w: (..., d) real vectors. Zero-padded to L (default next_pow2(d)) — the
+    "crop" extraction of §6.1 in reverse. Returns (..., L) coefficients alpha
+    such that w == crop_d(alpha @ H_L) exactly (rho=1 reconstruction is exact).
+    """
+    d = w.shape[-1]
+    L = L or next_pow2(d)
+    if d > L:
+        raise ValueError(f"vector dim {d} exceeds code length {L}")
+    pad = [(0, 0)] * (w.ndim - 1) + [(0, L - d)]
+    wp = jnp.pad(w, pad)
+    # alpha = w_pad @ H / L  (H symmetric, orthogonal with H@H = L I)
+    return fwht(wp, axis=-1) / L
+
+
+def select_basis(
+    alphas: jnp.ndarray,
+    rho: float,
+    strategy: BasisStrategy = "iterative",
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Pick round(rho*L) codes per paper §6.1.
+
+    alphas: (..., L) full coefficients (shared leading dims = independent filters).
+    Returns (idx, kept) where idx: (n_keep,) int32 code indices (shared across the
+    batch so the hardware generator schedule is uniform — matches the paper, where
+    M/rho are per-layer, not per-filter) and kept: (..., n_keep) coefficients.
+
+    - "sequential": first n_keep codes.
+    - "iterative":  drop smallest aggregate |alpha| codes (L2-optimal per-layer).
+    """
+    L = alphas.shape[-1]
+    n_keep = max(1, int(round(rho * L)))
+    if strategy == "sequential":
+        idx = jnp.arange(n_keep, dtype=jnp.int32)
+    elif strategy == "iterative":
+        # aggregate importance of each code across all filters in the layer
+        flat = alphas.reshape(-1, L)
+        score = jnp.sum(flat * flat, axis=0)
+        idx = jnp.sort(jax.lax.top_k(score, n_keep)[1]).astype(jnp.int32)
+    else:
+        raise ValueError(f"unknown basis strategy: {strategy}")
+    kept = jnp.take(alphas, idx, axis=-1)
+    return idx, kept
+
+
+def reconstruct(
+    kept: jnp.ndarray,
+    idx: jnp.ndarray,
+    d: int,
+    L: Optional[int] = None,
+) -> jnp.ndarray:
+    """Rebuild (..., d) weight vectors from kept coefficients (reference path).
+
+    Scatter kept alphas into the length-L spectrum then inverse-transform; crop
+    to d (paper's "crop" extraction). Equivalent to kept @ H[idx, :][:, :d].
+    """
+    L = L or next_pow2(d)
+    full = jnp.zeros(kept.shape[:-1] + (L,), kept.dtype)
+    full = full.at[..., idx].set(kept)
+    w = fwht(full, axis=-1)  # alpha @ H (H symmetric)
+    return w[..., :d]
+
+
+def reconstruct_matmul(kept: jnp.ndarray, idx: jnp.ndarray, d: int,
+                       L: Optional[int] = None) -> jnp.ndarray:
+    """Reconstruction via explicit basis matmul — mirrors the MXU kernel path."""
+    L = L or next_pow2(d)
+    S = hadamard_matrix(L, dtype=kept.dtype)[idx, :d]  # (n_keep, d)
+    return kept @ S
+
+
+# ---------------------------------------------------------------------------
+# 3x3-from-4x4 extraction (paper §6.1, Table 3) — for the CNN configs
+# ---------------------------------------------------------------------------
+
+def extract_kxk(w4: jnp.ndarray, k: int, method: Literal["crop", "adaptive"] = "crop"
+                ) -> jnp.ndarray:
+    """Extract a k×k spatial filter from a K0×K0 (power-of-two) OVSF filter.
+
+    w4: (..., K0, K0). "crop" takes the top-left k×k window; "adaptive" is the
+    average-pool mapping the paper compares against (Table 3).
+    """
+    K0 = w4.shape[-1]
+    if method == "crop":
+        return w4[..., :k, :k]
+    if method == "adaptive":
+        # adaptive average pooling K0->k (torch.nn.AdaptiveAvgPool2d semantics)
+        def pool_axis(x, axis):
+            starts = (np.arange(k) * K0) // k
+            ends = ((np.arange(k) + 1) * K0 + k - 1) // k
+            slabs = [jnp.mean(jnp.take(x, jnp.arange(s, e), axis=axis), axis=axis)
+                     for s, e in zip(starts, ends)]
+            return jnp.stack(slabs, axis=axis)
+        return pool_axis(pool_axis(w4, -1), -2)
+    raise ValueError(f"unknown extraction method: {method}")
+
+
+# ---------------------------------------------------------------------------
+# OVSF layer parameter container
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class OVSFSpec:
+    """Static description of one OVSF-compressed weight matrix.
+
+    The dense weight is (d_in, d_out). Two formulations:
+
+    seg == 0 (monolithic, Fig. 1 of the paper): each column is spanned by
+      codes of length L = next_pow2(d_in); alphas (n_keep, d_out).
+
+    seg == L0 > 0 (segmented — the paper's *implemented* formulation: Alg. 1
+      and Eq. (4) use codes of length K*K per (cin, cout) pair, i.e.
+      alpha count Nin*Nout*ceil(rho*K^2)): each length-L0 segment of a column
+      is spanned by L0 codes; keep n_keep = round(rho*L0) per segment.
+      Storage is exactly rho * dense (no power-of-two padding tax) and
+      generation costs rho*L0 MACs per weight element (8 at L0=16, rho=0.5),
+      which is what lets the FPGA hide generation behind the memory wall.
+      alphas (n_seg*n_keep, d_out); idx (n_seg, n_keep) int32.
+    """
+    d_in: int
+    d_out: int
+    rho: float
+    strategy: BasisStrategy = "iterative"
+    seg: int = 0
+
+    @property
+    def L(self) -> int:
+        return self.seg if self.seg else next_pow2(self.d_in)
+
+    @property
+    def n_seg(self) -> int:
+        if not self.seg:
+            return 1
+        if self.d_in % self.seg:
+            raise ValueError(f"d_in {self.d_in} not divisible by seg {self.seg}")
+        return self.d_in // self.seg
+
+    @property
+    def n_keep(self) -> int:
+        return max(1, int(round(self.rho * self.L)))
+
+    @property
+    def j_total(self) -> int:
+        return self.n_seg * self.n_keep
+
+    @property
+    def dense_params(self) -> int:
+        return self.d_in * self.d_out
+
+    @property
+    def stored_params(self) -> int:
+        return self.j_total * self.d_out
+
+    @property
+    def compression(self) -> float:
+        return self.stored_params / self.dense_params
+
+
+def compress_matrix(w: jnp.ndarray, spec: OVSFSpec) -> dict:
+    """Dense (d_in, d_out) weight -> OVSF params.
+
+    Monolithic: {alphas (n_keep, d_out), idx (n_keep,)}.
+    Segmented:  {alphas (n_seg*n_keep, d_out), idx (n_seg, n_keep)} — per-
+    segment iterative selection, exactly Alg. 1's per-layer alpha layout.
+    """
+    assert w.shape == (spec.d_in, spec.d_out), (w.shape, spec)
+    if not spec.seg:
+        al = regress_alphas(w.T, L=spec.L)          # (d_out, L)
+        idx, kept = select_basis(al, spec.rho, spec.strategy)
+        if kept.shape[-1] != spec.n_keep:           # rho rounding guard
+            idx = idx[: spec.n_keep]
+            kept = kept[..., : spec.n_keep]
+        return {"alphas": kept.T.astype(w.dtype), "idx": idx}
+    L0, ns, nk = spec.seg, spec.n_seg, spec.n_keep
+    ws = w.T.reshape(spec.d_out, ns, L0)            # (d_out, ns, L0)
+    al = fwht(ws, axis=-1) / L0                     # exact per-segment alphas
+    idxs, kepts = [], []
+    for s in range(ns):
+        idx, kept = select_basis(al[:, s, :], spec.rho, spec.strategy)
+        idxs.append(idx[: nk])
+        kepts.append(kept[..., : nk])               # (d_out, nk)
+    idx = jnp.stack(idxs)                           # (ns, nk)
+    alphas = jnp.stack(kepts, axis=1)               # (d_out, ns, nk)
+    return {"alphas": alphas.reshape(spec.d_out, ns * nk).T.astype(w.dtype),
+            "idx": idx}
+
+
+def decompress_matrix(params: dict, spec: OVSFSpec) -> jnp.ndarray:
+    """OVSF params -> dense (d_in, d_out) weight (pure-jnp reference path)."""
+    if not spec.seg:
+        w_t = reconstruct(params["alphas"].T, params["idx"], spec.d_in,
+                          L=spec.L)
+        return w_t.T
+    L0, ns, nk = spec.seg, spec.n_seg, spec.n_keep
+    al = params["alphas"].T.reshape(spec.d_out, ns, nk)
+    idx = params["idx"]                              # (ns, nk)
+    full = jnp.zeros((spec.d_out, ns, L0), al.dtype)
+    full = jax.vmap(lambda f, a, i: f.at[:, i].set(a),
+                    in_axes=(1, 1, 0), out_axes=1)(full, al, idx)
+    w = fwht(full, axis=-1)                          # (d_out, ns, L0)
+    return w.reshape(spec.d_out, spec.d_in).T
+
+
+def init_ovsf(key: jax.Array, spec: OVSFSpec, scale: Optional[float] = None,
+              dtype=jnp.float32) -> dict:
+    """Random init directly in alpha space.
+
+    For H with +-1 entries, each weight entry sums n_keep independent +-alpha
+    terms: Var(w_ij) = n_keep * Var(alpha). To get fan-in init Var(w) = 1/d_in
+    we draw alpha ~ N(0, 1/(d_in * n_keep)).
+    """
+    var_w = (scale if scale is not None else 1.0) / spec.d_in
+    std_a = float(np.sqrt(var_w / spec.n_keep))
+    alphas = jax.random.normal(key, (spec.j_total, spec.d_out), dtype) * std_a
+    if spec.strategy == "sequential":
+        idx1 = jnp.arange(spec.n_keep, dtype=jnp.int32)
+    else:
+        # fixed evenly-spaced schedule for from-scratch init (refined on convert)
+        idx1 = jnp.asarray(
+            np.sort(np.linspace(0, spec.L - 1, spec.n_keep).astype(np.int32)))
+    if not spec.seg:
+        return {"alphas": alphas, "idx": idx1}
+    return {"alphas": alphas,
+            "idx": jnp.tile(idx1[None, :], (spec.n_seg, 1))}

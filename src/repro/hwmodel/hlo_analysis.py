@@ -1,0 +1,385 @@
+"""Static analysis of compiled (post-SPMD) HLO text: loop-corrected FLOPs,
+HBM traffic, and collective link bytes per chip.
+
+Why not ``compiled.cost_analysis()`` alone? XLA's analysis does NOT multiply
+``while`` bodies by their trip count, so a 61-layer scanned stack reports
+1-layer FLOPs. This module parses the HLO text into computations, recovers
+loop trip counts (``backend_config known_trip_count``, falling back to the
+loop-condition constant), propagates multipliers through the control-flow
+graph, and accumulates per-device:
+
+ - FLOPs: 2 * prod(result) * prod(contracting dims) per ``dot`` (operand
+   shapes resolved through a per-computation symbol table); elementwise ops
+   count 1 flop/element (they are bandwidth-dominated; the MXU roofline cares
+   about dots).
+ - HBM bytes: operand+result bytes of compute ops at fusion granularity (the
+   XLA memory model: fusion boundaries are materialisation boundaries).
+   Fusion parameters that are only dynamic-slice'd inside count the *slice*
+   bytes (the per-layer weight read of a scanned stack), and
+   dynamic-update-slice targets count the *update* bytes (in-place KV write).
+ - Collective link-bytes per chip, ring model over the replica group size g:
+     all-reduce 2(g-1)/g * B | all-gather/reduce-scatter/all-to-all (g-1)/g * B
+     collective-permute B      (B = largest shape on the op line)
+
+The SPMD module is the per-device program, so everything is per-device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Optional
+
+_DTYPES = ("pred", "s4", "s8", "s16", "s32", "s64", "u4", "u8", "u16", "u32",
+           "u64", "bf16", "f16", "f32", "f64", "c64", "c128", "f8e4m3fn",
+           "f8e5m2")
+_DTYPE_BYTES = {"pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+                "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+                "c64": 8, "c128": 16}
+_SHAPE_RE = re.compile(r"\b(%s)\[([0-9,]*)\]" % "|".join(_DTYPES))
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_OPCODE_RE = re.compile(r"^(?:\([^=]*?\)|[\w\[\],{}]+)\s+([\w\-]+)\(")
+_OPERANDS_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[":{ ]+n["\s:]+"?(\d+)')
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_NO_TRAFFIC = {"parameter", "tuple", "get-tuple-element", "bitcast",
+               "constant", "after-all", "iota", "partition-id", "replica-id",
+               "while", "conditional", "call", "opt-barrier", "domain",
+               "add-dependency"}
+_FLOP_FREE = _NO_TRAFFIC | {"copy", "reshape", "broadcast", "transpose",
+                            "slice", "dynamic-slice", "dynamic-update-slice",
+                            "concatenate", "pad", "reverse", "gather",
+                            "scatter", "convert", "reduce", "sort", "rng",
+                            "custom-call", "fusion", "select-and-scatter"}
+
+
+def _nbytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _nelems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class HLOStats:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0      # per-chip link bytes (ring model)
+    collective_raw_bytes: float = 0.0  # largest-shape sum (spec convention)
+    collective_count: float = 0.0
+    by_collective: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    loops: dict = dataclasses.field(default_factory=dict)
+
+    def merged(self) -> dict:
+        return {"flops": self.flops, "hbm_bytes": self.hbm_bytes,
+                "collective_bytes": self.collective_bytes,
+                "collective_raw_bytes": self.collective_raw_bytes,
+                "collective_count": self.collective_count,
+                "by_collective": dict(self.by_collective),
+                "loops": self.loops}
+
+
+class _Op:
+    __slots__ = ("name", "opcode", "shapes", "operands", "rest", "is_root")
+
+    def __init__(self, name, opcode, shapes, operands, rest, is_root=False):
+        self.name = name
+        self.opcode = opcode
+        self.shapes = shapes          # [(dtype, dims), ...] on the line
+        self.operands = operands      # [%names]
+        self.rest = rest
+        self.is_root = is_root
+
+
+def _parse(text: str) -> dict[str, list[_Op]]:
+    comps: dict[str, list[_Op]] = {}
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        s = line.strip()
+        if cur is None:
+            m = re.match(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(", s)
+            if m and s.endswith("{"):
+                cur = m.group(1)
+                comps[cur] = []
+            continue
+        if s.startswith("}"):
+            cur = None
+            continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        rest = re.sub(r"/\*.*?\*/", "", rest)   # strip /*index=N*/ comments
+        om = _OPCODE_RE.match(rest)
+        if om:
+            opcode = om.group(1)
+        else:
+            parts = rest.split("(")[0].split()
+            opcode = parts[-1] if parts else "unknown"
+        # operands: %names inside the first (...) call parens
+        call = rest[rest.find("("):]
+        call = call.split("),")[0] if ")," in call else call
+        operands = _OPERANDS_RE.findall(call)
+        shapes = _SHAPE_RE.findall(rest)
+        comps[cur].append(_Op(name, opcode, shapes, operands, rest,
+                              is_root="ROOT" in line.split("=")[0]))
+    return comps
+
+
+def _result_bytes(op: _Op) -> int:
+    if not op.shapes:
+        return 0
+    # tuple results: sum every shape before the opcode; approximation: first
+    return _nbytes(*op.shapes[0])
+
+
+def _param_index(op: _Op) -> int:
+    m = re.search(r"parameter\((\d+)\)", op.rest)
+    return int(m.group(1)) if m else 1 << 30
+
+
+def _fusion_io_bytes(op: _Op, symtab: dict, comps: dict) -> int:
+    """Bytes moved by a fusion: result + per-operand actually-touched bytes.
+
+    - operands that are only dynamic-slice'd inside count the slice size
+      (per-layer weight read of a scanned stack);
+    - a fusion whose root is a dynamic-update-slice of a parameter is an
+      in-place buffer update: both the 'result' and the aliased input count
+      as the update size, not the full buffer (KV-cache append).
+    """
+    called = None
+    mc = re.search(r"calls=%?([\w.\-]+)", op.rest)
+    if mc:
+        called = comps.get(mc.group(1))
+    if called is None:
+        return (_result_bytes(op)
+                + sum(_op_bytes_lookup(o, symtab) for o in op.operands))
+    sub_syms = {o.name: o for o in called}
+    params = sorted([o for o in called if o.opcode == "parameter"],
+                    key=_param_index)
+
+    def trace(name, hops=6):
+        """Follow dtype/layout-only ops back to the producing op. The CPU
+        backend's float-normalisation wraps bf16 dynamic-update-slices in
+        convert(f32) chains that a TPU target would not emit; tracing through
+        them recovers the in-place-update semantics."""
+        o = sub_syms.get(name)
+        for _ in range(hops):
+            if o is None or o.opcode not in ("convert", "bitcast", "copy",
+                                             "reshape"):
+                break
+            o = sub_syms.get(o.operands[0]) if o.operands else None
+        return o
+
+    root = next((o for o in called if o.is_root),
+                called[-1] if called else None)
+    root_real = trace(root.name) if root is not None else None
+    if root_real is None:
+        root_real = root
+
+    def _update_bytes(dus: _Op) -> int:
+        if len(dus.operands) > 1 and dus.operands[1] in sub_syms:
+            return _result_bytes(sub_syms[dus.operands[1]])
+        return _result_bytes(dus)
+
+    dus_root = (root_real is not None
+                and root_real.opcode == "dynamic-update-slice")
+    total = _update_bytes(root_real) if dus_root else _result_bytes(op)
+    aliased_param = None
+    if dus_root and root_real.operands:
+        tgt = trace(root_real.operands[0])
+        if tgt is not None and tgt.opcode == "parameter":
+            aliased_param = tgt.name
+        else:
+            aliased_param = root_real.operands[0]
+
+    for i, operand in enumerate(op.operands):
+        full = _op_bytes_lookup(operand, symtab)
+        if i >= len(params):
+            total += full
+            continue
+        pname = params[i].name
+        if dus_root and pname == aliased_param:
+            total += _update_bytes(root_real)  # in-place: touched region only
+            continue
+        consumers = [o for o in called if pname in o.operands]
+        if consumers and all(o.opcode in ("dynamic-slice", "slice", "gather")
+                             for o in consumers):
+            total += sum(_result_bytes(o) for o in consumers)
+        elif consumers and all(o.opcode == "dynamic-update-slice"
+                               and o.operands and o.operands[0] == pname
+                               for o in consumers):
+            total += sum(_update_bytes(o) for o in consumers)
+        else:
+            total += full
+    return total
+
+
+def _op_bytes_lookup(name: str, symtab: dict) -> int:
+    op = symtab.get(name)
+    return _result_bytes(op) if op is not None else 0
+
+
+def _dot_flops(op: _Op, symtab: dict) -> float:
+    if not op.shapes:
+        return 0.0
+    res = _nelems(op.shapes[0][1])
+    mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
+    contract = 1
+    if mc and op.operands:
+        lhs = symtab.get(op.operands[0])
+        if lhs is not None and lhs.shapes:
+            dims = [int(d) for d in lhs.shapes[0][1].split(",") if d]
+            for i in (int(x) for x in mc.group(1).split(",") if x):
+                if i < len(dims):
+                    contract *= dims[i]
+    return 2.0 * res * contract
+
+
+def analyze_hlo(text: str, *, n_devices: int = 1) -> HLOStats:
+    comps = _parse(text)
+    entry = None
+    m = re.search(r"^ENTRY\s+%([\w.\-]+)", text, re.M)
+    if m:
+        entry = m.group(1)
+    stats = HLOStats()
+
+    # --- control-flow multipliers -----------------------------------------
+    # exec_mult: how many times a computation's ops run (while bodies x trip,
+    # fusion/call/reduce bodies inherit callers). mem_mult: same but only
+    # control-flow edges (fusion internals are not HBM traffic).
+    exec_edges: dict[str, list[tuple[str, float]]] = defaultdict(list)
+    mem_edges: dict[str, list[tuple[str, float]]] = defaultdict(list)
+    for cname, ops in comps.items():
+        for op in ops:
+            if op.opcode == "while":
+                trip = 1
+                mt = _TRIP_RE.search(op.rest)
+                if mt:
+                    trip = int(mt.group(1))
+                else:
+                    mc = re.search(r"condition=%?([\w.\-]+)", op.rest)
+                    if mc and mc.group(1) in comps:
+                        for o in comps[mc.group(1)]:
+                            for c in re.finditer(r"constant\((\d+)\)", o.rest):
+                                trip = max(trip, int(c.group(1)))
+                mb = re.search(r"body=%?([\w.\-]+)", op.rest)
+                if mb and mb.group(1) in comps:
+                    exec_edges[cname].append((mb.group(1), float(trip)))
+                    mem_edges[cname].append((mb.group(1), float(trip)))
+                    stats.loops[mb.group(1)] = trip
+            elif op.opcode == "conditional":
+                for mb in re.finditer(r"(?:branch_computations=\{([^}]*)\}|"
+                                      r"(?:true|false)_computation=%?([\w.\-]+))",
+                                      op.rest):
+                    names = (mb.group(1) or mb.group(2) or "")
+                    for nm in re.findall(r"%?([\w.\-]+)", names):
+                        if nm in comps:
+                            exec_edges[cname].append((nm, 1.0))
+                            mem_edges[cname].append((nm, 1.0))
+            else:
+                for mc in re.finditer(r"(?:calls|to_apply)=%?([\w.\-]+)",
+                                      op.rest):
+                    if mc.group(1) in comps:
+                        exec_edges[cname].append((mc.group(1), 1.0))
+
+    def propagate(edges) -> dict[str, float]:
+        mult: dict[str, float] = defaultdict(float)
+        if entry in comps:
+            mult[entry] = 1.0
+        else:
+            for nm in comps:
+                mult[nm] = 1.0
+        # topological-ish fixpoint (call graph is a DAG)
+        for _ in range(64):
+            new: dict[str, float] = defaultdict(float)
+            if entry in comps:
+                new[entry] = 1.0
+            else:
+                for nm in comps:
+                    new[nm] = 1.0
+            for src, outs in edges.items():
+                b = new.get(src, mult.get(src, 0.0))
+                b = mult.get(src, 0.0)
+                for dst, f in outs:
+                    new[dst] += mult.get(src, 0.0) * f
+            if all(abs(new[k] - mult.get(k, 0.0)) < 1e-6 * max(new[k], 1.0)
+                   for k in new):
+                mult = new
+                break
+            mult = new
+        return mult
+
+    exec_mult = propagate(exec_edges)
+    mem_mult = propagate(mem_edges)
+
+    # --- accumulate ---------------------------------------------------------
+    for cname, ops in comps.items():
+        ke = exec_mult.get(cname, 0.0)
+        km = mem_mult.get(cname, 0.0)
+        if ke <= 0 and km <= 0:
+            continue
+        symtab = {o.name: o for o in ops}
+        for op in ops:
+            coll = next((c for c in COLLECTIVES if op.opcode == c), None)
+            if coll and km > 0:
+                g = n_devices
+                mg = _GROUPS_RE.search(op.rest)
+                if mg:
+                    g = max(int(mg.group(2)), 1)
+                sb = max((_nbytes(dt, dd) for dt, dd in op.shapes), default=0)
+                if coll == "all-reduce":
+                    link = 2.0 * (g - 1) / g * sb
+                elif coll == "collective-permute":
+                    link = float(sb)
+                else:
+                    link = (g - 1) / g * sb
+                stats.collective_bytes += km * link
+                stats.collective_raw_bytes += km * sb
+                stats.collective_count += km
+                stats.by_collective[coll] += km * link
+                stats.hbm_bytes += km * 2.0 * sb
+                continue
+
+            # FLOPs
+            if ke > 0:
+                if op.opcode == "dot":
+                    stats.flops += ke * _dot_flops(op, symtab)
+                elif op.opcode == "convolution" and op.shapes:
+                    res = _nelems(op.shapes[0][1])
+                    ker = (_nelems(op.shapes[2][1])
+                           if len(op.shapes) > 2 else 1)
+                    stats.flops += ke * 2.0 * res * ker
+                elif op.opcode not in _FLOP_FREE and op.shapes:
+                    stats.flops += ke * _nelems(op.shapes[0][1])
+
+            # HBM bytes (fusion-boundary model)
+            if km <= 0 or op.opcode in _NO_TRAFFIC:
+                continue
+            res_b = _result_bytes(op)
+            if op.opcode == "fusion":
+                stats.hbm_bytes += km * _fusion_io_bytes(op, symtab, comps)
+            elif op.opcode == "dynamic-update-slice":
+                upd = (_op_bytes_lookup(op.operands[1], symtab)
+                       if len(op.operands) > 1 else res_b)
+                stats.hbm_bytes += km * 2.0 * upd
+            elif op.opcode in ("dynamic-slice", "slice"):
+                stats.hbm_bytes += km * 2.0 * res_b
+            else:
+                in_b = sum(_op_bytes_lookup(o, symtab) for o in op.operands)
+                stats.hbm_bytes += km * (res_b + in_b)
+    return stats

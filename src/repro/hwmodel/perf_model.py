@@ -1,0 +1,245 @@
+"""The paper's analytical performance model (§5) ported to TPU v5e constants.
+
+The paper models each layer as a three-stage pipeline whose initiation
+interval is the max of: input transfer, weights *generation*, engine compute,
+output transfer (Eq. 5-8). On TPU the same decomposition holds per GEMM:
+
+  t_mem   = (activation_in + alpha/weight + activation_out bytes) / HBM_bw
+  t_wgen  = weights-generation FLOPs / peak  (0 for dense; the OVSF
+            generation matmul or FWHT for on-the-fly layers)
+  t_eng   = consumer GEMM FLOPs / peak
+
+and II = max(...). The per-layer *bound class* {IFM, OFM, W(gen), C(ompute)}
+drives the hardware-aware rho autotuning (§6.2): layers where W is NOT the
+bound can afford a higher OVSF ratio for free.
+
+This model reproduces the structure of the paper's Tables 1/4/5/6 with TPU
+numbers and is cross-checked against the dry-run HLO analysis in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, Optional
+
+import numpy as np
+
+from repro.core.ovsf import next_pow2
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    """TPU v5e-like chip (assignment constants)."""
+    peak_flops: float = 197e12        # bf16
+    hbm_bw: float = 819e9             # B/s
+    ici_bw: float = 50e9              # B/s per link
+    hbm_bytes: float = 16e9
+    vmem_bytes: float = 128 * 2**20
+    vpu_flops: float = 197e12 / 8     # non-MXU elementwise throughput
+    # Weights-generator unit. 0.0 -> generation timeshares the main unit
+    # (TPU MXU: t_gen serialises into the engine stage). > 0 -> dedicated
+    # pipelined generator at that peak (the paper's CNN-WGen vector unit,
+    # ~7.5-11% of the DSPs per Table 9), overlapping per Eq. (8).
+    wgen_flops: float = 0.0
+
+    def scaled_bw(self, factor: float) -> "HW":
+        return dataclasses.replace(self, hbm_bw=self.hbm_bw * factor)
+
+
+V5E = HW()
+
+BoundClass = Literal["IFM", "OFM", "W", "C"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmLayer:
+    """One weight application: y[M, d_out] = x[M, d_in] @ W."""
+    name: str
+    M: int                  # rows (tokens) per device
+    d_in: int
+    d_out: int
+    rho: float = 1.0        # OVSF ratio; >= 1.0 -> dense layer
+    ovsf: bool = False
+    exec_path: str = "materialize"   # materialize | fused | spectral
+    seg: int = 16           # code segment length L0 (0 = monolithic, Fig. 1)
+    dtype_bytes: int = 2
+    weight_resident: bool = False    # True if weights stay in VMEM across uses
+    # paper Eq. (6): "alpha values transferred upfront" into the on-chip
+    # Alpha buffer => no per-inference alpha traffic. True for the CNN
+    # workloads (alphas fit BRAM/VMEM, checked by the caller); False for the
+    # LM workloads where alphas stream from HBM each step.
+    alphas_resident: bool = False
+    # paper §4.1: dense weight tiles are re-transferred ceil(R/T_R) times
+    # (output-stationary engine with BRAM too small to cache them). 1 on TPU
+    # (weights read once per step); > 1 for the FPGA workloads. On-the-fly
+    # generation removes this entire term — the paper's core win.
+    weight_reread: int = 1
+
+    @property
+    def L(self) -> int:
+        """Code length: L0 for the segmented (Alg. 1) form."""
+        if self.seg and self.d_in % self.seg == 0:
+            return self.seg
+        return next_pow2(self.d_in)
+
+    @property
+    def n_keep(self) -> int:
+        return max(1, int(round(self.rho * self.L)))
+
+    @property
+    def j_total(self) -> int:
+        """Total alpha rows = stored weights rows."""
+        if self.seg and self.d_in % self.seg == 0:
+            return (self.d_in // self.seg) * self.n_keep
+        return self.n_keep
+
+
+@dataclasses.dataclass
+class LayerTiming:
+    t_mem_in: float
+    t_mem_w: float
+    t_mem_out: float
+    t_wgen: float
+    t_eng: float
+    pipelined_gen: bool = True   # False: gen timeshares the engine unit (TPU)
+
+    @property
+    def t_mem(self) -> float:
+        return self.t_mem_in + self.t_mem_w + self.t_mem_out
+
+    @property
+    def ii(self) -> float:
+        # paper Eq. (8): concurrent {input-transfer}, weight-gen, engine, out.
+        # When generation shares the compute unit it serialises into t_eng.
+        if self.pipelined_gen:
+            return max(self.t_mem_in + self.t_mem_w, self.t_wgen, self.t_eng,
+                       self.t_mem_out)
+        return max(self.t_mem_in + self.t_mem_w, self.t_wgen + self.t_eng,
+                   self.t_mem_out)
+
+    @property
+    def bound(self) -> BoundClass:
+        stages = {"IFM": self.t_mem_in + self.t_mem_w, "W": self.t_wgen,
+                  "C": self.t_eng, "OFM": self.t_mem_out}
+        return max(stages, key=stages.get)  # type: ignore[arg-type]
+
+
+def layer_timing(layer: GemmLayer, hw: HW = V5E) -> LayerTiming:
+    M, di, do = layer.M, layer.d_in, layer.d_out
+    by = layer.dtype_bytes
+    t_in = M * di * by / hw.hbm_bw
+    t_out = M * do * by / hw.hbm_bw
+    t_eng = 2.0 * M * di * do / hw.peak_flops
+    t_w = 0.0
+    t_gen = 0.0
+    pipelined = True
+    if not layer.ovsf:
+        if not layer.weight_resident:
+            t_w = layer.weight_reread * di * do * by / hw.hbm_bw
+    else:
+        J = layer.j_total                       # stored alpha rows (rho*d_in)
+        gen_macs_per_w = layer.n_keep           # rho*L0 MACs per weight elem
+        gen_peak = hw.wgen_flops or hw.peak_flops
+        pipelined = hw.wgen_flops > 0
+        if not layer.alphas_resident:
+            t_w = J * do * by / hw.hbm_bw       # alphas only cross HBM
+        if layer.exec_path == "spectral":
+            # per-seg FWHT on activations (VPU, overlaps the MXU) +
+            # rho-smaller GEMM on the MXU
+            t_gen = M * di * max(np.log2(max(layer.L, 2)), 1) / hw.vpu_flops
+            t_eng = 2.0 * M * J * do / hw.peak_flops
+            t_in = M * di * by / hw.hbm_bw      # reads x, writes/read x_hat
+            pipelined = True
+        elif layer.exec_path == "fused":
+            # per-tile S^T @ alpha (regenerated once per M-tile here)
+            t_gen = 2.0 * gen_macs_per_w * di * do / gen_peak
+        else:  # materialize: dense W round-trips HBM (generate, write, reread)
+            t_gen = 2.0 * gen_macs_per_w * di * do / gen_peak
+            t_w += 2.0 * di * do * by / hw.hbm_bw
+    return LayerTiming(t_in, t_w, t_out, t_gen, t_eng, pipelined)
+
+
+def model_layers(cfg, shape, *, n_devices: int = 256, tp: int = 16
+                 ) -> list[GemmLayer]:
+    """Expand a ModelConfig x ShapeConfig into per-device GEMM workloads.
+
+    Decode: M = batch/dp tokens; train/prefill: M = batch*seq/dp. TP divides
+    d_out (column-parallel) or d_in (row-parallel) per Megatron convention.
+    """
+    dp = max(n_devices // tp, 1)
+    if shape.kind == "decode":
+        M = max(shape.global_batch // dp, 1)
+    else:
+        M = max(shape.global_batch * shape.seq_len // dp, 1)
+    o = cfg.ovsf
+    ex = o.exec_path if o.enable else "materialize"
+
+    def mk(name, d_in, d_out, group):
+        rho = o.rho_for(name) if (o.enable and group in o.targets
+                                  and min(d_in, d_out) >= o.min_dim) else 1.0
+        seg = o.seg_len if (o.seg_len and d_in % max(o.seg_len, 1) == 0) else 0
+        return GemmLayer(name, M, d_in, d_out, rho=rho,
+                         ovsf=o.enable and rho < 1.0, exec_path=ex, seg=seg)
+
+    d, hd = cfg.d_model, cfg.hd
+    layers: list[GemmLayer] = []
+    for i in range(cfg.n_layers):
+        if cfg.n_heads:
+            layers += [
+                mk(f"L{i}/attn_q", d, cfg.n_heads * hd // tp, "attn"),
+                mk(f"L{i}/attn_k", d, max(cfg.n_kv_heads * hd // tp, hd), "attn"),
+                mk(f"L{i}/attn_v", d, max(cfg.n_kv_heads * hd // tp, hd), "attn"),
+                mk(f"L{i}/attn_o", cfg.n_heads * hd // tp, d, "attn"),
+            ]
+        if cfg.n_experts:
+            # routed experts: per token top_k experts touched; per device the
+            # expert weights read are min(E/tp, tokens*top_k) experts' worth
+            eff = min(cfg.n_experts // tp,
+                      max(M * cfg.top_k // max(cfg.n_experts // tp, 1), 1))
+            for nm in ("gate", "up"):
+                l = mk(f"L{i}/expert_{nm}", d, cfg.d_ff, "expert")
+                layers.append(dataclasses.replace(
+                    l, M=M * cfg.top_k // max(cfg.n_experts // tp, 1) or 1,
+                    name=l.name + f"x{cfg.n_experts // tp}"))
+            l = mk(f"L{i}/expert_down", cfg.d_ff, d, "expert")
+            layers.append(dataclasses.replace(
+                l, M=M * cfg.top_k // max(cfg.n_experts // tp, 1) or 1))
+        elif cfg.d_ff:
+            f = cfg.d_ff // tp
+            if cfg.mlp_gated:
+                layers.append(mk(f"L{i}/mlp_gate", d, f, "mlp"))
+            layers += [mk(f"L{i}/mlp_up", d, f, "mlp"),
+                       mk(f"L{i}/mlp_down", f, d, "mlp")]
+        if cfg.ssm_state:
+            di = cfg.d_inner // tp
+            layers += [mk(f"L{i}/ssm_in", d, 2 * di, "mlp"),
+                       mk(f"L{i}/ssm_out", di, d, "mlp")]
+    return layers
+
+
+@dataclasses.dataclass
+class ModelTiming:
+    layers: list
+    timings: list
+    total_s: float
+    bounds: dict
+
+    def bound_of(self, name: str) -> BoundClass:
+        for l, t in zip(self.layers, self.timings):
+            if l.name == name:
+                return t.bound
+        raise KeyError(name)
+
+
+def model_timing(layers: list[GemmLayer], hw: HW = V5E) -> ModelTiming:
+    ts = [layer_timing(l, hw) for l in layers]
+    bounds: dict = {}
+    for l, t in zip(layers, ts):
+        bounds[l.name] = t.bound
+    return ModelTiming(layers, ts, sum(t.ii for t in ts), bounds)
+
+
+def throughput(layers: list[GemmLayer], hw: HW = V5E,
+               tokens_per_step: float = 1.0) -> float:
+    """Steps (or inferences) per second under the II pipeline model."""
+    mt = model_timing(layers, hw)
+    return tokens_per_step / mt.total_s if mt.total_s > 0 else float("inf")

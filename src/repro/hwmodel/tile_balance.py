@@ -1,0 +1,79 @@
+"""Static tile/padding balancer — the TPU adaptation of the paper's input
+selective PEs (§4.3).
+
+The FPGA mechanism lets idle PEs steal rows when C < T_C. The MXU is a rigid
+128x128 systolic array: there is no dynamic steal, but the *objective* —
+recover utilisation lost to dim/tile mismatch — is achieved statically by
+choosing kernel block shapes (and mesh padding) that minimise
+ceil-waste. utilisation(dim, block) = dim / (ceil(dim/block) * block).
+
+The paper's Eq. (7) refined-runtime model is kept for analysis: it predicts
+the ceiling recovery an input-selective design would get, which we report
+next to the static recovery in benchmarks/table10_balance.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+
+BLOCK_MENU = (64, 128, 192, 256, 384, 512)
+
+
+def util(dim: int, block: int) -> float:
+    import math
+    return dim / (math.ceil(dim / block) * block)
+
+
+def gemm_utilisation(M: int, K: int, N: int,
+                     bm: int, bk: int, bn: int) -> float:
+    return util(M, bm) * util(K, bk) * util(N, bn)
+
+
+@dataclasses.dataclass
+class BalanceChoice:
+    bm: int
+    bk: int
+    bn: int
+    util_naive: float      # with the default 128^3 blocks
+    util_balanced: float
+
+    @property
+    def speedup(self) -> float:
+        return self.util_balanced / max(self.util_naive, 1e-9)
+
+
+def balance_blocks(M: int, K: int, N: int, *,
+                   menu: Sequence[int] = BLOCK_MENU,
+                   vmem_limit: int = 96 * 2**20,
+                   dtype_bytes: int = 2) -> BalanceChoice:
+    """Pick (bm, bk, bn) maximising utilisation under the VMEM footprint
+    bm*bk + bk*bn + bm*bn <= limit. MXU wants every block a multiple of 128
+    where the dim allows; 64 is allowed for small dims (8x128 lanes)."""
+    naive = gemm_utilisation(M, K, N, 128, 128, 128)
+    best = (128, 128, 128, naive)
+    for bm in menu:
+        for bk in menu:
+            for bn in menu:
+                fp = (bm * bk + bk * bn + bm * bn) * dtype_bytes * 2  # dbl buf
+                if fp > vmem_limit:
+                    continue
+                u = gemm_utilisation(M, K, N, bm, bk, bn)
+                if u > best[3] + 1e-12:
+                    best = (bm, bk, bn, u)
+    return BalanceChoice(best[0], best[1], best[2], naive, best[3])
+
+
+def input_selective_speedup(T_R: int, T_C: int, C: int, P: int, T_P: int
+                            ) -> float:
+    """Paper Eq. (7) vs the naive engine runtime: predicted gain of dynamic
+    work-stealing for a layer with C output columns on a T_C-wide engine."""
+    import math
+    if C >= T_C:
+        return 1.0
+    t_naive = T_R * math.ceil(P / T_P)
+    rows_stolen = max(T_R * C - (T_C - C) * (C + 1), 0)
+    t_sel = ((T_C - C) + math.ceil(rows_stolen / T_C)) * math.ceil(P / T_P)
+    return t_naive / max(t_sel, 1)

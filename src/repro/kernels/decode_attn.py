@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: flash-decoding attention for the serve_step hot loop.
+
+The §Roofline tables show decode cells are memory-bound on the KV read, and
+the §Perf census attributes much of the residual to XLA materialising
+transposed/converted copies of the cache per layer. This kernel streams K/V
+blocks HBM->VMEM once, computes the online-softmax accumulation in VMEM
+registers (no logits or transposed-K materialisation), and masks by the fill
+position — the TPU-native form of the seq-sharded decode read.
+
+q:      (B, H, hd)        one new token per sequence (GQA: H = G * Hkv)
+k, v:   (B, T, Hkv, hd)   cache buffer (bf16/f32)
+pos:    ()                fill level; positions >= pos are masked out
+out:    (B, H, hd)
+
+Grid: (B, Hkv, T/bt) — each (batch, kv-head) pair scans its sequence blocks,
+carrying (m, l, acc) in VMEM scratch (classic flash-attention recurrence).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            bt: int, nt: int, scale: float):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale       # (G, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)            # (bt, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)            # (bt, hd)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (G, bt)
+    col = t * bt + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(col < pos_ref[0], s, -1e30)
+
+    m_prev = m_ref[...]                                # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)                    # (G, 1)
+    p = jnp.exp(s - m_new)                             # (G, bt)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(t == nt - 1)
+    def _flush():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_t", "interpret"))
+def flash_decode_attn(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      pos: jnp.ndarray, *, block_t: int = 512,
+                      interpret: bool = False) -> jnp.ndarray:
+    """Single-token GQA attention over a cache buffer with fill level pos."""
+    B, H, hd = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    bt = min(block_t, T)
+    assert T % bt == 0, (T, bt)
+    nt = T // bt
+    scale = 1.0 / float(hd) ** 0.5
+    qg = q.reshape(B, Hkv, G, hd)
+    pos_arr = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, bt=bt, nt=nt, scale=scale),
+        grid=(B, Hkv, nt),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, t: (b,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, t: (b, h, 0, 0)),
+            pl.BlockSpec((1, bt, 1, hd), lambda b, h, t: (b, t, h, 0)),
+            pl.BlockSpec((1, bt, 1, hd), lambda b, h, t: (b, t, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, t: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, hd), q.dtype),
+        scratch_shapes=[pltpu.VMEM((G, 1), jnp.float32),
+                        pltpu.VMEM((G, 1), jnp.float32),
+                        pltpu.VMEM((G, hd), jnp.float32)],
+        interpret=interpret,
+    )(pos_arr, qg.reshape(B, Hkv, G, hd), k, v)
+    return out.reshape(B, H, hd)
+
+
+def flash_decode_attn_ref(q, k, v, pos):
+    """jnp oracle (same math as models.attention.sdpa at S=1)."""
+    B, H, hd = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    qf = q.reshape(B, Hkv, G, hd).astype(jnp.float32) / float(hd) ** 0.5
+    s = jnp.einsum("bngd,btnd->bngt", qf, k.astype(jnp.float32))
+    mask = jnp.arange(T)[None, None, None, :] < jnp.asarray(pos).reshape(-1, 1, 1, 1)
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bngt,btnd->bngd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, hd).astype(q.dtype)

@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: fast Walsh-Hadamard transform via the Kronecker two-matmul
+factorisation (MXU-native form of the FPGA OVSF generator's butterfly network).
+
+H_L = H_La (x) H_Lb with L = La * Lb (both powers of two). For X viewed as
+(batch, La, Lb):  WHT_L(x) = H_La @ X @ H_Lb  (H symmetric), i.e. two MXU
+matmuls of shapes (La,La) and (Lb,Lb) instead of log2(L) VPU butterfly passes.
+The Hadamard factors are generated *in-register* from iota + bit-parity — no
+HBM traffic for the basis, which is the paper's core on-the-fly insight mapped
+to the TPU memory hierarchy (HBM->VMEM->VREG).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.ovsf import next_pow2
+
+
+def _iota_hadamard(n: int, dtype) -> jnp.ndarray:
+    """(n, n) +-1 Sylvester-Hadamard built from iota + popcount parity."""
+    i = jax.lax.broadcasted_iota(jnp.uint32, (n, n), 0)
+    j = jax.lax.broadcasted_iota(jnp.uint32, (n, n), 1)
+    x = i & j
+    # branch-free popcount parity
+    x = x ^ (x >> 16)
+    x = x ^ (x >> 8)
+    x = x ^ (x >> 4)
+    x = x ^ (x >> 2)
+    x = x ^ (x >> 1)
+    par = (x & jnp.uint32(1)).astype(jnp.int32)
+    return (1 - 2 * par).astype(dtype)
+
+
+def _split_factors(L: int) -> tuple[int, int]:
+    """L = La * Lb with both <= max(128, sqrt) to keep MXU operands square-ish."""
+    k = int(np.log2(L))
+    kb = (k + 1) // 2
+    return 1 << (k - kb), 1 << kb  # (La, Lb), Lb >= La
+
+
+def _fwht_kernel(x_ref, o_ref, *, La: int, Lb: int):
+    bm = x_ref.shape[0]
+    x = x_ref[...].astype(jnp.float32).reshape(bm, La, Lb)
+    Ha = _iota_hadamard(La, jnp.float32)
+    Hb = _iota_hadamard(Lb, jnp.float32)
+    # y[m,a,b] = sum_{a',b'} Ha[a,a'] Hb[b,b'] x[m,a',b']
+    y = jnp.einsum("mab,bc->mac", x, Hb, preferred_element_type=jnp.float32)
+    y = jnp.einsum("ea,mab->meb", Ha, y, preferred_element_type=jnp.float32)
+    o_ref[...] = y.reshape(bm, La * Lb).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def fwht_pallas(x: jnp.ndarray, *, block_m: int = 256, interpret: bool = False
+                ) -> jnp.ndarray:
+    """WHT along the last axis of (..., L); L must be a power of two."""
+    orig_shape = x.shape
+    L = orig_shape[-1]
+    if L & (L - 1):
+        raise ValueError(f"FWHT length must be a power of two, got {L}")
+    La, Lb = _split_factors(L)
+    xf = x.reshape(-1, L)
+    M = xf.shape[0]
+    bm = min(block_m, M)
+    pad = (-M) % bm
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    Mp = xf.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_fwht_kernel, La=La, Lb=Lb),
+        grid=(Mp // bm,),
+        in_specs=[pl.BlockSpec((bm, L), lambda m: (m, 0))],
+        out_specs=pl.BlockSpec((bm, L), lambda m: (m, 0)),
+        out_shape=jax.ShapeDtypeStruct((Mp, L), x.dtype),
+        interpret=interpret,
+    )(xf)
+    return out[:M].reshape(orig_shape)

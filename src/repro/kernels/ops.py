@@ -1,0 +1,137 @@
+"""jit'd public wrappers around the OVSF kernels + execution-path dispatch.
+
+Execution paths for an OVSF linear layer y = x @ W(alphas, idx):
+
+``materialize``  paper-faithful weight-stationary: W is regenerated once per
+                 layer invocation (Pallas ``ovsf_decompress`` on TPU, FWHT-based
+                 jnp on other backends) and consumed by a standard GEMM.
+``fused``        paper-faithful TiWGen: generation fused into the GEMM tiles
+                 (Pallas ``ovsf_gemm``); best when the GEMM is memory-bound
+                 (decode) because the dense W never exists in HBM.
+``spectral``     beyond-paper: y = fwht(pad(x))[:, idx] @ alphas. Exact
+                 (x @ S^T = WHT(x_pad) restricted to kept codes), shrinks BOTH
+                 the weight bytes AND the main GEMM FLOPs to J/d_in of dense,
+                 at the cost of an O(L log L) activation transform. The FPGA
+                 engine could not reshape its dataflow this way; the TPU can.
+
+All paths are numerically validated against each other in tests.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ovsf
+from repro.kernels import ref as kref
+from repro.kernels.fwht import fwht_pallas
+from repro.kernels.ovsf_gemm import ovsf_gemm, ovsf_decompress
+
+ExecPath = Literal["materialize", "fused", "spectral"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def fwht(x: jnp.ndarray, *, use_pallas: bool | None = None,
+         interpret: bool = False) -> jnp.ndarray:
+    """WHT along last axis; Pallas on TPU, jnp butterfly elsewhere."""
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    if use_pallas:
+        return fwht_pallas(x, interpret=interpret)
+    return ovsf.fwht(x, axis=-1)
+
+
+def decompress(alphas: jnp.ndarray, idx: jnp.ndarray, d_in: int, *,
+               use_pallas: bool | None = None, interpret: bool = False
+               ) -> jnp.ndarray:
+    """Dense (d_in, d_out) weights from OVSF params.
+
+    idx (J,) -> monolithic codes; idx (n_seg, n_keep) -> segmented codes
+    (the paper's Alg. 1 layout).
+    """
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    if idx.ndim == 2:
+        return _segmented_decompress(alphas, idx, d_in)
+    if use_pallas:
+        return ovsf_decompress(alphas, idx, d_in=d_in, interpret=interpret)
+    # FWHT-based decompression: no LxL temp, HLO stays small for dry-runs.
+    return kref.fwht_decompress_ref(alphas, idx, d_in)
+
+
+def _segmented_decompress(alphas: jnp.ndarray, idx: jnp.ndarray, d_in: int
+                          ) -> jnp.ndarray:
+    ns, nk = idx.shape
+    L0 = d_in // ns
+    d_out = alphas.shape[-1]
+    al = alphas.reshape(ns, nk, d_out)
+    full = jnp.zeros((ns, L0, d_out), alphas.dtype)
+    # scatter kept coefficients into each segment's spectrum, then per-seg WHT
+    full = jax.vmap(lambda f, a, i: f.at[i, :].set(a))(full, al, idx)
+    w = ovsf.fwht(jnp.swapaxes(full, 1, 2), axis=-1)   # (ns, d_out, L0)
+    return jnp.swapaxes(w, 1, 2).reshape(d_in, d_out)
+
+
+def spectral_matmul(x: jnp.ndarray, alphas: jnp.ndarray, idx: jnp.ndarray,
+                    *, use_pallas: bool | None = None, interpret: bool = False
+                    ) -> jnp.ndarray:
+    """y = x @ W via the activation-transform identity (exact).
+
+    Monolithic: y = fwht(pad(x))[:, idx] @ alphas.
+    Segmented:  per length-L0 segment, y = concat_s(fwht(x_s)[:, idx_s]) @ A —
+    a single dense GEMM with contraction rho*d_in (block-diagonal basis).
+    """
+    d_in = x.shape[-1]
+    if idx.ndim == 2:
+        ns, nk = idx.shape
+        L0 = d_in // ns
+        xs = x.reshape(x.shape[:-1] + (ns, L0))
+        xh = fwht(xs, use_pallas=False)                 # tiny per-seg WHT
+        xk = jnp.take_along_axis(
+            xh, jnp.broadcast_to(idx, xh.shape[:-1] + (nk,)), axis=-1)
+        xk = xk.reshape(x.shape[:-1] + (ns * nk,))
+        return (xk @ alphas.astype(xk.dtype)).astype(x.dtype)
+    L = ovsf.next_pow2(d_in)
+    if L != d_in:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, L - d_in)])
+    xh = fwht(x, use_pallas=use_pallas, interpret=interpret)
+    xk = jnp.take(xh, idx, axis=-1)                    # (..., J)
+    return (xk @ alphas.astype(xk.dtype)).astype(x.dtype)
+
+
+def ovsf_matmul(x: jnp.ndarray, alphas: jnp.ndarray, idx: jnp.ndarray, *,
+                path: ExecPath = "materialize",
+                use_pallas: bool | None = None,
+                interpret: bool = False,
+                block_m: int = 128, block_n: int = 128,
+                block_k: int = 128, block_j: int = 128) -> jnp.ndarray:
+    """Dispatch y = x @ W(alphas, idx) over (..., d_in) activations."""
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    lead = x.shape[:-1]
+    d_in = x.shape[-1]
+    d_out = alphas.shape[-1]
+    x2 = x.reshape(-1, d_in)
+
+    if path == "spectral":
+        y = spectral_matmul(x2, alphas, idx, use_pallas=use_pallas,
+                            interpret=interpret)
+    elif path == "fused":
+        if use_pallas:
+            y = ovsf_gemm(x2, alphas, idx, interpret=interpret,
+                          block_m=block_m, block_n=block_n,
+                          block_k=block_k, block_j=block_j)
+        else:
+            y = kref.ovsf_matmul_ref(x2, alphas, idx)
+    elif path == "materialize":
+        W = decompress(alphas, idx, d_in, use_pallas=use_pallas,
+                       interpret=interpret)
+        y = (x2 @ W.astype(x2.dtype)).astype(x.dtype)
+    else:
+        raise ValueError(f"unknown exec path: {path}")
+    return y.reshape(lead + (d_out,))

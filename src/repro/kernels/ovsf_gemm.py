@@ -1,0 +1,239 @@
+"""Pallas TPU kernels for on-the-fly OVSF weight generation (paper §4.2, TiWGen).
+
+Two kernels:
+
+``ovsf_gemm``        — the TiWGen analogue: for each (bm, bn) output tile the
+                       kernel *generates* the (bk, bn) weight tile it is about
+                       to consume — Hadamard sign tile built in-register from
+                       iota + bit parity (zero HBM bytes for the basis), then
+                       two MXU matmuls: W_tile = S_tile^T @ alpha_tile and
+                       acc += x_tile @ W_tile. HBM weight traffic is only the
+                       alpha coefficients: rho*L/d_in of the dense bytes.
+
+``ovsf_decompress``  — weight-stationary variant (paper §4.2.1, "other
+                       dataflows" / TPU case): materialise the dense W once per
+                       layer, reuse across many activation rows. Used when the
+                       consumer GEMM is compute-bound (training/prefill).
+
+Block sizes (bm, bn, bk, bj) are the TPU analogue of the paper's
+<M, T_R, T_P, T_C>; the DSE in repro.hwmodel picks them.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.ovsf import next_pow2
+
+
+def _sign_tile(idx_col: jnp.ndarray, j0: jnp.ndarray, k0: jnp.ndarray,
+               bk: int, seg: int, n_keep: int) -> jnp.ndarray:
+    """(bj, bk) +-1 Hadamard sign tile.
+
+    Monolithic (seg == 0): S[j, k] = (-1)^popcount(idx[j] & (k0+k)).
+    Segmented (seg == L0): codes only touch their own length-L0 segment
+    (block-diagonal basis, paper Alg. 1):
+      S[j, k] = (-1)^popcount(idx[j] & ((k0+k) % L0)) * [seg(j0+j) == seg(k0+k)]
+    Built entirely from iota + bitwise ops — the on-chip OVSF generator.
+    """
+    bj = idx_col.shape[0]
+    codes = idx_col.astype(jnp.uint32)                                # (bj, 1)
+    cols = (k0.astype(jnp.uint32)
+            + jax.lax.broadcasted_iota(jnp.uint32, (bj, bk), 1))      # (bj, bk)
+    kk = cols % jnp.uint32(seg) if seg else cols
+    x = codes & kk
+    x = x ^ (x >> 16)
+    x = x ^ (x >> 8)
+    x = x ^ (x >> 4)
+    x = x ^ (x >> 2)
+    x = x ^ (x >> 1)
+    par = (x & jnp.uint32(1)).astype(jnp.int32)
+    s = (1 - 2 * par).astype(jnp.float32)
+    if seg:
+        rows = (j0.astype(jnp.uint32)
+                + jax.lax.broadcasted_iota(jnp.uint32, (bj, bk), 0))
+        same = (rows // jnp.uint32(n_keep)) == (cols // jnp.uint32(seg))
+        s = jnp.where(same, s, 0.0)
+    return s
+
+
+def _gen_w_tile(idx_ref, alpha_ref, k: jnp.ndarray, *, bk: int, bj: int,
+                seg: int = 0, n_keep: int = 0) -> jnp.ndarray:
+    """Generate the (bk, bn) weight tile for k-block ``k`` from alphas in VMEM."""
+    J = idx_ref.shape[0]
+    bn = alpha_ref.shape[1]
+    k0 = k * bk
+    n_chunks = J // bj
+
+    def body(c, acc):
+        j0 = c * bj
+        idx_c = jax.lax.dynamic_slice(idx_ref[...], (j0, 0), (bj, 1))
+        al_c = jax.lax.dynamic_slice(
+            alpha_ref[...], (j0, 0), (bj, bn)).astype(jnp.float32)
+        S = _sign_tile(idx_c, j0, k0, bk, seg, n_keep)                 # (bj, bk)
+        return acc + jax.lax.dot_general(
+            S, al_c, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)                        # (bk, bn)
+
+    acc0 = jnp.zeros((bk, bn), jnp.float32)
+    return jax.lax.fori_loop(0, n_chunks, body, acc0)
+
+
+# ---------------------------------------------------------------------------
+# Fused on-the-fly GEMM (TiWGen)
+# ---------------------------------------------------------------------------
+
+def _ovsf_gemm_kernel(idx_ref, x_ref, alpha_ref, o_ref, acc_ref, *,
+                      bk: int, bj: int, nk: int, seg: int, n_keep: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w_tile = _gen_w_tile(idx_ref, alpha_ref, k, bk=bk, bj=bj, seg=seg,
+                         n_keep=n_keep)                                # (bk, bn)
+    x_tile = x_ref[...].astype(jnp.float32)                            # (bm, bk)
+    acc_ref[...] += jax.lax.dot_general(
+        x_tile, w_tile, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "block_j", "interpret"))
+def ovsf_gemm(x: jnp.ndarray, alphas: jnp.ndarray, idx: jnp.ndarray, *,
+              block_m: int = 128, block_n: int = 128, block_k: int = 128,
+              block_j: int = 128, interpret: bool = False) -> jnp.ndarray:
+    """y = x @ W where W[k, n] = sum_j H[idx[j], k] * alphas[j, n].
+
+    x: (M, d_in), alphas: (J, d_out) -> (M, d_out). idx: (J,) int32 for
+    monolithic codes, or (n_seg, n_keep) for the segmented (Alg. 1) layout.
+    Weight bytes read from HBM: J*d_out instead of d_in*d_out.
+    """
+    M, d_in = x.shape
+    J, d_out = alphas.shape
+    seg = 0
+    keep = 0
+    if idx.ndim == 2:
+        ns, keep = idx.shape
+        seg = d_in // ns
+        idx = idx.reshape(-1)
+        if seg and block_k % seg:
+            block_k = max((block_k // seg) * seg, seg)
+    bm = min(block_m, _ceil_mult(M, 8))
+    bn = min(block_n, d_out)
+    bk = min(block_k, d_in)
+    bj = min(block_j, _ceil_mult(J, 8))
+
+    xp = _pad2(x, bm, bk)
+    alp = _pad2(alphas, bj, bn)
+    idxp = _pad1(idx.astype(jnp.int32), bj).reshape(-1, 1)
+    Mp, Kp = xp.shape
+    Jp, Np = alp.shape
+    nk = Kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_ovsf_gemm_kernel, bk=bk, bj=bj, nk=nk, seg=seg,
+                          n_keep=keep),
+        grid=(Mp // bm, Np // bn, nk),
+        in_specs=[
+            pl.BlockSpec((Jp, 1), lambda m, n, k: (0, 0)),   # idx (whole)
+            pl.BlockSpec((bm, bk), lambda m, n, k: (m, k)),  # x
+            pl.BlockSpec((Jp, bn), lambda m, n, k: (0, n)),  # alphas
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(idxp, xp, alp)
+    return out[:M, :d_out]
+
+
+# ---------------------------------------------------------------------------
+# Weight-stationary decompression (generate once, reuse)
+# ---------------------------------------------------------------------------
+
+def _decompress_kernel(idx_ref, alpha_ref, o_ref, *, bk: int, bj: int,
+                       seg: int, n_keep: int):
+    k = pl.program_id(0)
+    o_ref[...] = _gen_w_tile(idx_ref, alpha_ref, k, bk=bk, bj=bj, seg=seg,
+                             n_keep=n_keep).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("d_in", "block_n", "block_k", "block_j", "interpret"))
+def ovsf_decompress(alphas: jnp.ndarray, idx: jnp.ndarray, *, d_in: int,
+                    block_n: int = 256, block_k: int = 256, block_j: int = 128,
+                    interpret: bool = False) -> jnp.ndarray:
+    """Materialise dense W (d_in, d_out) from (J, d_out) alphas + code ids
+    ((J,) monolithic or (n_seg, n_keep) segmented)."""
+    J, d_out = alphas.shape
+    seg = 0
+    keep = 0
+    if idx.ndim == 2:
+        ns, keep = idx.shape
+        seg = d_in // ns
+        idx = idx.reshape(-1)
+        if seg and block_k % seg:
+            block_k = max((block_k // seg) * seg, seg)
+    L = next_pow2(d_in)
+    bk = min(block_k, L if not seg else d_in)
+    bn = min(block_n, d_out)
+    bj = min(block_j, _ceil_mult(J, 8))
+
+    alp = _pad2(alphas, bj, bn)
+    idxp = _pad1(idx.astype(jnp.int32), bj).reshape(-1, 1)
+    Jp, Np = alp.shape
+    Kp = _round_up(d_in, bk)
+
+    out = pl.pallas_call(
+        functools.partial(_decompress_kernel, bk=bk, bj=bj, seg=seg,
+                          n_keep=keep),
+        grid=(Kp // bk, Np // bn),
+        in_specs=[
+            pl.BlockSpec((Jp, 1), lambda k, n: (0, 0)),
+            pl.BlockSpec((Jp, bn), lambda k, n: (0, n)),
+        ],
+        out_specs=pl.BlockSpec((bk, bn), lambda k, n: (k, n)),
+        out_shape=jax.ShapeDtypeStruct((Kp, Np), alphas.dtype),
+        interpret=interpret,
+    )(idxp, alp)
+    return out[:d_in, :d_out]
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _round_up(n: int, b: int) -> int:
+    return ((n + b - 1) // b) * b
+
+
+def _ceil_mult(n: int, b: int) -> int:
+    """Smallest multiple of b >= n, used to derive a legal block <= requested."""
+    return _round_up(max(n, 1), b)
+
+
+def _pad2(a: jnp.ndarray, b0: int, b1: int) -> jnp.ndarray:
+    p0 = (-a.shape[0]) % b0
+    p1 = (-a.shape[1]) % b1
+    if p0 or p1:
+        a = jnp.pad(a, ((0, p0), (0, p1)))
+    return a
+
+
+def _pad1(a: jnp.ndarray, b0: int) -> jnp.ndarray:
+    p0 = (-a.shape[0]) % b0
+    if p0:
+        a = jnp.pad(a, ((0, p0),))
+    return a

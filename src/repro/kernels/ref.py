@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth used by tests (assert_allclose, hypothesis sweeps)
+and by CPU execution paths. They must stay boring and obviously correct.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ovsf
+
+
+def fwht_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Unnormalised WHT along the last axis (== x @ H_L)."""
+    return ovsf.fwht(x, axis=-1)
+
+
+def ovsf_decompress_ref(alphas: jnp.ndarray, idx: jnp.ndarray, d_in: int
+                        ) -> jnp.ndarray:
+    """(n_keep, d_out) alphas + (n_keep,) code ids -> dense (d_in, d_out) W.
+
+    W[k, n] = sum_j H[idx[j], k] * alphas[j, n],  k < d_in (crop of length-L codes).
+    """
+    L = ovsf.next_pow2(d_in)
+    S = ovsf.hadamard_matrix(L, dtype=alphas.dtype)[idx, :d_in]  # (n_keep, d_in)
+    return S.T @ alphas
+
+
+def ovsf_matmul_ref(x: jnp.ndarray, alphas: jnp.ndarray, idx: jnp.ndarray
+                    ) -> jnp.ndarray:
+    """Fused on-the-fly GEMM oracle: y = x @ W(alphas, idx).
+
+    x: (M, d_in); alphas: (n_keep, d_out); returns (M, d_out). Computed in f32.
+    """
+    d_in = x.shape[-1]
+    W = ovsf_decompress_ref(alphas.astype(jnp.float32), idx, d_in)
+    return (x.astype(jnp.float32) @ W).astype(x.dtype)
+
+
+def fwht_decompress_ref(alphas: jnp.ndarray, idx: jnp.ndarray, d_in: int
+                        ) -> jnp.ndarray:
+    """FWHT-path decompression oracle (scatter -> transform -> crop)."""
+    L = ovsf.next_pow2(d_in)
+    n_keep, d_out = alphas.shape
+    full = jnp.zeros((d_out, L), alphas.dtype).at[:, idx].set(alphas.T)
+    w = ovsf.fwht(full, axis=-1)[:, :d_in]  # (d_out, d_in)
+    return w.T
+
+
+def np_hadamard(L: int) -> np.ndarray:
+    """NumPy Sylvester Hadamard for test-side construction."""
+    H = np.array([[1.0]])
+    while H.shape[0] < L:
+        H = np.block([[H, H], [H, -H]])
+    return H

@@ -1,0 +1,220 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on the
+production meshes, record memory analysis, loop-corrected cost analysis and
+the collective schedule. THE proof that the distribution config is coherent.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                  # everything
+  PYTHONPATH=src python -m repro.launch.dryrun --arch kimi_k2_1t_a32b \
+      --shape decode_32k --mesh single                          # one cell
+  ... --variant dense          # paper-faithful baseline (OVSF off)
+  ... --out results/dryrun     # JSON per cell, incremental (reruns skip)
+
+NOTE: the XLA_FLAGS line above must execute before any other jax import in
+the process — run this module in its own process (python -m), never import
+it from tests.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, get_config, input_specs, shape_applicable
+from repro.configs.base import ModelConfig, OVSFConfig, ShapeConfig
+from repro.hwmodel.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.models import registry as R
+from repro.sharding.rules import ShardingRules
+from repro.train import optim, steps
+
+
+def _spec_batch(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    return input_specs(cfg, shape)
+
+
+def apply_variant(cfg: ModelConfig, variant: str) -> ModelConfig:
+    """Named config variants for baselines/hillclimbs (see EXPERIMENTS.md)."""
+    o = cfg.ovsf
+    if variant == "default":
+        return cfg
+    if variant == "dense":          # paper's conventional-engine baseline
+        return cfg.replace(ovsf=dataclasses.replace(o, enable=False))
+    if variant == "ovsf_spectral":  # beyond-paper activation-transform path
+        return cfg.replace(ovsf=dataclasses.replace(o, exec_path="spectral"))
+    if variant == "ovsf_rho25":
+        return cfg.replace(ovsf=dataclasses.replace(o, rho=0.25))
+    if variant == "ovsf_rho25_spectral":
+        return cfg.replace(ovsf=dataclasses.replace(
+            o, rho=0.25, exec_path="spectral"))
+    if variant == "int8kv":
+        return cfg.replace(kv_cache_dtype="int8")
+    if variant == "spectral_int8kv":
+        return cfg.replace(kv_cache_dtype="int8",
+                           ovsf=dataclasses.replace(o, exec_path="spectral"))
+    if variant == "no_flash":       # ablation: head-sharded (not seq) KV
+        return cfg.replace(flash_decode_seq_shard=False)
+    if variant == "no_fsdp":        # replicate params over 'data' (decode)
+        return cfg.replace(fsdp=False)
+    if variant == "spectral_no_fsdp":
+        return cfg.replace(fsdp=False,
+                           ovsf=dataclasses.replace(o, exec_path="spectral"))
+    if variant == "spectral_no_fsdp_int8kv":
+        return cfg.replace(fsdp=False, kv_cache_dtype="int8",
+                           ovsf=dataclasses.replace(o, exec_path="spectral"))
+    if variant == "dense_no_fsdp":
+        return cfg.replace(fsdp=False,
+                           ovsf=dataclasses.replace(o, enable=False))
+    if variant == "ovsf_rho25_train":
+        return cfg.replace(ovsf=dataclasses.replace(o, rho=0.25))
+    raise ValueError(f"unknown variant {variant}")
+
+
+def lower_cell(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    """Build + lower the right step for one cell. Returns jax Lowered."""
+    rules = ShardingRules(mesh,
+                         flash_decode_seq_shard=cfg.flash_decode_seq_shard)
+    if shape.kind == "train":
+        state_specs = steps.train_state_specs(cfg)
+        batch = _spec_batch(cfg, shape)
+        fn, state_sh, batch_sh = steps.jit_train_step(
+            cfg, optim.OptConfig(), mesh, state_specs, batch)
+        state_specs_sh = jax.tree_util.tree_map(
+            lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+            state_specs, state_sh)
+        batch_specs_sh = jax.tree_util.tree_map(
+            lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+            batch, batch_sh)
+        return fn.lower(state_specs_sh, batch_specs_sh)
+    param_specs = R.model_init_specs(cfg)
+    if shape.kind == "prefill":
+        batch = _spec_batch(cfg, shape)
+        fn, p_sh, b_sh = steps.jit_prefill(cfg, mesh, param_specs, batch,
+                                           shape.seq_len)
+        p_specs = jax.tree_util.tree_map(
+            lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+            param_specs, p_sh)
+        b_specs = jax.tree_util.tree_map(
+            lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+            batch, b_sh)
+        return fn.lower(p_specs, b_specs)
+    # decode
+    cache_specs = R.cache_spec(cfg, shape.global_batch, shape.seq_len)
+    fn, p_sh, c_sh = steps.jit_decode_step(cfg, mesh, param_specs, cache_specs)
+    p_specs = jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        param_specs, p_sh)
+    c_specs = jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        cache_specs, c_sh)
+    tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    return fn.lower(p_specs, c_specs, tok)
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, variant: str,
+             out_dir: str, force: bool = False) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    cell_id = f"{arch}.{shape_name}.{mesh_kind}.{variant}"
+    path = os.path.join(out_dir, cell_id + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    cfg = apply_variant(get_config(arch), variant)
+    shape = SHAPES[shape_name]
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                 "variant": variant, "kind": shape.kind}
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        rec.update(status="SKIP", reason=why)
+        _write(path, rec)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    n_dev = mesh.devices.size
+    t0 = time.time()
+    try:
+        lowered = lower_cell(cfg, shape, mesh)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        mem = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        st = analyze_hlo(hlo, n_devices=n_dev)
+        try:  # keep compressed HLO so re-analysis never needs a recompile
+            import zstandard as zstd
+            with open(os.path.join(out_dir, cell_id + ".hlo.zst"), "wb") as f:
+                f.write(zstd.ZstdCompressor(level=6).compress(hlo.encode()))
+        except Exception:
+            pass
+        rec.update(
+            status="OK",
+            n_devices=n_dev,
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            memory=dict(
+                argument_bytes=mem.argument_size_in_bytes,
+                output_bytes=mem.output_size_in_bytes,
+                temp_bytes=mem.temp_size_in_bytes,
+                alias_bytes=mem.alias_size_in_bytes,
+                total_per_device=(mem.argument_size_in_bytes
+                                  + mem.output_size_in_bytes
+                                  + mem.temp_size_in_bytes
+                                  - mem.alias_size_in_bytes),
+            ),
+            xla_cost=dict(flops=ca.get("flops", -1.0),
+                          bytes_accessed=ca.get("bytes accessed", -1.0)),
+            analysis=st.merged(),
+        )
+        print(f"[dryrun] OK   {cell_id}: compile {t_compile:.1f}s "
+              f"flops/dev {st.flops:.3e} hbm/dev {st.hbm_bytes:.3e} "
+              f"coll/dev {st.collective_bytes:.3e}", flush=True)
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        rec.update(status="FAIL", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+        print(f"[dryrun] FAIL {cell_id}: {type(e).__name__}: {e}", flush=True)
+    _write(path, rec)
+    return rec
+
+
+def _write(path: str, rec: dict) -> None:
+    with open(path + ".tmp", "w") as f:
+        json.dump(rec, f, indent=1, default=float)
+    os.replace(path + ".tmp", path)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape id or 'all'")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multipod", "both"])
+    ap.add_argument("--variant", default="default")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = (["single", "multipod"] if args.mesh == "both" else [args.mesh])
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                rec = run_cell(arch, shape, mesh_kind, args.variant,
+                               args.out, force=args.force)
+                n_fail += rec["status"] == "FAIL"
+    print(f"[dryrun] done, {n_fail} failures")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,136 @@
+"""GQA attention with KV cache, RoPE, causal/bidir/cross modes.
+
+Decode attends over the full cache buffer with a position mask; with
+``flash_decode_seq_shard`` the cache is sharded over the *sequence* dim on the
+'model' mesh axis so the memory-bound KV read is split across chips (the SP /
+flash-decoding analogue of the paper's "parallelise the dominant memory term").
+GSPMD inserts the partial-softmax all-reduces automatically.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+def attn_init(key: jax.Array, cfg: ModelConfig, *, cross: bool = False,
+              prefix: str = "attn") -> dict:
+    d, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    return {
+        "q": L.linear_init(ks[0], cfg, f"{prefix}_q", d, H * hd, bias=cfg.qkv_bias),
+        "k": L.linear_init(ks[1], cfg, f"{prefix}_k", d, Hkv * hd, bias=cfg.qkv_bias),
+        "v": L.linear_init(ks[2], cfg, f"{prefix}_v", d, Hkv * hd, bias=cfg.qkv_bias),
+        "o": L.linear_init(ks[3], cfg, f"{prefix}_o", H * hd, d, bias=False),
+    }
+
+
+def _split_heads(x: jnp.ndarray, n: int, hd: int) -> jnp.ndarray:
+    B, S, _ = x.shape
+    return x.reshape(B, S, n, hd)
+
+
+def sdpa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+         mask: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Grouped scaled-dot-product attention. q:(B,S,H,hd) k/v:(B,T,Hkv,hd).
+
+    K/V stay in their storage dtype (bf16) with f32 MXU accumulation
+    (preferred_element_type) — casting the cache to f32 would make XLA
+    materialise an f32 copy of the whole KV buffer every layer, tripling
+    decode HBM traffic (measured in EXPERIMENTS.md §Perf iteration 1).
+    """
+    B, S, H, hd = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    qs = (q.astype(jnp.float32) * scale).astype(q.dtype)
+    logits = jnp.einsum("bsngd,btnd->bnsgt", qs.reshape(B, S, Hkv, G, hd), k,
+                        preferred_element_type=jnp.float32)
+    if mask is not None:
+        # mask: (B, S, T) or (S, T); True = attend
+        m = mask[:, None, :, None, :] if mask.ndim == 3 else mask[None, None, :, None, :]
+        logits = jnp.where(m, logits, jnp.float32(-1e30))
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bnsgt,btnd->bsngd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def attn_apply(p: dict, cfg: ModelConfig, x: jnp.ndarray, *,
+               positions: jnp.ndarray,
+               mode: str = "causal",                 # causal | bidir | cross
+               kv_src: Optional[jnp.ndarray] = None, # cross-attn source
+               cache: Optional[dict] = None,         # {"k","v"} buffers (B,T,Hkv,hd)
+               cache_pos: Optional[jnp.ndarray] = None,
+               ) -> tuple[jnp.ndarray, Optional[dict]]:
+    """Returns (output, updated_cache)."""
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    B, S, _ = x.shape
+    q = _split_heads(L.linear_apply(p["q"], x, cfg), H, hd)
+    src = kv_src if kv_src is not None else x
+    k = _split_heads(L.linear_apply(p["k"], src, cfg), Hkv, hd)
+    v = _split_heads(L.linear_apply(p["v"], src, cfg), Hkv, hd)
+
+    if mode != "cross":
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None and mode != "cross":
+        # scatter the S new steps at cache_pos, then attend over the buffer
+        T = cache["k"].shape[1]
+        kd = cache["k"].dtype
+        idx = (cache_pos + jnp.arange(S))                       # (S,)
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], _quant_like(k, kd), cache_pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], _quant_like(v, kd), cache_pos, axis=1)
+        new_cache = {"k": ck, "v": cv}
+        t = jnp.arange(T)
+        # position t valid if t <= query_position (causal over filled region)
+        mask = t[None, :] <= idx[:, None]                       # (S, T)
+        out = sdpa(q, _dequant(ck, q.dtype), _dequant(cv, q.dtype), mask)
+    elif cache is not None and mode == "cross":
+        out = sdpa(q, _dequant(cache["k"], q.dtype),
+                   _dequant(cache["v"], q.dtype), None)
+        new_cache = cache
+    else:
+        if mode == "causal":
+            t = jnp.arange(S)
+            mask = t[None, :] <= t[:, None]
+        else:
+            mask = None
+        out = sdpa(q, k, v, mask)
+
+    y = L.linear_apply(p["o"], out.reshape(B, S, H * hd), cfg)
+    return y, new_cache
+
+
+def make_cross_cache(p: dict, cfg: ModelConfig, src: jnp.ndarray) -> dict:
+    """Precompute encoder K/V for cross attention (prefill of enc-dec)."""
+    Hkv, hd = cfg.n_kv_heads, cfg.hd
+    k = _split_heads(L.linear_apply(p["k"], src, cfg), Hkv, hd)
+    v = _split_heads(L.linear_apply(p["v"], src, cfg), Hkv, hd)
+    return {"k": k, "v": v}
+
+
+# --- int8 KV quantisation (beyond-paper memory opt; symmetric per-head) -----
+
+_KV_SCALE = 127.0 / 8.0   # static scale; attention values are O(1) post-norm
+
+
+def _quant_like(x: jnp.ndarray, dtype) -> jnp.ndarray:
+    if dtype == jnp.int8:
+        return jnp.clip(jnp.round(x.astype(jnp.float32) * _KV_SCALE),
+                        -127, 127).astype(jnp.int8)
+    return x.astype(dtype)
+
+
+def _dequant(x: jnp.ndarray, dtype) -> jnp.ndarray:
+    if x.dtype == jnp.int8:
+        return (x.astype(jnp.float32) / _KV_SCALE).astype(dtype)
+    return x.astype(dtype)

@@ -1,0 +1,329 @@
+"""The paper's own benchmark CNNs: ResNet-18/34/50 and SqueezeNet-1.1, with
+OVSF-CONV layers (paper §2.3, §6.1) executed through the same GEMM engine as
+the transformers (im2col -> matmul), exactly the single-computation-engine
+mapping of §4.1 (R = H'*W', P = Cin*K*K, C = Cout).
+
+Two OVSF filter constructions:
+ - "matrix":  flatten (Cin*K*K) rows, codes of length L = next_pow2(Cin*K*K),
+   crop rows (the formulation the transformer stacks also use).
+ - "spatial": the paper's literal construction — true power-of-two filters
+   (K0=4) from codes of length Cin*K0*K0, then 3x3 extraction by "crop" or
+   "adaptive" average pooling (Table 3's comparison).
+
+Per-layer OVSF ratios follow the paper's per-block tuples, e.g.
+OVSF50 = (1.0, 0.5, 0.5, 0.5) over the four ResNet stages.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ovsf
+from repro.kernels import ops as kops
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    name: str
+    depth: str                       # resnet18 | resnet34 | resnet50 | squeezenet
+    num_classes: int = 1000
+    in_hw: int = 224
+    block_rhos: tuple = (1.0, 1.0, 1.0, 1.0)   # per-stage OVSF ratio; 1.0 = dense
+    ovsf_enable: bool = False
+    ovsf_mode: str = "matrix"        # matrix | spatial
+    extract: str = "crop"            # crop | adaptive (spatial mode, Table 3)
+    strategy: str = "iterative"      # iterative | sequential (Table 3)
+    width_mult: float = 1.0          # reduced smoke variants
+    dtype: str = "float32"
+
+    @property
+    def act_dtype(self):
+        return jnp.dtype(self.dtype)
+
+
+# ---------------------------------------------------------------------------
+# OVSF conv layer
+# ---------------------------------------------------------------------------
+
+def conv_init(key: jax.Array, cfg: CNNConfig, c_in: int, c_out: int, k: int,
+              rho: float) -> dict:
+    dtype = cfg.act_dtype
+    fan_in = c_in * k * k
+    std = float(np.sqrt(2.0 / fan_in))
+    use_ovsf = cfg.ovsf_enable and rho < 1.0 and k >= 3 and c_in >= 16
+    if not use_ovsf:
+        w = jax.random.normal(key, (k, k, c_in, c_out), dtype) * std
+        return {"w": w}
+    if cfg.ovsf_mode == "spatial" and k == 3:
+        k0 = 4
+        Lc = c_in * k0 * k0
+        spec = ovsf.OVSFSpec(Lc, c_out, rho=rho, strategy=cfg.strategy)  # type: ignore[arg-type]
+        p = ovsf.init_ovsf(key, spec, scale=2.0, dtype=dtype)
+        return {"alphas": p["alphas"], "idx": p["idx"],
+                "meta": jnp.array([c_in, k0], jnp.int32)}
+    spec = ovsf.OVSFSpec(fan_in, c_out, rho=rho, strategy=cfg.strategy)  # type: ignore[arg-type]
+    p = ovsf.init_ovsf(key, spec, scale=2.0, dtype=dtype)
+    return {"alphas": p["alphas"], "idx": p["idx"]}
+
+
+def conv_weights(p: dict, cfg: CNNConfig, c_in: int, c_out: int, k: int
+                 ) -> jnp.ndarray:
+    """Materialise (k, k, c_in, c_out) filters (generation happens on-chip)."""
+    if "w" in p:
+        return p["w"]
+    if "meta" in p:  # spatial mode: reconstruct K0xK0 then extract kxk
+        k0 = 4
+        wt = ovsf.reconstruct(p["alphas"].T, p["idx"], c_in * k0 * k0)
+        w4 = wt.reshape(c_out, c_in, k0, k0)
+        w = ovsf.extract_kxk(w4, k, cfg.extract)            # (c_out, c_in, k, k)
+        return jnp.transpose(w, (2, 3, 1, 0))
+    wflat = kops.decompress(p["alphas"], p["idx"], c_in * k * k)
+    return wflat.reshape(k, k, c_in, c_out)
+
+
+def conv_apply(p: dict, cfg: CNNConfig, x: jnp.ndarray, c_out: int, k: int,
+               stride: int = 1) -> jnp.ndarray:
+    """NHWC conv. OVSF layers in matrix mode run im2col + on-the-fly GEMM,
+    mirroring the paper's engine; spatial mode reconstructs then convolves."""
+    c_in = x.shape[-1]
+    if "alphas" in p and "meta" not in p:
+        # im2col: (B, H', W', Cin*K*K) patches -> GEMM against generated W
+        pad = (k // 2, k // 2)
+        patches = jax.lax.conv_general_dilated_patches(
+            x, (k, k), (stride, stride), [pad, pad],
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        B, Ho, Wo, PKK = patches.shape
+        # conv_general_dilated_patches emits channel-major (Cin, K, K) order;
+        # alphas were built over (K, K, Cin) flattening. Rearrange to match.
+        pt = patches.reshape(B * Ho * Wo, c_in, k, k)
+        pt = jnp.transpose(pt, (0, 2, 3, 1)).reshape(B * Ho * Wo, k * k * c_in)
+        y = kops.ovsf_matmul(pt, p["alphas"], p["idx"], path="materialize")
+        return y.reshape(B, Ho, Wo, c_out)
+    w = conv_weights(p, cfg, c_in, c_out, k)
+    pad = (k // 2, k // 2)
+    return jax.lax.conv_general_dilated(
+        x, w.astype(x.dtype), (stride, stride), [pad, pad],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+# ---------------------------------------------------------------------------
+# BatchNorm (functional, running stats in a separate state tree)
+# ---------------------------------------------------------------------------
+
+def bn_init(c: int, dtype) -> tuple[dict, dict]:
+    return ({"scale": jnp.ones((c,), dtype), "bias": jnp.zeros((c,), dtype)},
+            {"mean": jnp.zeros((c,), jnp.float32),
+             "var": jnp.ones((c,), jnp.float32)})
+
+
+def bn_apply(p: dict, st: dict, x: jnp.ndarray, train: bool,
+             momentum: float = 0.9) -> tuple[jnp.ndarray, dict]:
+    xf = x.astype(jnp.float32)
+    if train:
+        mu = jnp.mean(xf, axis=(0, 1, 2))
+        var = jnp.var(xf, axis=(0, 1, 2))
+        new_st = {"mean": momentum * st["mean"] + (1 - momentum) * mu,
+                  "var": momentum * st["var"] + (1 - momentum) * var}
+    else:
+        mu, var = st["mean"], st["var"]
+        new_st = st
+    y = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype), new_st
+
+
+# ---------------------------------------------------------------------------
+# ResNet
+# ---------------------------------------------------------------------------
+
+_RESNET_DEF = {
+    "resnet18": ("basic", (2, 2, 2, 2)),
+    "resnet34": ("basic", (3, 4, 6, 3)),
+    "resnet50": ("bottleneck", (3, 4, 6, 3)),
+}
+_STAGE_CH = (64, 128, 256, 512)
+
+
+def _resnet_layers(cfg: CNNConfig) -> list[dict]:
+    """Static layer plan: list of conv descriptors with stage-indexed rho."""
+    kind, blocks = _RESNET_DEF[cfg.depth]
+    wm = cfg.width_mult
+    ch = [max(8, int(c * wm)) for c in _STAGE_CH]
+    plan = []
+    c_prev = max(8, int(64 * wm))
+    plan.append(dict(name="stem", c_in=3, c_out=c_prev, k=7, stride=2, rho=1.0))
+    for s, nb in enumerate(blocks):
+        c = ch[s]
+        rho = cfg.block_rhos[s]
+        for b in range(nb):
+            stride = 2 if (s > 0 and b == 0) else 1
+            if kind == "basic":
+                plan.append(dict(name=f"s{s}b{b}c1", c_in=c_prev, c_out=c,
+                                 k=3, stride=stride, rho=rho))
+                plan.append(dict(name=f"s{s}b{b}c2", c_in=c, c_out=c,
+                                 k=3, stride=1, rho=rho))
+                need_proj = (c_prev != c) or stride != 1
+                if need_proj:
+                    plan.append(dict(name=f"s{s}b{b}proj", c_in=c_prev,
+                                     c_out=c, k=1, stride=stride, rho=1.0))
+                c_prev = c
+            else:
+                cm, co = c, c * 4
+                plan.append(dict(name=f"s{s}b{b}c1", c_in=c_prev, c_out=cm,
+                                 k=1, stride=1, rho=1.0))
+                plan.append(dict(name=f"s{s}b{b}c2", c_in=cm, c_out=cm,
+                                 k=3, stride=stride, rho=rho))
+                plan.append(dict(name=f"s{s}b{b}c3", c_in=cm, c_out=co,
+                                 k=1, stride=1, rho=1.0))
+                if (c_prev != co) or stride != 1:
+                    plan.append(dict(name=f"s{s}b{b}proj", c_in=c_prev,
+                                     c_out=co, k=1, stride=stride, rho=1.0))
+                c_prev = co
+    plan.append(dict(name="head", c_in=c_prev, c_out=cfg.num_classes,
+                     k=0, stride=0, rho=1.0))
+    return plan
+
+
+def resnet_init(key: jax.Array, cfg: CNNConfig) -> tuple[dict, dict]:
+    plan = _resnet_layers(cfg)
+    params: dict = {}
+    state: dict = {}
+    ks = jax.random.split(key, len(plan))
+    for i, d in enumerate(plan):
+        if d["name"] == "head":
+            std = float(np.sqrt(1.0 / d["c_in"]))
+            params["head"] = {"w": jax.random.normal(
+                ks[i], (d["c_in"], d["c_out"]), cfg.act_dtype) * std,
+                "b": jnp.zeros((d["c_out"],), cfg.act_dtype)}
+            continue
+        params[d["name"]] = conv_init(ks[i], cfg, d["c_in"], d["c_out"],
+                                      d["k"], d["rho"])
+        bnp, bns = bn_init(d["c_out"], cfg.act_dtype)
+        params[d["name"] + "_bn"] = bnp
+        state[d["name"] + "_bn"] = bns
+    return params, state
+
+
+def _conv_bn(params, state, new_state, cfg, name, x, d, train, relu=True):
+    y = conv_apply(params[name], cfg, x, d["c_out"], d["k"], d["stride"])
+    y, st = bn_apply(params[name + "_bn"], state[name + "_bn"], y, train)
+    new_state[name + "_bn"] = st
+    if relu:
+        y = jax.nn.relu(y)
+    return y
+
+
+def resnet_apply(params: dict, state: dict, cfg: CNNConfig, x: jnp.ndarray,
+                 train: bool = False) -> tuple[jnp.ndarray, dict]:
+    """x: (B, H, W, 3) NHWC -> (logits, new_bn_state)."""
+    plan = {d["name"]: d for d in _resnet_layers(cfg)}
+    kind, blocks = _RESNET_DEF[cfg.depth]
+    new_state: dict = {}
+    y = _conv_bn(params, state, new_state, cfg, "stem", x, plan["stem"], train)
+    y = jax.lax.reduce_window(y, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
+                              (1, 2, 2, 1), "SAME")
+    for s, nb in enumerate(blocks):
+        for b in range(nb):
+            resid = y
+            if kind == "basic":
+                h = _conv_bn(params, state, new_state, cfg, f"s{s}b{b}c1", y,
+                             plan[f"s{s}b{b}c1"], train)
+                h = _conv_bn(params, state, new_state, cfg, f"s{s}b{b}c2", h,
+                             plan[f"s{s}b{b}c2"], train, relu=False)
+            else:
+                h = _conv_bn(params, state, new_state, cfg, f"s{s}b{b}c1", y,
+                             plan[f"s{s}b{b}c1"], train)
+                h = _conv_bn(params, state, new_state, cfg, f"s{s}b{b}c2", h,
+                             plan[f"s{s}b{b}c2"], train)
+                h = _conv_bn(params, state, new_state, cfg, f"s{s}b{b}c3", h,
+                             plan[f"s{s}b{b}c3"], train, relu=False)
+            if f"s{s}b{b}proj" in params:
+                resid = _conv_bn(params, state, new_state, cfg,
+                                 f"s{s}b{b}proj", y, plan[f"s{s}b{b}proj"],
+                                 train, relu=False)
+            y = jax.nn.relu(h + resid)
+    y = jnp.mean(y, axis=(1, 2))
+    logits = y @ params["head"]["w"].astype(y.dtype) + params["head"]["b"]
+    return logits, new_state
+
+
+# ---------------------------------------------------------------------------
+# SqueezeNet 1.1 (fire modules; OVSF on the 3x3 expand convs)
+# ---------------------------------------------------------------------------
+
+_FIRE = [  # (squeeze, expand1x1, expand3x3, stage)
+    (16, 64, 64, 0), (16, 64, 64, 0),
+    (32, 128, 128, 1), (32, 128, 128, 1),
+    (48, 192, 192, 2), (48, 192, 192, 2),
+    (64, 256, 256, 3), (64, 256, 256, 3),
+]
+
+
+def squeezenet_init(key: jax.Array, cfg: CNNConfig) -> tuple[dict, dict]:
+    wm = cfg.width_mult
+    ks = jax.random.split(key, 4 * len(_FIRE) + 2)
+    params: dict = {}
+    state: dict = {}
+    c_prev = max(8, int(64 * wm))
+    params["stem"] = conv_init(ks[0], cfg, 3, c_prev, 3, 1.0)
+    bnp, bns = bn_init(c_prev, cfg.act_dtype)
+    params["stem_bn"], state["stem_bn"] = bnp, bns
+    for i, (sq, e1, e3, stage) in enumerate(_FIRE):
+        sq, e1, e3 = (max(4, int(v * wm)) for v in (sq, e1, e3))
+        rho = cfg.block_rhos[stage]
+        params[f"f{i}s"] = conv_init(ks[4 * i + 1], cfg, c_prev, sq, 1, 1.0)
+        params[f"f{i}e1"] = conv_init(ks[4 * i + 2], cfg, sq, e1, 1, 1.0)
+        params[f"f{i}e3"] = conv_init(ks[4 * i + 3], cfg, sq, e3, 3, rho)
+        c_prev = e1 + e3
+    params["head_conv"] = conv_init(ks[-1], cfg, c_prev, cfg.num_classes, 1, 1.0)
+    return params, state
+
+
+def squeezenet_apply(params: dict, state: dict, cfg: CNNConfig,
+                     x: jnp.ndarray, train: bool = False
+                     ) -> tuple[jnp.ndarray, dict]:
+    wm = cfg.width_mult
+    new_state: dict = {}
+    y = conv_apply(params["stem"], cfg, x, max(8, int(64 * wm)), 3, 2)
+    y, st = bn_apply(params["stem_bn"], state["stem_bn"], y, train)
+    new_state["stem_bn"] = st
+    y = jax.nn.relu(y)
+    pool_after = {1, 3}
+    y = jax.lax.reduce_window(y, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
+                              (1, 2, 2, 1), "SAME")
+    for i, (sq, e1, e3, stage) in enumerate(_FIRE):
+        sq, e1, e3 = (max(4, int(v * wm)) for v in (sq, e1, e3))
+        s = jax.nn.relu(conv_apply(params[f"f{i}s"], cfg, y, sq, 1))
+        a = jax.nn.relu(conv_apply(params[f"f{i}e1"], cfg, s, e1, 1))
+        b = jax.nn.relu(conv_apply(params[f"f{i}e3"], cfg, s, e3, 3))
+        y = jnp.concatenate([a, b], axis=-1)
+        if i in pool_after:
+            y = jax.lax.reduce_window(y, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
+                                      (1, 2, 2, 1), "SAME")
+    y = conv_apply(params["head_conv"], cfg, y, cfg.num_classes, 1)
+    logits = jnp.mean(y, axis=(1, 2))
+    return logits, new_state
+
+
+def cnn_init(key, cfg: CNNConfig):
+    if cfg.depth == "squeezenet":
+        return squeezenet_init(key, cfg)
+    return resnet_init(key, cfg)
+
+
+def cnn_apply(params, state, cfg: CNNConfig, x, train=False):
+    if cfg.depth == "squeezenet":
+        return squeezenet_apply(params, state, cfg, x, train)
+    return resnet_apply(params, state, cfg, x, train)
+
+
+def cnn_loss(params, state, cfg: CNNConfig, x, labels, train=True):
+    logits, new_state = cnn_apply(params, state, cfg, x, train)
+    lg = logits.astype(jnp.float32)
+    nll = jax.nn.logsumexp(lg, -1) - jnp.take_along_axis(
+        lg, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(nll), (new_state, logits)

@@ -1,0 +1,50 @@
+"""Uniform entry points over the LM stack and the paper's CNNs."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from repro.configs import base as cbase
+from repro.models import transformer as T
+
+
+def model_init(key: jax.Array, cfg: cbase.ModelConfig) -> dict:
+    return T.model_init(key, cfg)
+
+
+def model_init_specs(cfg: cbase.ModelConfig) -> Any:
+    """ShapeDtypeStruct pytree of params (no allocation) via eval_shape."""
+    return jax.eval_shape(lambda k: T.model_init(k, cfg), jax.random.PRNGKey(0))
+
+
+def loss_fn(params, cfg: cbase.ModelConfig, batch):
+    return T.lm_loss(params, cfg, batch)
+
+
+def forward(params, cfg: cbase.ModelConfig, batch):
+    return T.model_apply(params, cfg, batch)
+
+
+def serve_prefill(params, cfg, batch, buffer_len):
+    return T.serve_prefill(params, cfg, batch, buffer_len)
+
+
+def serve_step(params, cfg, cache, tokens):
+    return T.serve_step(params, cfg, cache, tokens)
+
+
+def cache_spec(cfg, B, T_len):
+    return T.cache_spec(cfg, B, T_len)
+
+
+def init_cache(cfg, B, T_len):
+    return T.init_cache(cfg, B, T_len)
+
+
+def param_count(params) -> int:
+    return sum(v.size for v in jax.tree_util.tree_leaves(params))
+
+
+def param_count_from_specs(specs) -> int:
+    return sum(int(v.size) for v in jax.tree_util.tree_leaves(specs))

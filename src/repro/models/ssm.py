@@ -1,0 +1,235 @@
+"""Mamba-1 (falcon-mamba) and Mamba-2 (zamba2) state-space blocks.
+
+Sequence mixing is a chunked diagonal-SSM scan: ``lax.scan`` over chunks of
+``cfg.ssm_chunk`` steps carrying the state, with a parallel
+``lax.associative_scan`` inside each chunk. The expanded (chunk, B, ..., N)
+decay/input tensors are *built inside the chunk body* and the readout
+contraction runs before the next chunk, so peak memory is
+O(chunk * batch * state) instead of O(seq * batch * state) — this is what
+makes the long_500k cell feasible and is the SSM-side mirror of TiWGen's
+"generate the tile you are about to consume".
+
+The big in/out projection GEMMs (the bulk of SSM params and of decode weight
+traffic) go through ``layers.linear_*`` and are therefore OVSF-compressible;
+the scan parameters (A, dt, conv) are small and stay dense (DESIGN.md
+§Arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+def _assoc_combine(c1, c2):
+    a1, b1 = c1
+    a2, b2 = c2
+    return a1 * a2, a2 * b1 + b2
+
+
+def chunked_ssm_scan(inputs: tuple, h0: jnp.ndarray, chunk: int,
+                     build: Callable, contract: Callable
+                     ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Diagonal SSM h_t = a_t h_{t-1} + u_t with chunked materialisation.
+
+    inputs: pytree of (T, ...) arrays (T % chunk == 0; callers pad).
+    build(*chunk_inputs) -> (a, u) each (chunk, ..., state-shape).
+    contract(h_chunk, *chunk_inputs) -> y_chunk.
+    Returns (y: (T, ...), h_last).
+    """
+    T = jax.tree_util.tree_leaves(inputs)[0].shape[0]
+    assert T % chunk == 0, (T, chunk)
+    nc = T // chunk
+    chunked = jax.tree_util.tree_map(
+        lambda x: x.reshape((nc, chunk) + x.shape[1:]), inputs)
+
+    def step(h, cin):
+        a, u = build(*cin)
+        u = u.at[0].add(a[0] * h)
+        _, hh = jax.lax.associative_scan(_assoc_combine, (a, u), axis=0)
+        return hh[-1], contract(hh, *cin)
+
+    h_last, y = jax.lax.scan(step, h0, chunked)
+    return y.reshape((T,) + y.shape[2:]), h_last
+
+
+def _pad_time(x: jnp.ndarray, pad: int) -> jnp.ndarray:
+    if not pad:
+        return x
+    return jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)])
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 block (falcon-mamba-7b: d_model 4096, expand 2, N=16, conv 4)
+# ---------------------------------------------------------------------------
+
+def mamba1_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    d, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    dt_rank = max(d // 16, 1)
+    ks = jax.random.split(key, 6)
+    dtype = cfg.act_dtype
+    A = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": L.linear_init(ks[0], cfg, "mlp_in", d, 2 * di),
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv, di), dtype) * 0.2,
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": L.linear_init(ks[2], cfg, "proj_x", di, dt_rank + 2 * N),
+        "dt_proj": {"w": jax.random.normal(ks[3], (dt_rank, di), dtype)
+                    * float(np.sqrt(1 / dt_rank)),
+                    "b": jnp.log(jnp.expm1(0.01)) * jnp.ones((di,), dtype)},
+        "A_log": jnp.log(A),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": L.linear_init(ks[4], cfg, "mlp_out", di, d),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray]) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv. x: (B,S,di), w: (K,di). state: (B,K-1,di)."""
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)                 # (B, S+K-1, di)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :] for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else state
+    return y + b[None, None, :], new_state
+
+
+def mamba1_apply(p: dict, cfg: ModelConfig, x: jnp.ndarray, *,
+                 cache: Optional[dict] = None
+                 ) -> tuple[jnp.ndarray, Optional[dict]]:
+    """x: (B,S,d). cache: {"conv": (B,K-1,di), "ssm": (B,di,N)} for decode."""
+    B, S, d = x.shape
+    di, N = cfg.d_inner, cfg.ssm_state
+    dt_rank = max(d // 16, 1)
+
+    xz = L.linear_apply(p["in_proj"], x, cfg)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    conv_state = cache["conv"] if cache else None
+    xs, new_conv = _causal_conv(xs, p["conv_w"].astype(xs.dtype),
+                                p["conv_b"].astype(xs.dtype), conv_state)
+    xs = jax.nn.silu(xs.astype(jnp.float32))                 # (B,S,di) f32
+
+    proj = L.linear_apply(p["x_proj"], xs.astype(x.dtype), cfg)
+    dt, Bc, Cc = jnp.split(proj.astype(jnp.float32),
+                           [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"]["w"].astype(jnp.float32)
+                         + p["dt_proj"]["b"].astype(jnp.float32))  # (B,S,di)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))             # (di,N)
+
+    h0 = cache["ssm"] if cache else jnp.zeros((B, di, N), jnp.float32)
+
+    def build(dt_c, xs_c, B_c, C_c):
+        a = jnp.exp(dt_c[..., None] * A[None, None])         # (c,B,di,N)
+        u = (dt_c * xs_c)[..., None] * B_c[:, :, None, :]
+        return a, u
+
+    def contract(hh, dt_c, xs_c, B_c, C_c):
+        return jnp.einsum("tbdn,tbn->tbd", hh, C_c)
+
+    if S == 1:  # decode fast path: one state update, no scan
+        a1 = jnp.exp(dt[:, 0, :, None] * A[None])
+        h_last = a1 * h0 + (dt[:, 0] * xs[:, 0])[..., None] * Bc[:, 0, None, :]
+        y = jnp.einsum("bdn,bn->bd", h_last, Cc[:, 0])[:, None]
+    else:
+        pad = (-S) % cfg.ssm_chunk
+        ins = tuple(_pad_time(jnp.moveaxis(v, 1, 0), pad)
+                    for v in (dt, xs, Bc, Cc))
+        y_seq, h_last = chunked_ssm_scan(ins, h0, cfg.ssm_chunk, build, contract)
+        y = jnp.moveaxis(y_seq[:S], 0, 1)                    # (B,S,di)
+
+    y = y + p["D"][None, None] * xs
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = L.linear_apply(p["out_proj"], y.astype(x.dtype), cfg)
+    new_cache = ({"conv": new_conv, "ssm": h_last} if cache is not None else None)
+    return out, new_cache
+
+
+def mamba1_cache_spec(cfg: ModelConfig, B: int):
+    K, di, N = cfg.ssm_conv, cfg.d_inner, cfg.ssm_state
+    return {"conv": jax.ShapeDtypeStruct((B, K - 1, di), cfg.act_dtype),
+            "ssm": jax.ShapeDtypeStruct((B, di, N), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 block (zamba2: scalar decay per head, SSD-style)
+# ---------------------------------------------------------------------------
+
+def mamba2_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    d, di, N, P = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_head_dim
+    H = di // P
+    ks = jax.random.split(key, 4)
+    dtype = cfg.act_dtype
+    # in_proj emits [z(di), x(di), B(N), C(N), dt(H)]
+    return {
+        "in_proj": L.linear_init(ks[0], cfg, "mlp_in", d, 2 * di + 2 * N + H),
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv, di + 2 * N), dtype) * 0.2,
+        "conv_b": jnp.zeros((di + 2 * N,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "dt_bias": jnp.log(jnp.expm1(0.01)) * jnp.ones((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": L.rmsnorm_init(di, dtype),
+        "out_proj": L.linear_init(ks[2], cfg, "mlp_out", di, d),
+    }
+
+
+def mamba2_apply(p: dict, cfg: ModelConfig, x: jnp.ndarray, *,
+                 cache: Optional[dict] = None
+                 ) -> tuple[jnp.ndarray, Optional[dict]]:
+    """x: (B,S,d). cache: {"conv": (B,K-1,di+2N), "ssm": (B,H,P,N)}."""
+    B, S, d = x.shape
+    di, N, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_head_dim
+    H = di // P
+
+    zxbcdt = L.linear_apply(p["in_proj"], x, cfg)
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * N], axis=-1)
+    conv_state = cache["conv"] if cache else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"].astype(xbc.dtype),
+                                 p["conv_b"].astype(xbc.dtype), conv_state)
+    xbc = jax.nn.silu(xbc.astype(jnp.float32))
+    xs, Bc, Cc = jnp.split(xbc, [di, di + N], axis=-1)
+    xs = xs.reshape(B, S, H, P)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None])
+    A = -jnp.exp(p["A_log"])                                  # (H,)
+    h0 = cache["ssm"] if cache else jnp.zeros((B, H, P, N), jnp.float32)
+
+    def build(dt_c, xs_c, B_c, C_c):
+        a = jnp.exp(dt_c * A[None, None])                     # (c,B,H)
+        a = jnp.broadcast_to(a[..., None, None], a.shape + (P, N))
+        u = (dt_c[..., None] * xs_c)[..., None] * B_c[:, :, None, None, :]
+        return a, u                                            # (c,B,H,P,N)
+
+    def contract(hh, dt_c, xs_c, B_c, C_c):
+        return jnp.einsum("tbhpn,tbn->tbhp", hh, C_c)
+
+    if S == 1:
+        a1 = jnp.exp(dt[:, 0] * A[None])[:, :, None, None]
+        u1 = (dt[:, 0, :, None] * xs[:, 0])[..., None] * Bc[:, 0, None, None, :]
+        h_last = a1 * h0 + u1
+        y = jnp.einsum("bhpn,bn->bhp", h_last, Cc[:, 0])[:, None]
+    else:
+        pad = (-S) % cfg.ssm_chunk
+        ins = tuple(_pad_time(jnp.moveaxis(v, 1, 0), pad)
+                    for v in (dt, xs, Bc, Cc))
+        y_seq, h_last = chunked_ssm_scan(ins, h0, cfg.ssm_chunk, build, contract)
+        y = jnp.moveaxis(y_seq[:S], 0, 1)                     # (B,S,H,P)
+
+    y = y + p["D"][None, None, :, None] * xs
+    y = y.reshape(B, S, di) * jax.nn.silu(z.astype(jnp.float32))
+    y = L.rmsnorm_apply(p["norm"], y.astype(x.dtype), cfg.norm_eps)
+    out = L.linear_apply(p["out_proj"], y, cfg)
+    new_cache = ({"conv": new_conv, "ssm": h_last} if cache is not None else None)
+    return out, new_cache
+
+
+def mamba2_cache_spec(cfg: ModelConfig, B: int):
+    K, di, N, P = cfg.ssm_conv, cfg.d_inner, cfg.ssm_state, cfg.ssm_head_dim
+    H = di // P
+    return {"conv": jax.ShapeDtypeStruct((B, K - 1, di + 2 * N), cfg.act_dtype),
+            "ssm": jax.ShapeDtypeStruct((B, H, P, N), jnp.float32)}

@@ -1,0 +1,177 @@
+"""Path->PartitionSpec rules engine: DP/FSDP over 'data' (+'pod'), TP/EP over
+'model', SP for decode caches. One place owns every sharding decision so the
+dry-run, trainer and server agree.
+
+Conventions (see DESIGN.md §5):
+ - batch dims ............. ('pod','data') when present, else 'data'
+ - TP out-features ........ 'model' (attn q/k/v out, mlp up/gate out, vocab)
+ - TP in-features ......... 'model' (attn o in, mlp down in)
+ - FSDP ................... the non-TP matrix dim over 'data' (+'pod')
+ - experts ................ 'model' (EP); expert FSDP over 'data'
+ - stacked layer dim ...... unsharded
+ - decode KV cache ........ sequence over 'model' (flash-decoding SP),
+                            batch over 'data'
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def data_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _div(dim: int, n: int) -> bool:
+    return n > 0 and dim % n == 0
+
+
+class ShardingRules:
+    """Builds PartitionSpecs for params, batches and caches on a mesh."""
+
+    def __init__(self, mesh: Mesh, *, fsdp: bool = True,
+                 flash_decode_seq_shard: bool = True):
+        self.mesh = mesh
+        self.fsdp = fsdp
+        self.flash = flash_decode_seq_shard
+        self.tp = _axis_size(mesh, "model")
+        self.dp = int(np.prod([_axis_size(mesh, a) for a in data_axes(mesh)]))
+        self.daxes = data_axes(mesh)
+
+    # -- helpers ----------------------------------------------------------
+    def _fsdp_axis(self, dim: int):
+        """'data'(+'pod') if it divides the dim and FSDP is on, else None."""
+        if not self.fsdp:
+            return None
+        if _div(dim, self.dp):
+            return self.daxes if len(self.daxes) > 1 else self.daxes[0]
+        if _div(dim, _axis_size(self.mesh, "data")):
+            return "data"
+        return None
+
+    def _tp_axis(self, dim: int):
+        return "model" if _div(dim, self.tp) else None
+
+    # -- parameters -------------------------------------------------------
+    def param_spec(self, path: str, shape: tuple[int, ...]) -> P:
+        """path: '/'-joined key path, e.g. 'blocks/attn/q/w'."""
+        parts = path.split("/")
+        leaf = parts[-1]
+        name = "/".join(parts)
+
+        # stacked layer dim (blocks/...) occupies axis 0
+        stacked = parts[0] in ("blocks",) or "blocks" in parts[:2]
+        off = 1 if (stacked and len(shape) >= 2) else 0
+
+        if leaf in ("idx",):
+            return P()
+        if len(shape) - off <= 1:              # biases, norms, A_log, D, ...
+            return P(*([None] * len(shape)))
+
+        # expert banks: (L, E, d_in, d_out) or (L, E, J, d_out)
+        if "expert" in name or (parts[-2] in ("gate", "up", "down")
+                                and len(shape) - off == 3):
+            spec: list[Any] = [None] * len(shape)
+            spec[off] = self._tp_axis(shape[off])          # experts -> EP
+            spec[off + 1] = self._fsdp_axis(shape[off + 1])
+            return P(*spec)
+
+        # embeddings / unembeddings: (V, d) / (d, V)
+        if "embed" in name or "lm_head" in name:
+            a0 = self._tp_axis(shape[0]) if shape[0] > shape[1] else \
+                self._fsdp_axis(shape[0])
+            a1 = self._fsdp_axis(shape[1]) if shape[0] > shape[1] else \
+                self._tp_axis(shape[1])
+            return P(a0, a1)
+
+        # 2D matrices (+ optional stacked dim). TP on the "wide"/sharded
+        # feature side: out-features for q/k/v/up/gate/in_proj, in-features
+        # for o/down/out_proj.
+        d_in, d_out = shape[off], shape[off + 1]
+        tp_on_out = any(s in name for s in
+                        ("attn/q", "attn/k", "attn/v", "cross/q", "cross/k",
+                         "cross/v", "up", "gate", "in_proj", "alphas",
+                         "x_proj", "router"))
+        tp_on_in = any(s in name for s in ("attn/o", "cross/o", "down",
+                                           "out_proj", "dt_proj"))
+        spec = [None] * len(shape)
+        if tp_on_in and not tp_on_out:
+            spec[off] = self._tp_axis(d_in)
+            spec[off + 1] = self._fsdp_axis(d_out)
+        else:
+            spec[off] = self._fsdp_axis(d_in)
+            spec[off + 1] = self._tp_axis(d_out)
+        return P(*spec)
+
+    def params_specs(self, params: Any) -> Any:
+        """PartitionSpec pytree mirroring a params (or ShapeDtypeStruct) tree."""
+        flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+        specs = []
+        for path, leaf in flat:
+            spath = "/".join(_key_str(k) for k in path)
+            specs.append(self.param_spec(spath, leaf.shape))
+        return jax.tree_util.tree_unflatten(treedef, specs)
+
+    # -- batches ----------------------------------------------------------
+    def batch_spec(self, name: str, shape: tuple[int, ...]) -> P:
+        B = shape[0]
+        baxis: Any = None
+        if _div(B, self.dp):
+            baxis = self.daxes if len(self.daxes) > 1 else self.daxes[0]
+        elif _div(B, _axis_size(self.mesh, "data")):
+            baxis = "data"
+        return P(baxis, *([None] * (len(shape) - 1)))
+
+    def batch_specs(self, batch: dict) -> dict:
+        return {k: self.batch_spec(k, v.shape) for k, v in batch.items()}
+
+    # -- serving cache ----------------------------------------------------
+    def cache_spec_tree(self, cache: Any) -> Any:
+        """KV buffers (nl, B, T, Hkv, hd): batch->data, seq->model (SP).
+        SSM states (nl, B, ...): batch->data, inner dim -> model."""
+        def one(kpath, leaf):
+            name = "/".join(_key_str(k) for k in kpath)
+            shape = leaf.shape
+            if name == "pos":
+                return P()
+            spec: list[Any] = [None] * len(shape)
+            if len(shape) >= 2:
+                B = shape[1]
+                if _div(B, self.dp):
+                    spec[1] = self.daxes if len(self.daxes) > 1 else self.daxes[0]
+                elif _div(B, _axis_size(self.mesh, "data")):
+                    spec[1] = "data"
+            if name in ("k", "v", "xk", "xv") and len(shape) == 5:
+                if self.flash and _div(shape[2], self.tp):
+                    spec[2] = "model"                  # sequence-split KV (SP)
+                elif _div(shape[3], self.tp):
+                    spec[3] = "model"                  # fall back: head-split
+            if name in ("conv", "ssm") and len(shape) >= 3:
+                # shard the d_inner / heads dim over model
+                for ax in range(len(shape) - 1, 1, -1):
+                    if _div(shape[ax], self.tp):
+                        spec[ax] = "model"
+                        break
+            return P(*spec)
+        return jax.tree_util.tree_map_with_path(one, cache)
+
+    # -- conversion -------------------------------------------------------
+    def named(self, spec_tree: Any) -> Any:
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(self.mesh, s), spec_tree,
+            is_leaf=lambda x: isinstance(x, P))
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)

@@ -1,0 +1,103 @@
+"""AdamW with fp32 master state + LR schedules, built from scratch in JAX.
+
+With OVSF enabled the trainable tensors are the alpha coefficients, so the
+data-parallel gradient all-reduce traffic is already compressed by rho*L/d —
+the paper's compression helps the *collective* roofline term of training too
+(measured in EXPERIMENTS.md §Perf). ``repro.train.compress`` adds optional
+int8 error-feedback compression for the remaining dense tensors.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    weight_decay: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    schedule: str = "cosine"     # cosine | linear | constant
+
+
+def lr_at(cfg: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip((s - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    if cfg.schedule == "cosine":
+        decay = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    elif cfg.schedule == "linear":
+        decay = 1.0 - frac
+    else:
+        decay = 1.0
+    return cfg.lr * warm * decay
+
+
+def adamw_init(params: Any) -> dict:
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree_util.tree_map(zeros32, params),
+            "v": jax.tree_util.tree_map(zeros32, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _decay_mask(path) -> bool:
+    """Weight decay on matrices only (not norms/biases/idx)."""
+    name = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+    return not any(t in name for t in ("scale", "bias", "/b", "norm", "idx",
+                                       "A_log", "dt_bias", "/D"))
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)
+              if x.dtype != jax.dtypes.float0]
+    return jnp.sqrt(sum(leaves))
+
+
+def adamw_update(cfg: OptConfig, grads: Any, opt: dict, params: Any
+                 ) -> tuple[Any, dict, dict]:
+    """Returns (new_params, new_opt, metrics)."""
+    step = opt["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) \
+        if cfg.grad_clip > 0 else 1.0
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    flat_g, treedef = jax.tree_util.tree_flatten_with_path(grads)
+    flat_m = jax.tree_util.tree_leaves(opt["m"])
+    flat_v = jax.tree_util.tree_leaves(opt["v"])
+    flat_p = jax.tree_util.tree_leaves(params)
+
+    new_p, new_m, new_v = [], [], []
+    for (path, g), m, v, p in zip(flat_g, flat_m, flat_v, flat_p):
+        if not jnp.issubdtype(p.dtype, jnp.floating):   # idx buffers etc.
+            new_p.append(p)
+            new_m.append(m)
+            new_v.append(v)
+            continue
+        gf = g.astype(jnp.float32) * scale
+        m2 = b1 * m + (1 - b1) * gf
+        v2 = b2 * v + (1 - b2) * gf * gf
+        upd = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + cfg.eps)
+        if cfg.weight_decay and _decay_mask(path):
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        new_p.append((p.astype(jnp.float32) - lr * upd).astype(p.dtype))
+        new_m.append(m2)
+        new_v.append(v2)
+
+    unflat = lambda leaves: jax.tree_util.tree_unflatten(treedef, leaves)
+    metrics = {"lr": lr, "grad_norm": gnorm, "step": step}
+    return unflat(new_p), {"m": unflat(new_m), "v": unflat(new_v),
+                           "step": step}, metrics

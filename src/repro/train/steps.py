@@ -1,0 +1,119 @@
+"""jit-compiled distributed train / serve steps with explicit shardings.
+
+``make_train_step`` / ``make_prefill`` / ``make_decode_step`` return functions
+ready to jit with in/out shardings derived from ``ShardingRules``; the same
+builders are used by the launcher, by the dry-run (``.lower().compile()`` on
+the 512-device mesh) and by the smoke tests (1-device mesh).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import registry as R
+from repro.sharding.rules import ShardingRules
+from repro.train import optim
+
+
+def train_state_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    params = R.model_init(key, cfg)
+    return {"params": params, "opt": optim.adamw_init(params)}
+
+
+def train_state_specs(cfg: ModelConfig) -> Any:
+    return jax.eval_shape(
+        lambda k: train_state_init(k, cfg), jax.random.PRNGKey(0))
+
+
+def make_train_step(cfg: ModelConfig, ocfg: optim.OptConfig):
+    """(state, batch) -> (state, metrics); pure, jit/lower elsewhere."""
+
+    def step(state: dict, batch: dict):
+        def loss_of(p):
+            return R.loss_fn(p, cfg, batch)
+        # allow_int: OVSF idx buffers are int32 params (grads are float0,
+        # skipped by the optimizer)
+        (loss, aux_metrics), grads = jax.value_and_grad(
+            loss_of, has_aux=True, allow_int=True)(state["params"])
+        new_params, new_opt, m = optim.adamw_update(
+            ocfg, grads, state["opt"], state["params"])
+        metrics = {"total_loss": loss, **aux_metrics, **m}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return step
+
+
+def make_eval_step(cfg: ModelConfig):
+    def step(params: dict, batch: dict):
+        loss, metrics = R.loss_fn(params, cfg, batch)
+        return {"total_loss": loss, **metrics}
+    return step
+
+
+def make_prefill(cfg: ModelConfig, buffer_len: int):
+    def prefill(params: dict, batch: dict):
+        return R.serve_prefill(params, cfg, batch, buffer_len)
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig):
+    def step(params: dict, cache: dict, tokens: jnp.ndarray):
+        return R.serve_step(params, cfg, cache, tokens)
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Sharded jit wrappers
+# ---------------------------------------------------------------------------
+
+def jit_train_step(cfg: ModelConfig, ocfg: optim.OptConfig, mesh: Mesh,
+                   state_specs: Any, batch: dict[str, Any]):
+    """Returns a jit'd train step with explicit in/out shardings + donation."""
+    rules = ShardingRules(mesh, fsdp=cfg.fsdp,
+                          flash_decode_seq_shard=cfg.flash_decode_seq_shard)
+    pspecs = rules.params_specs(state_specs["params"])
+    state_sh = {"params": rules.named(pspecs),
+                "opt": {"m": rules.named(pspecs), "v": rules.named(pspecs),
+                        "step": NamedSharding(mesh, P())}}
+    batch_sh = rules.named(rules.batch_specs(batch))
+    metric_sh = NamedSharding(mesh, P())
+    fn = make_train_step(cfg, ocfg)
+    return jax.jit(fn,
+                   in_shardings=(state_sh, batch_sh),
+                   out_shardings=(state_sh, metric_sh),
+                   donate_argnums=(0,)), state_sh, batch_sh
+
+
+def jit_decode_step(cfg: ModelConfig, mesh: Mesh, param_specs: Any,
+                    cache_specs: Any):
+    rules = ShardingRules(mesh, fsdp=cfg.fsdp,
+                          flash_decode_seq_shard=cfg.flash_decode_seq_shard)
+    p_sh = rules.named(rules.params_specs(param_specs))
+    c_sh = rules.named(rules.cache_spec_tree(cache_specs))
+    B = jax.tree_util.tree_leaves(cache_specs)[0].shape[1] \
+        if cfg.family in ("ssm", "hybrid") else cache_specs["k"].shape[1]
+    tok_sh = rules.named(rules.batch_spec("tokens", (B, 1)))
+    out_sh = (rules.named(rules.batch_spec("logits", (B, cfg.vocab))), c_sh)
+    fn = make_decode_step(cfg)
+    return jax.jit(fn, in_shardings=(p_sh, c_sh, tok_sh),
+                   out_shardings=out_sh, donate_argnums=(1,)), p_sh, c_sh
+
+
+def jit_prefill(cfg: ModelConfig, mesh: Mesh, param_specs: Any,
+                batch: dict[str, Any], buffer_len: int):
+    rules = ShardingRules(mesh, fsdp=cfg.fsdp,
+                          flash_decode_seq_shard=cfg.flash_decode_seq_shard)
+    p_sh = rules.named(rules.params_specs(param_specs))
+    batch_sh = rules.named(rules.batch_specs(batch))
+    B = batch["tokens"].shape[0]
+    cache_specs = R.cache_spec(cfg, B, buffer_len)
+    c_sh = rules.named(rules.cache_spec_tree(cache_specs))
+    lg_sh = rules.named(rules.batch_spec("logits", (B, cfg.vocab)))
+    fn = make_prefill(cfg, buffer_len)
+    return jax.jit(fn, in_shardings=(p_sh, batch_sh),
+                   out_shardings=(lg_sh, c_sh)), p_sh, batch_sh

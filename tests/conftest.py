@@ -1,0 +1,12 @@
+import os
+import sys
+
+# Smoke tests and benches must see the default (1) device count — the 512-dev
+# XLA flag belongs ONLY to launch/dryrun.py (run in its own process).
+os.environ.pop("XLA_FLAGS", None)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,134 @@
+"""Per-architecture smoke tests (assignment: reduced config, one forward +
+train step on CPU, shape/NaN asserts) and decode-vs-full equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_smoke_config
+from repro.configs.base import ModelConfig, OVSFConfig
+from repro.models import registry as R
+from repro.models import transformer as T
+from repro.train import optim, steps
+
+
+def _batch_for(cfg, key, B=2, S=16):
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab)}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            key, (B, cfg.encoder_seq, cfg.d_model), dtype=cfg.act_dtype)
+    if cfg.family == "vlm":
+        n = min(cfg.vlm_image_tokens, S // 2)
+        batch["image_embeds"] = jax.random.normal(
+            key, (B, n, cfg.d_model), dtype=cfg.act_dtype)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    key = jax.random.PRNGKey(0)
+    params = R.model_init(key, cfg)
+    batch = _batch_for(cfg, key)
+    B, S = batch["tokens"].shape
+
+    logits, _, aux = T.model_apply(params, cfg, batch)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+    state = {"params": params, "opt": optim.adamw_init(params)}
+    step = steps.make_train_step(cfg, optim.OptConfig(warmup_steps=1))
+    state, m = jax.jit(step)(state, batch)
+    assert np.isfinite(float(m["total_loss"]))
+    assert np.isfinite(float(m["grad_norm"])) and float(m["grad_norm"]) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_serving(arch):
+    cfg = get_smoke_config(arch)
+    key = jax.random.PRNGKey(1)
+    params = R.model_init(key, cfg)
+    batch = _batch_for(cfg, key, B=2, S=12)
+    lg, cache = R.serve_prefill(params, cfg, batch, buffer_len=16)
+    assert lg.shape == (2, cfg.vocab)
+    lg2, cache = R.serve_step(params, cfg, cache,
+                              jnp.zeros((2, 1), jnp.int32))
+    assert lg2.shape == (2, cfg.vocab)
+    assert np.isfinite(np.asarray(lg2, np.float32)).all()
+    assert int(cache["pos"]) == 13
+
+
+def _mk(family, **kw):
+    base = dict(name="t", family=family, n_layers=2, d_model=64, n_heads=4,
+                n_kv_heads=2, d_ff=128, vocab=128, head_dim=16,
+                dtype="float32", remat=False)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@pytest.mark.parametrize("cfg", [
+    _mk("dense"),
+    _mk("dense", ovsf=OVSFConfig(enable=True, rho=0.5, min_dim=32,
+                                 exec_path="spectral")),
+    _mk("dense", ovsf=OVSFConfig(enable=True, rho=0.5, min_dim=32,
+                                 exec_path="materialize")),
+    _mk("moe", n_experts=4, top_k=2, d_ff=32, capacity_factor=2.0),
+    _mk("ssm", ssm_state=8, ssm_chunk=4, n_heads=0, n_kv_heads=0, d_ff=0),
+    _mk("hybrid", ssm_state=8, ssm_chunk=4, ssm_head_dim=16, attn_every=2,
+        n_layers=3),
+], ids=["dense", "ovsf_spectral", "ovsf_materialize", "moe", "ssm", "hybrid"])
+def test_decode_matches_full_forward(cfg):
+    """Incremental decoding must reproduce the full causal forward."""
+    key = jax.random.PRNGKey(0)
+    B, S = 2, 12
+    params = T.model_init(key, cfg)
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    full, _, _ = T.model_apply(params, cfg, {"tokens": toks})
+    lg, cache = T.serve_prefill(params, cfg, {"tokens": toks[:, :S - 3]},
+                                buffer_len=S)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, S - 4]),
+                               atol=2e-4, rtol=2e-4)
+    for i in range(S - 3, S):
+        lg, cache = T.serve_step(params, cfg, cache, toks[:, i:i + 1])
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, i]),
+                                   atol=5e-4, rtol=5e-4)
+
+
+def test_ovsf_convert_preserves_function():
+    """Converter (dense -> OVSF @ rho=1) leaves the model function intact."""
+    from repro.models import layers as L
+    cfg = _mk("dense")
+    key = jax.random.PRNGKey(3)
+    p = L.linear_init(key, cfg, "mlp_up", 64, 32)
+    x = jax.random.normal(key, (5, 64))
+    y_dense = L.linear_apply(p, x, cfg)
+    p_ovsf = L.linear_convert_to_ovsf(p, rho=1.0)
+    cfg_o = _mk("dense", ovsf=OVSFConfig(enable=True, rho=1.0, min_dim=16))
+    y_ovsf = L.linear_apply(p_ovsf, x, cfg_o)
+    np.testing.assert_allclose(np.asarray(y_dense), np.asarray(y_ovsf),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_vlm_image_positions_masked_in_loss():
+    cfg = _mk("vlm", vlm_image_tokens=4)
+    key = jax.random.PRNGKey(4)
+    params = T.model_init(key, cfg)
+    batch = {"tokens": jax.random.randint(key, (2, 12), 0, cfg.vocab),
+             "image_embeds": jax.random.normal(key, (2, 4, 64))}
+    loss, m = T.lm_loss(params, cfg, batch)
+    assert np.isfinite(float(loss))
+
+
+def test_int8_kv_cache_decode_close():
+    cfg = _mk("dense", kv_cache_dtype="int8")
+    cfg_ref = _mk("dense")
+    key = jax.random.PRNGKey(5)
+    params = T.model_init(key, cfg_ref)
+    toks = jax.random.randint(key, (2, 10), 0, cfg.vocab)
+    full, _, _ = T.model_apply(params, cfg_ref, {"tokens": toks})
+    lg, cache = T.serve_prefill(params, cfg, {"tokens": toks[:, :-1]}, 10)
+    lg, cache = T.serve_step(params, cfg, cache, toks[:, -1:])
+    # int8 KV is lossy but should track the fp logits closely
+    err = float(jnp.abs(lg - full[:, -1]).max())
+    ref = float(jnp.abs(full[:, -1]).max())
+    assert err < 0.15 * max(ref, 1.0), (err, ref)

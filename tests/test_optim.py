@@ -1,0 +1,83 @@
+"""Optimizer + gradient compression tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import compress, optim
+
+
+def test_adamw_converges_on_quadratic():
+    cfg = optim.OptConfig(lr=0.1, warmup_steps=1, total_steps=200,
+                          weight_decay=0.0, schedule="constant")
+    target = jnp.array([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    opt = optim.adamw_init(params)
+    for _ in range(150):
+        g = {"w": 2 * (params["w"] - target)}
+        params, opt, m = optim.adamw_update(cfg, g, opt, params)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=0.05)
+
+
+def test_lr_schedule_shapes():
+    cfg = optim.OptConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    lrs = [float(optim.lr_at(cfg, jnp.int32(s))) for s in (0, 5, 10, 55, 100)]
+    assert lrs[0] == 0.0
+    assert lrs[1] == pytest.approx(0.5)
+    assert lrs[2] == pytest.approx(1.0)
+    assert 0 < lrs[3] < 1.0
+    assert lrs[4] == pytest.approx(0.0, abs=1e-6)
+
+
+def test_grad_clip_bounds_update():
+    cfg = optim.OptConfig(lr=1.0, warmup_steps=1, grad_clip=1.0,
+                          schedule="constant", weight_decay=0.0)
+    params = {"w": jnp.zeros(4)}
+    opt = optim.adamw_init(params)
+    g = {"w": jnp.full(4, 1e6)}
+    p2, opt, m = optim.adamw_update(cfg, g, opt, params)
+    assert float(m["grad_norm"]) > 1e5
+    assert np.isfinite(np.asarray(p2["w"])).all()
+
+
+def test_int_params_skipped():
+    cfg = optim.OptConfig(warmup_steps=1)
+    params = {"w": jnp.ones(3), "idx": jnp.arange(4, dtype=jnp.int32)}
+    opt = optim.adamw_init(params)
+    g = jax.grad(lambda p: jnp.sum(p["w"]), allow_int=True)(params)
+    p2, opt, _ = optim.adamw_update(cfg, g, opt, params)
+    np.testing.assert_array_equal(np.asarray(p2["idx"]), np.arange(4))
+
+
+def test_quantize_roundtrip_error_bounded():
+    g = jax.random.normal(jax.random.PRNGKey(0), (128,))
+    q, s = compress.quantize(g)
+    back = compress.dequantize(q, s)
+    assert float(jnp.abs(back - g).max()) <= float(s) * 0.5 + 1e-6
+
+
+def test_error_feedback_compensates():
+    """EF: mean of dequantized grads -> true mean over steps (bias-free)."""
+    key = jax.random.PRNGKey(1)
+    g_const = {"w": jax.random.normal(key, (64,)) * 1e-3}
+    err = compress.ef_init(g_const)
+    acc = jnp.zeros(64)
+    n = 50
+    for _ in range(n):
+        q, s, err, ratio = compress.compress_with_feedback(g_const, err)
+        acc = acc + compress.decompress(q, s)["w"]
+    np.testing.assert_allclose(np.asarray(acc / n), np.asarray(g_const["w"]),
+                               rtol=0.05, atol=1e-5)
+    assert ratio < 0.3   # int8 vs f32
+
+
+def test_decay_mask():
+    assert optim._decay_mask([_K("blocks"), _K("attn"), _K("q"), _K("w")])
+    assert not optim._decay_mask([_K("blocks"), _K("norm1"), _K("scale")])
+    assert not optim._decay_mask([_K("blocks"), _K("attn"), _K("q"), _K("b")])
+
+
+class _K:
+    def __init__(self, key):
+        self.key = key

@@ -1,0 +1,117 @@
+"""Property tests for the OVSF core (paper §2.2/2.3/6.1 claims)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ovsf
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("ci")
+
+
+@pytest.mark.parametrize("L", [2, 8, 64, 256])
+def test_hadamard_orthogonality(L):
+    H = np.asarray(ovsf.hadamard_matrix(L))
+    assert set(np.unique(H)) <= {-1.0, 1.0}
+    np.testing.assert_allclose(H @ H.T, L * np.eye(L), atol=1e-4)
+
+
+@pytest.mark.parametrize("L", [4, 32, 128, 1024])
+def test_fwht_equals_matmul(L):
+    x = jax.random.normal(jax.random.PRNGKey(0), (3, L))
+    H = ovsf.hadamard_matrix(L)
+    np.testing.assert_allclose(np.asarray(ovsf.fwht(x)), np.asarray(x @ H),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_fwht_inverse():
+    x = jax.random.normal(jax.random.PRNGKey(1), (5, 64))
+    np.testing.assert_allclose(np.asarray(ovsf.ifwht(ovsf.fwht(x))),
+                               np.asarray(x), rtol=1e-5, atol=1e-5)
+
+
+@hypothesis.given(d=st.integers(3, 200), seed=st.integers(0, 2**31 - 1))
+def test_rho1_reconstruction_exact(d, seed):
+    """rho=1 reconstruction (with pad/crop for non-pow2 d) is exact."""
+    w = jax.random.normal(jax.random.PRNGKey(seed), (2, d))
+    al = ovsf.regress_alphas(w)
+    idx, kept = ovsf.select_basis(al, 1.0)
+    w2 = ovsf.reconstruct(kept, idx, d)
+    np.testing.assert_allclose(np.asarray(w2), np.asarray(w),
+                               rtol=1e-3, atol=1e-3)
+
+
+@hypothesis.given(seed=st.integers(0, 2**31 - 1))
+def test_error_monotone_in_rho(seed):
+    """Eq. (2): reconstruction error decreases as rho rises."""
+    d = 64
+    w = jax.random.normal(jax.random.PRNGKey(seed), (4, d))
+    al = ovsf.regress_alphas(w)
+    errs = []
+    for rho in (0.125, 0.25, 0.5, 0.75, 1.0):
+        idx, kept = ovsf.select_basis(al, rho)
+        err = float(jnp.linalg.norm(ovsf.reconstruct(kept, idx, d) - w))
+        errs.append(err)
+    for a, b in zip(errs[1:], errs[:-1]):
+        assert a <= b + 1e-4, errs
+
+
+@hypothesis.given(seed=st.integers(0, 2**31 - 1),
+                  rho=st.sampled_from([0.125, 0.25, 0.5]))
+def test_iterative_beats_sequential(seed, rho):
+    """Table 3: iterative (top-|alpha|) drop is L2-optimal for an orthogonal
+    basis, hence never worse than taking the first rho*L codes."""
+    spec_i = ovsf.OVSFSpec(96, 16, rho=rho, strategy="iterative")
+    spec_s = ovsf.OVSFSpec(96, 16, rho=rho, strategy="sequential")
+    W = jax.random.normal(jax.random.PRNGKey(seed), (96, 16))
+    ei = float(jnp.linalg.norm(
+        ovsf.decompress_matrix(ovsf.compress_matrix(W, spec_i), spec_i) - W))
+    es = float(jnp.linalg.norm(
+        ovsf.decompress_matrix(ovsf.compress_matrix(W, spec_s), spec_s) - W))
+    assert ei <= es + 1e-5
+
+
+def test_reconstruct_matmul_equals_fwht_path():
+    w = jax.random.normal(jax.random.PRNGKey(2), (3, 50))
+    al = ovsf.regress_alphas(w)
+    idx, kept = ovsf.select_basis(al, 0.5)
+    a = ovsf.reconstruct(kept, idx, 50)
+    b = ovsf.reconstruct_matmul(kept, idx, 50)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_extract_kxk_crop_and_adaptive():
+    w4 = jax.random.normal(jax.random.PRNGKey(3), (5, 2, 4, 4))
+    crop = ovsf.extract_kxk(w4, 3, "crop")
+    assert crop.shape == (5, 2, 3, 3)
+    np.testing.assert_allclose(np.asarray(crop), np.asarray(w4[..., :3, :3]))
+    ad = ovsf.extract_kxk(w4, 3, "adaptive")
+    assert ad.shape == (5, 2, 3, 3)
+    # adaptive pooling of a constant filter is the same constant
+    const = jnp.ones((1, 1, 4, 4))
+    np.testing.assert_allclose(np.asarray(ovsf.extract_kxk(const, 3,
+                                                           "adaptive")), 1.0)
+
+
+def test_spec_compression_accounting():
+    spec = ovsf.OVSFSpec(2048, 512, rho=0.25)
+    assert spec.L == 2048 and spec.n_keep == 512
+    assert spec.compression == pytest.approx(0.25)
+    # non-pow2 d_in pays the padding tax (documented in DESIGN.md)
+    spec = ovsf.OVSFSpec(5120, 512, rho=0.5)
+    assert spec.L == 8192
+    assert spec.compression == pytest.approx(0.5 * 8192 / 5120)
+
+
+def test_init_variance_matches_fan_in():
+    spec = ovsf.OVSFSpec(256, 4096, rho=0.25)
+    p = ovsf.init_ovsf(jax.random.PRNGKey(4), spec)
+    W = ovsf.decompress_matrix(p, spec)
+    std = float(W.std())
+    assert abs(std - (1 / 256) ** 0.5) < 0.2 * (1 / 256) ** 0.5

@@ -1,0 +1,46 @@
+"""GPipe-over-pod pipeline: must equal the sequential layer stack.
+
+Runs in a subprocess so the 8-device XLA flag never leaks into other tests
+(jax locks device count on first init).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys; sys.path.insert(0, "src")
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.train.pipeline import gpipe_apply
+
+mesh = jax.make_mesh((4, 2, 1), ("pod", "data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*3)
+cfg = ModelConfig(name="t", family="dense", n_layers=8, d_model=64, n_heads=4,
+                  n_kv_heads=2, d_ff=128, vocab=128, head_dim=16,
+                  dtype="float32", remat=False)
+key = jax.random.PRNGKey(0)
+params = T.model_init(key, cfg)
+x = jax.random.normal(key, (8, 16, 64)) * 0.1
+ref, _, _ = T._trunk(params, cfg, x, positions=jnp.arange(16), enc_out=None,
+                     cache=None, cache_pos=None, remat=False)
+out = gpipe_apply(mesh, cfg, params["blocks"], x, n_micro=4)
+np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                           rtol=2e-4, atol=2e-4)
+print("PIPELINE_OK")
+"""
+
+
+@pytest.mark.slow
+def test_gpipe_matches_sequential_stack():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", _SCRIPT],
+                         capture_output=True, text=True, timeout=540,
+                         cwd=os.path.join(os.path.dirname(__file__), ".."),
+                         env=env)
+    assert "PIPELINE_OK" in res.stdout, res.stdout + res.stderr
