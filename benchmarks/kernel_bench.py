@@ -4,9 +4,13 @@ CPU wall-clock is NOT the TPU story (interpret-mode Pallas is a correctness
 tool); the meaningful output here is (a) jnp-path relative timings on CPU as
 a sanity signal and (b) the analytical per-path roofline terms for a
 representative decode-shaped GEMM on v5e constants.
+
+Emits a machine-readable ``BENCH_kernels.json`` next to the CSV lines so the
+perf trajectory is comparable across PRs.
 """
 from __future__ import annotations
 
+import json
 import os
 import sys
 import time
@@ -23,17 +27,23 @@ from repro.kernels import ops
 
 
 def _time(fn, *args, reps=5) -> float:
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    """Median-free mean wall time in us, after exactly one warmup call."""
+    jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
     for _ in range(reps):
         jax.block_until_ready(fn(*args))
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def run(print_fn=print) -> list[dict]:
+def run(print_fn=print, smoke: bool = False,
+        json_path: str = "") -> list[dict]:
+    json_path = json_path or (
+        "BENCH_kernels_smoke.json" if smoke else "BENCH_kernels.json")
     rows = []
-    M, d_in, d_out, rho = 16, 2048, 2048, 0.5
+    if smoke:
+        M, d_in, d_out, rho, reps = 8, 512, 512, 0.5, 2
+    else:
+        M, d_in, d_out, rho, reps = 16, 2048, 2048, 0.5, 5
     key = jax.random.PRNGKey(0)
     W = jax.random.normal(key, (d_in, d_out)) * 0.02
     x = jax.random.normal(key, (M, d_in))
@@ -45,12 +55,18 @@ def run(print_fn=print) -> list[dict]:
         a, al, ix, path="spectral", use_pallas=False))
     mat = jax.jit(lambda a, al, ix: ops.ovsf_matmul(
         a, al, ix, path="materialize", use_pallas=False))
+    fused = jax.jit(lambda a, al, ix: ops.ovsf_matmul(
+        a, al, ix, path="fused", use_pallas=False))
 
-    t_dense = _time(dense, x, W)
-    t_spec = _time(spectral, x, p["alphas"], p["idx"])
-    t_mat = _time(mat, x, p["alphas"], p["idx"])
+    t_dense = _time(dense, x, W, reps=reps)
+    t_spec = _time(spectral, x, p["alphas"], p["idx"], reps=reps)
+    t_mat = _time(mat, x, p["alphas"], p["idx"], reps=reps)
+    t_fused = _time(fused, x, p["alphas"], p["idx"], reps=reps)
+    # off-TPU the fused path runs the f32 decompress-then-GEMM oracle, not
+    # the TiWGen kernel — label it _ref so trajectories don't misread it
+    fused_name = "ovsf_fused" if ops.on_tpu() else "ovsf_fused_ref"
     for name, t in [("dense", t_dense), ("ovsf_spectral", t_spec),
-                    ("ovsf_materialize", t_mat)]:
+                    ("ovsf_materialize", t_mat), (fused_name, t_fused)]:
         print_fn(f"kernel_bench,cpu_wall,{name},{t:.1f}us")
         rows.append(dict(kind="cpu", name=name, us=t))
 
@@ -68,8 +84,16 @@ def run(print_fn=print) -> list[dict]:
     t = pm.layer_timing(ld)
     print_fn(f"kernel_bench,v5e_model,dense,ii={t.ii*1e6:.2f}us,bound={t.bound}")
     rows.append(dict(kind="v5e", name="dense", ii_us=t.ii * 1e6, bound=t.bound))
+
+    if json_path:
+        payload = {"bench": "kernels", "smoke": smoke,
+                   "shape": dict(M=M, d_in=d_in, d_out=d_out, rho=rho),
+                   "backend": jax.default_backend(), "rows": rows}
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        print_fn(f"kernel_bench,json,{json_path}")
     return rows
 
 
 if __name__ == "__main__":
-    run()
+    run(smoke="--smoke" in sys.argv)

@@ -14,8 +14,8 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from benchmarks import (kernel_bench, table1_autotune, table3_basis,
-                        table45_throughput, table6_squeezenet,
+from benchmarks import (kernel_bench, serving_bench, table1_autotune,
+                        table3_basis, table45_throughput, table6_squeezenet,
                         table10_balance)
 
 SECTIONS = {
@@ -25,11 +25,17 @@ SECTIONS = {
     "table6": table6_squeezenet.run,
     "table10": table10_balance.run,
     "kernels": kernel_bench.run,
+    "serving": serving_bench.run,
 }
+
+# sections that understand the reduced --smoke mode (fast CI signal)
+SMOKE_AWARE = {"kernels", "serving"}
 
 
 def main() -> None:
-    which = sys.argv[1:] or list(SECTIONS)
+    args = [a for a in sys.argv[1:] if a != "--smoke"]
+    smoke = "--smoke" in sys.argv[1:]
+    which = args or list(SECTIONS)
     for name in which:
         fn = SECTIONS.get(name)
         if fn is None:
@@ -37,11 +43,14 @@ def main() -> None:
             continue
         t0 = time.perf_counter()
         print(f"== {name} ==")
-        fn()
+        if smoke and name in SMOKE_AWARE:
+            fn(smoke=True)
+        else:
+            fn()
         print(f"== {name} done in {time.perf_counter() - t0:.1f}s ==")
 
     # roofline summary (if the dry-run has been run)
-    if os.path.isdir("results/dryrun") and not sys.argv[1:]:
+    if os.path.isdir("results/dryrun") and not args:
         print("== roofline (from results/dryrun) ==")
         try:
             from benchmarks import roofline

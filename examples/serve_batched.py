@@ -26,14 +26,16 @@ def main() -> None:
         n_kv_heads=2, head_dim=32)
     rng = np.random.default_rng(0)
 
-    for label, ovsf in [
-        ("dense", OVSFConfig(enable=False)),
+    for label, ovsf, use_mapper in [
+        ("dense", OVSFConfig(enable=False), False),
         ("ovsf50-spectral", OVSFConfig(enable=True, rho=0.5, min_dim=64,
-                                       exec_path="spectral")),
+                                       exec_path="spectral"), False),
+        ("ovsf50-mapper", OVSFConfig(enable=True, rho=0.5, min_dim=64), True),
     ]:
         cfg = base.replace(ovsf=ovsf)
         params = R.model_init(jax.random.PRNGKey(0), cfg)
-        eng = ServingEngine(params, cfg, batch_slots=4, buffer_len=96)
+        eng = ServingEngine(params, cfg, batch_slots=4, buffer_len=96,
+                            use_mapper=use_mapper)
         for rid in range(8):
             plen = int(rng.integers(8, 24))
             eng.submit(Request(rid, rng.integers(0, cfg.vocab, plen,

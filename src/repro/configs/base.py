@@ -92,6 +92,10 @@ class ModelConfig:
     fsdp: bool = True           # shard params over 'data'; False replicates
                                 # (decode: kills per-step weight all-gathers)
     ovsf: OVSFConfig = dataclasses.field(default_factory=OVSFConfig)
+    # Hardware-aware per-layer execution plan (runtime.mapper.ExecutionPlan).
+    # None -> legacy uniform dispatch via ovsf.exec_path. Frozen/hashable so
+    # the config stays a valid jit-closure constant.
+    exec_plan: Optional[Any] = None
 
     @property
     def hd(self) -> int:

@@ -19,7 +19,7 @@ All paths are numerically validated against each other in tests.
 from __future__ import annotations
 
 import functools
-from typing import Literal
+from typing import Any, Literal, Optional
 
 import jax
 import jax.numpy as jnp
@@ -104,13 +104,87 @@ def spectral_matmul(x: jnp.ndarray, alphas: jnp.ndarray, idx: jnp.ndarray,
     return (xk @ alphas.astype(xk.dtype)).astype(x.dtype)
 
 
+# ---------------------------------------------------------------------------
+# Decompressed-weight cache (mapper policy: weight-stationary layers)
+# ---------------------------------------------------------------------------
+# The mapper marks layers where the materialize path wins AND the same alphas
+# are consumed repeatedly (serving decode: params frozen across thousands of
+# steps; training: fwd+bwd within one step). For those we generate dense W
+# once per parameter version and reuse it, instead of re-running the
+# generator every invocation. Entries hold a strong ref to the source alphas
+# so the ``is`` identity check can never alias a recycled object id; a layer
+# re-keying (new params) simply overwrites its slot, so the cache holds at
+# most one (alphas, W) pair per cache_key.
+
+_WEIGHT_CACHE: dict[str, tuple[Any, Any, jnp.ndarray]] = {}
+
+
+def clear_weight_cache() -> None:
+    _WEIGHT_CACHE.clear()
+
+
+def weight_cache_stats() -> dict:
+    return {"entries": len(_WEIGHT_CACHE),
+            "bytes": sum(int(w.size) * w.dtype.itemsize
+                         for *_s, w in _WEIGHT_CACHE.values())}
+
+
+def cached_generate(cache_key: str, alphas: jnp.ndarray, idx: jnp.ndarray,
+                    gen_fn) -> jnp.ndarray:
+    """Memoise ``gen_fn()`` per (cache_key, parameter identity).
+
+    Only concrete arrays are cached — under a jit trace the operands are
+    tracers and caching would leak abstract values, so we fall through to the
+    generator (XLA CSEs duplicate generation within one program; the cache's
+    job is reuse *across* program invocations in eager serving)."""
+    if isinstance(alphas, jax.core.Tracer) or isinstance(idx, jax.core.Tracer):
+        return gen_fn()
+    ent = _WEIGHT_CACHE.get(cache_key)
+    if ent is not None and ent[0] is alphas and ent[1] is idx:
+        return ent[2]
+    W = gen_fn()
+    _WEIGHT_CACHE[cache_key] = (alphas, idx, W)
+    return W
+
+
+def cached_decompress(alphas: jnp.ndarray, idx: jnp.ndarray, d_in: int, *,
+                      cache_key: str, use_pallas: bool | None = None,
+                      interpret: bool = False) -> jnp.ndarray:
+    """``decompress`` with once-per-parameter-version memoisation.
+
+    Handles an (E, J, d_out) expert bank by vmapping the generator over the
+    leading axis (shared idx), mirroring ``moe._expert_matmul``."""
+    def gen():
+        if alphas.ndim == 3:
+            return jax.vmap(lambda a: decompress(
+                a, idx, d_in, use_pallas=use_pallas,
+                interpret=interpret))(alphas)
+        return decompress(alphas, idx, d_in, use_pallas=use_pallas,
+                          interpret=interpret)
+    return cached_generate(cache_key, alphas, idx, gen)
+
+
 def ovsf_matmul(x: jnp.ndarray, alphas: jnp.ndarray, idx: jnp.ndarray, *,
                 path: ExecPath = "materialize",
+                plan: Optional[Any] = None,
                 use_pallas: bool | None = None,
                 interpret: bool = False,
                 block_m: int = 128, block_n: int = 128,
                 block_k: int = 128, block_j: int = 128) -> jnp.ndarray:
-    """Dispatch y = x @ W(alphas, idx) over (..., d_in) activations."""
+    """Dispatch y = x @ W(alphas, idx) over (..., d_in) activations.
+
+    ``plan`` (a ``runtime.mapper.LayerPlan``) overrides path, Pallas block
+    sizes, and the decompress-cache policy — the hardware-aware per-layer
+    dispatch of paper §5. Without a plan, behaviour is the legacy explicit
+    ``path=`` dispatch with default blocks.
+    """
+    cache_key = ""
+    if plan is not None:
+        path = plan.path  # type: ignore[assignment]
+        block_m, block_n = plan.block_m, plan.block_n
+        block_k, block_j = plan.block_k, plan.block_j
+        if plan.cache_weights:
+            cache_key = plan.cache_key or f"ovsf:{id(alphas)}"
     if use_pallas is None:
         use_pallas = on_tpu()
     lead = x.shape[:-1]
@@ -129,8 +203,12 @@ def ovsf_matmul(x: jnp.ndarray, alphas: jnp.ndarray, idx: jnp.ndarray, *,
         else:
             y = kref.ovsf_matmul_ref(x2, alphas, idx)
     elif path == "materialize":
-        W = decompress(alphas, idx, d_in, use_pallas=use_pallas,
-                       interpret=interpret)
+        if cache_key:
+            W = cached_decompress(alphas, idx, d_in, cache_key=cache_key,
+                                  use_pallas=use_pallas, interpret=interpret)
+        else:
+            W = decompress(alphas, idx, d_in, use_pallas=use_pallas,
+                           interpret=interpret)
         y = (x2 @ W.astype(x2.dtype)).astype(x.dtype)
     else:
         raise ValueError(f"unknown exec path: {path}")

@@ -153,6 +153,11 @@ def ovsf_gemm(x: jnp.ndarray, alphas: jnp.ndarray, idx: jnp.ndarray, *,
         out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
         out_shape=jax.ShapeDtypeStruct((Mp, Np), x.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        # (m, n) grid dims are independent output tiles; only the k-loop
+        # carries the accumulator. Declaring this lets the Mosaic pipeline
+        # parallelise/overlap across m/n while keeping k sequential.
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(idxp, xp, alp)
     return out[:M, :d_out]
@@ -206,6 +211,8 @@ def ovsf_decompress(alphas: jnp.ndarray, idx: jnp.ndarray, *, d_in: int,
         ],
         out_specs=pl.BlockSpec((bk, bn), lambda k, n: (k, n)),
         out_shape=jax.ShapeDtypeStruct((Kp, Np), alphas.dtype),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(idxp, alp)
     return out[:d_in, :d_out]

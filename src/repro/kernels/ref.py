@@ -18,10 +18,19 @@ def fwht_ref(x: jnp.ndarray) -> jnp.ndarray:
 
 def ovsf_decompress_ref(alphas: jnp.ndarray, idx: jnp.ndarray, d_in: int
                         ) -> jnp.ndarray:
-    """(n_keep, d_out) alphas + (n_keep,) code ids -> dense (d_in, d_out) W.
+    """(J, d_out) alphas + code ids -> dense (d_in, d_out) W.
 
-    W[k, n] = sum_j H[idx[j], k] * alphas[j, n],  k < d_in (crop of length-L codes).
+    Monolithic idx (J,): W[k, n] = sum_j H[idx[j], k] * alphas[j, n], k < d_in
+    (crop of length-L codes). Segmented idx (n_seg, n_keep): block-diagonal
+    basis — each segment's codes only touch its own length-L0 slice (Alg. 1).
     """
+    if idx.ndim == 2:
+        ns, nk = idx.shape
+        L0 = d_in // ns
+        al = alphas.reshape(ns, nk, alphas.shape[-1])
+        S = ovsf.hadamard_matrix(L0, dtype=alphas.dtype)[idx]    # (ns, nk, L0)
+        w = jnp.einsum("sjl,sjd->sld", S, al)                    # (ns, L0, d_out)
+        return w.reshape(d_in, alphas.shape[-1])
     L = ovsf.next_pow2(d_in)
     S = ovsf.hadamard_matrix(L, dtype=alphas.dtype)[idx, :d_in]  # (n_keep, d_in)
     return S.T @ alphas

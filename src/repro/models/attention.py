@@ -70,10 +70,10 @@ def attn_apply(p: dict, cfg: ModelConfig, x: jnp.ndarray, *,
     """Returns (output, updated_cache)."""
     H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     B, S, _ = x.shape
-    q = _split_heads(L.linear_apply(p["q"], x, cfg), H, hd)
+    q = _split_heads(L.linear_apply(p["q"], x, cfg, "attn_q"), H, hd)
     src = kv_src if kv_src is not None else x
-    k = _split_heads(L.linear_apply(p["k"], src, cfg), Hkv, hd)
-    v = _split_heads(L.linear_apply(p["v"], src, cfg), Hkv, hd)
+    k = _split_heads(L.linear_apply(p["k"], src, cfg, "attn_k"), Hkv, hd)
+    v = _split_heads(L.linear_apply(p["v"], src, cfg, "attn_v"), Hkv, hd)
 
     if mode != "cross":
         q = L.apply_rope(q, positions, cfg.rope_theta)
@@ -106,15 +106,15 @@ def attn_apply(p: dict, cfg: ModelConfig, x: jnp.ndarray, *,
             mask = None
         out = sdpa(q, k, v, mask)
 
-    y = L.linear_apply(p["o"], out.reshape(B, S, H * hd), cfg)
+    y = L.linear_apply(p["o"], out.reshape(B, S, H * hd), cfg, "attn_o")
     return y, new_cache
 
 
 def make_cross_cache(p: dict, cfg: ModelConfig, src: jnp.ndarray) -> dict:
     """Precompute encoder K/V for cross attention (prefill of enc-dec)."""
     Hkv, hd = cfg.n_kv_heads, cfg.hd
-    k = _split_heads(L.linear_apply(p["k"], src, cfg), Hkv, hd)
-    v = _split_heads(L.linear_apply(p["v"], src, cfg), Hkv, hd)
+    k = _split_heads(L.linear_apply(p["k"], src, cfg, "attn_k"), Hkv, hd)
+    v = _split_heads(L.linear_apply(p["v"], src, cfg, "attn_v"), Hkv, hd)
     return {"k": k, "v": v}
 
 

@@ -39,6 +39,9 @@ class CNNConfig:
     strategy: str = "iterative"      # iterative | sequential (Table 3)
     width_mult: float = 1.0          # reduced smoke variants
     dtype: str = "float32"
+    # Hardware-aware per-conv plan (runtime.mapper.ExecutionPlan); None ->
+    # legacy uniform materialize dispatch for the im2col GEMMs.
+    exec_plan: Optional[object] = None
 
     @property
     def act_dtype(self):
@@ -86,9 +89,10 @@ def conv_weights(p: dict, cfg: CNNConfig, c_in: int, c_out: int, k: int
 
 
 def conv_apply(p: dict, cfg: CNNConfig, x: jnp.ndarray, c_out: int, k: int,
-               stride: int = 1) -> jnp.ndarray:
+               stride: int = 1, name: str = "") -> jnp.ndarray:
     """NHWC conv. OVSF layers in matrix mode run im2col + on-the-fly GEMM,
-    mirroring the paper's engine; spatial mode reconstructs then convolves."""
+    mirroring the paper's engine; spatial mode reconstructs then convolves.
+    ``name`` keys the per-conv mapper plan when ``cfg.exec_plan`` is set."""
     c_in = x.shape[-1]
     if "alphas" in p and "meta" not in p:
         # im2col: (B, H', W', Cin*K*K) patches -> GEMM against generated W
@@ -101,7 +105,12 @@ def conv_apply(p: dict, cfg: CNNConfig, x: jnp.ndarray, c_out: int, k: int,
         # alphas were built over (K, K, Cin) flattening. Rearrange to match.
         pt = patches.reshape(B * Ho * Wo, c_in, k, k)
         pt = jnp.transpose(pt, (0, 2, 3, 1)).reshape(B * Ho * Wo, k * k * c_in)
-        y = kops.ovsf_matmul(pt, p["alphas"], p["idx"], path="materialize")
+        plan = cfg.exec_plan.plan_for(name) if (cfg.exec_plan is not None
+                                                and name) else None
+        if plan is not None:
+            y = kops.ovsf_matmul(pt, p["alphas"], p["idx"], plan=plan)
+        else:
+            y = kops.ovsf_matmul(pt, p["alphas"], p["idx"], path="materialize")
         return y.reshape(B, Ho, Wo, c_out)
     w = conv_weights(p, cfg, c_in, c_out, k)
     pad = (k // 2, k // 2)
@@ -209,7 +218,8 @@ def resnet_init(key: jax.Array, cfg: CNNConfig) -> tuple[dict, dict]:
 
 
 def _conv_bn(params, state, new_state, cfg, name, x, d, train, relu=True):
-    y = conv_apply(params[name], cfg, x, d["c_out"], d["k"], d["stride"])
+    y = conv_apply(params[name], cfg, x, d["c_out"], d["k"], d["stride"],
+                   name=name)
     y, st = bn_apply(params[name + "_bn"], state[name + "_bn"], y, train)
     new_state[name + "_bn"] = st
     if relu:
@@ -299,7 +309,8 @@ def squeezenet_apply(params: dict, state: dict, cfg: CNNConfig,
         sq, e1, e3 = (max(4, int(v * wm)) for v in (sq, e1, e3))
         s = jax.nn.relu(conv_apply(params[f"f{i}s"], cfg, y, sq, 1))
         a = jax.nn.relu(conv_apply(params[f"f{i}e1"], cfg, s, e1, 1))
-        b = jax.nn.relu(conv_apply(params[f"f{i}e3"], cfg, s, e3, 3))
+        b = jax.nn.relu(conv_apply(params[f"f{i}e3"], cfg, s, e3, 3,
+                                   name=f"f{i}e3"))
         y = jnp.concatenate([a, b], axis=-1)
         if i in pool_after:
             y = jax.lax.reduce_window(y, -jnp.inf, jax.lax.max, (1, 3, 3, 1),

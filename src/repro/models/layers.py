@@ -47,9 +47,27 @@ def linear_init(key: jax.Array, cfg: ModelConfig, name: str, d_in: int,
     return p
 
 
-def linear_apply(p: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+def layer_plan(cfg: ModelConfig, name: str):
+    """Resolve the mapper's LayerPlan for a weight-type name (or None)."""
+    ep = getattr(cfg, "exec_plan", None)
+    if ep is None or not name:
+        return None
+    return ep.plan_for(name)
+
+
+def linear_apply(p: dict, x: jnp.ndarray, cfg: ModelConfig,
+                 name: str = "") -> jnp.ndarray:
+    """Apply a linear layer. ``name`` (weight type, e.g. "mlp_up") keys the
+    hardware-aware execution plan when ``cfg.exec_plan`` is set; OVSF layers
+    then dispatch per-layer (path, blocks, cache) instead of the uniform
+    ``cfg.ovsf.exec_path``."""
     if "alphas" in p:
-        y = kops.ovsf_matmul(x, p["alphas"], p["idx"], path=cfg.ovsf.exec_path)
+        plan = layer_plan(cfg, name)
+        if plan is not None:
+            y = kops.ovsf_matmul(x, p["alphas"], p["idx"], plan=plan)
+        else:
+            y = kops.ovsf_matmul(x, p["alphas"], p["idx"],
+                                 path=cfg.ovsf.exec_path)
     else:
         y = x @ p["w"].astype(x.dtype)
     if "b" in p:

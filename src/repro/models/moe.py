@@ -59,11 +59,14 @@ def _expert_bank_init(key: jax.Array, cfg: ModelConfig, E: int, d: int, f: int,
     return out
 
 
-def _expert_matmul(p: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+def _expert_matmul(p: dict, x: jnp.ndarray, cfg: ModelConfig,
+                   name: str = "") -> jnp.ndarray:
     """x: (G, E, C, d_in) batched per-expert GEMM -> (G, E, C, d_out)."""
     if "alphas" in p:
+        plan = L.layer_plan(cfg, name)
+        path = plan.path if plan is not None else cfg.ovsf.exec_path
         # spectral path vectorised over experts (shared idx)
-        if cfg.ovsf.exec_path == "spectral":
+        if path == "spectral":
             d_in = x.shape[-1]
             idx = p["idx"]
             if idx.ndim == 2:                                    # segmented
@@ -83,8 +86,16 @@ def _expert_matmul(p: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
                 xk = jnp.take(xh, idx, axis=-1)                  # (G, E, C, J)
             return jnp.einsum("gecj,ejn->gecn", xk,
                               p["alphas"].astype(xk.dtype))
-        W = jax.vmap(lambda a: kops.decompress(a, p["idx"], x.shape[-1])
-                     )(p["alphas"])                               # (E, d_in, d_out)
+        # No per-expert fused (TiWGen) kernel yet: a plan with path="fused"
+        # falls back to the decompress dataflow below (see ROADMAP open
+        # items). Numerics are unchanged; only the modeled HBM win is lost.
+        if plan is not None and plan.cache_weights:
+            W = kops.cached_decompress(
+                p["alphas"], p["idx"], x.shape[-1],
+                cache_key=plan.cache_key or name)                 # (E, d_in, d_out)
+        else:
+            W = jax.vmap(lambda a: kops.decompress(a, p["idx"], x.shape[-1])
+                         )(p["alphas"])                           # (E, d_in, d_out)
         return jnp.einsum("gecd,edn->gecn", x, W.astype(x.dtype))
     return jnp.einsum("gecd,edn->gecn", x, p["w"].astype(x.dtype))
 
@@ -130,20 +141,20 @@ def moe_apply(p: dict, cfg: ModelConfig, x: jnp.ndarray
                       oh, pos_oh)
 
     ex_in = jnp.einsum("gtec,gtd->gecd", disp, xg)              # (G, E, cap, d)
-    gg = _expert_matmul(p["gate"], ex_in, cfg)
-    uu = _expert_matmul(p["up"], ex_in, cfg)
+    gg = _expert_matmul(p["gate"], ex_in, cfg, "expert_gate")
+    uu = _expert_matmul(p["up"], ex_in, cfg, "expert_up")
     h = jax.nn.silu(gg.astype(jnp.float32)).astype(uu.dtype) * uu
-    ex_out = _expert_matmul(p["down"], h, cfg)                  # (G, E, cap, d)
+    ex_out = _expert_matmul(p["down"], h, cfg, "expert_down")   # (G, E, cap, d)
     y = jnp.einsum("gtec,gecd->gtd", comb, ex_out).reshape(G * g, d)
     y = y[:T].reshape(B, S, d)
 
     if "shared" in p:
         sp = p["shared"]
-        g2 = L.linear_apply(sp["gate"], x, cfg)
-        u2 = L.linear_apply(sp["up"], x, cfg)
+        g2 = L.linear_apply(sp["gate"], x, cfg, "mlp_gate")
+        u2 = L.linear_apply(sp["up"], x, cfg, "mlp_up")
         y = y + L.linear_apply(
             sp["down"], jax.nn.silu(g2.astype(jnp.float32)).astype(u2.dtype) * u2,
-            cfg)
+            cfg, "mlp_down")
 
     # load-balance auxiliary loss (Switch): E * sum_e f_e * P_e
     me = jnp.mean(jnp.sum(onehot, axis=2).astype(jnp.float32), axis=(0, 1))

@@ -108,14 +108,14 @@ def mamba1_apply(p: dict, cfg: ModelConfig, x: jnp.ndarray, *,
     di, N = cfg.d_inner, cfg.ssm_state
     dt_rank = max(d // 16, 1)
 
-    xz = L.linear_apply(p["in_proj"], x, cfg)
+    xz = L.linear_apply(p["in_proj"], x, cfg, "mlp_in")
     xs, z = jnp.split(xz, 2, axis=-1)
     conv_state = cache["conv"] if cache else None
     xs, new_conv = _causal_conv(xs, p["conv_w"].astype(xs.dtype),
                                 p["conv_b"].astype(xs.dtype), conv_state)
     xs = jax.nn.silu(xs.astype(jnp.float32))                 # (B,S,di) f32
 
-    proj = L.linear_apply(p["x_proj"], xs.astype(x.dtype), cfg)
+    proj = L.linear_apply(p["x_proj"], xs.astype(x.dtype), cfg, "proj_x")
     dt, Bc, Cc = jnp.split(proj.astype(jnp.float32),
                            [dt_rank, dt_rank + N], axis=-1)
     dt = jax.nn.softplus(dt @ p["dt_proj"]["w"].astype(jnp.float32)
@@ -145,7 +145,7 @@ def mamba1_apply(p: dict, cfg: ModelConfig, x: jnp.ndarray, *,
 
     y = y + p["D"][None, None] * xs
     y = y * jax.nn.silu(z.astype(jnp.float32))
-    out = L.linear_apply(p["out_proj"], y.astype(x.dtype), cfg)
+    out = L.linear_apply(p["out_proj"], y.astype(x.dtype), cfg, "mlp_out")
     new_cache = ({"conv": new_conv, "ssm": h_last} if cache is not None else None)
     return out, new_cache
 
@@ -186,7 +186,7 @@ def mamba2_apply(p: dict, cfg: ModelConfig, x: jnp.ndarray, *,
     di, N, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_head_dim
     H = di // P
 
-    zxbcdt = L.linear_apply(p["in_proj"], x, cfg)
+    zxbcdt = L.linear_apply(p["in_proj"], x, cfg, "mlp_in")
     z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * N], axis=-1)
     conv_state = cache["conv"] if cache else None
     xbc, new_conv = _causal_conv(xbc, p["conv_w"].astype(xbc.dtype),
@@ -223,7 +223,7 @@ def mamba2_apply(p: dict, cfg: ModelConfig, x: jnp.ndarray, *,
     y = y + p["D"][None, None, :, None] * xs
     y = y.reshape(B, S, di) * jax.nn.silu(z.astype(jnp.float32))
     y = L.rmsnorm_apply(p["norm"], y.astype(x.dtype), cfg.norm_eps)
-    out = L.linear_apply(p["out_proj"], y, cfg)
+    out = L.linear_apply(p["out_proj"], y, cfg, "mlp_out")
     new_cache = ({"conv": new_conv, "ssm": h_last} if cache is not None else None)
     return out, new_cache
 

@@ -41,14 +41,14 @@ def _mlp_init(key: jax.Array, cfg: ModelConfig, d: int, f: int) -> dict:
 
 
 def _mlp_apply(p: dict, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
-    u = L.linear_apply(p["up"], x, cfg)
+    u = L.linear_apply(p["up"], x, cfg, "mlp_up")
     if cfg.mlp_gated:
-        g = L.linear_apply(p["gate"], x, cfg)
+        g = L.linear_apply(p["gate"], x, cfg, "mlp_gate")
         h = (jax.nn.silu(g.astype(jnp.float32))
              * u.astype(jnp.float32)).astype(x.dtype)
     else:
         h = jax.nn.gelu(u.astype(jnp.float32)).astype(x.dtype)
-    return L.linear_apply(p["down"], h, cfg)
+    return L.linear_apply(p["down"], h, cfg, "mlp_down")
 
 
 def block_init(key: jax.Array, cfg: ModelConfig, kind: str, *,

@@ -1,24 +1,51 @@
-"""Batched serving engine: continuous batching over a fixed-slot decode batch.
+"""Batched serving engine: continuous batching with ONE jit'd batched decode.
 
-Requests queue up; the engine fills free slots by prefilling prompts into the
-per-slot cache region and then steps the whole batch together (one
-``serve_step`` per token across all active slots — the memory-bound regime
-the paper's on-the-fly generation targets). Slots whose request finished are
-immediately refilled. The engine is deliberately simple but shape-stable:
-every jit'd computation sees fixed (B, buffer) shapes.
+Requests queue up; the engine fills free slots by prefilling prompts and
+scattering the resulting per-slot cache into a single stacked cache pytree
+(every leaf carries a leading ``B`` slot axis). Decode then advances ALL
+active slots with exactly one jit'd call per token: the per-slot step is
+vmapped over the slot axis, so the B per-slot memory-bound GEMVs that the
+seed engine issued sequentially from Python fuse into one batched GEMM —
+precisely the regime the paper's on-the-fly weights generation (and the
+fused TiWGen kernel) was built for. Slot masks are handled host-side:
+inactive slots still flow through the batched step (shape stability) and
+their outputs are ignored.
+
+When the model has OVSF layers and no explicit plan is set, the engine asks
+the hardware-aware layer mapper (``runtime.mapper``) for a decode-shaped
+ExecutionPlan, so every compressed GEMM runs the execution path the roofline
+model picks for the (layer, device) pair instead of a global default.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from collections import deque
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models import registry as R
+
+
+@functools.lru_cache(maxsize=16)
+def _decode_step_fn(cfg: ModelConfig):
+    """Compiled batched decode step, shared across engine instances with the
+    same (hashable) config — engine restarts don't retrace or recompile."""
+
+    def _batched_step(p, caches, tokens):
+        """(stacked caches, (B,) last tokens) -> ((B,) next, caches)."""
+
+        def one_slot(cache, tok):
+            logits, new_cache = R.serve_step(p, cfg, cache, tok[None, None])
+            return jnp.argmax(logits[0], axis=-1).astype(jnp.int32), new_cache
+
+        return jax.vmap(one_slot)(caches, tokens)
+
+    return jax.jit(_batched_step)
 
 
 @dataclasses.dataclass
@@ -32,7 +59,7 @@ class Request:
 
 @dataclasses.dataclass
 class EngineStats:
-    steps: int = 0
+    steps: int = 0                # decode steps == jit'd batched decode calls
     tokens_out: int = 0
     prefills: int = 0
     completed: int = 0
@@ -41,9 +68,9 @@ class EngineStats:
 class ServingEngine:
     def __init__(self, params, cfg: ModelConfig, *, batch_slots: int = 4,
                  buffer_len: int = 256, eos_id: Optional[int] = None,
-                 greedy: bool = True):
+                 greedy: bool = True, use_mapper: bool = True):
+        self.cfg = self._plan_cfg(cfg, batch_slots, use_mapper)
         self.params = params
-        self.cfg = cfg
         self.B = batch_slots
         self.T = buffer_len
         self.eos = eos_id
@@ -52,48 +79,79 @@ class ServingEngine:
         self.slots: list[Optional[Request]] = [None] * batch_slots
         self.slot_remaining = np.zeros(batch_slots, np.int32)
         self.stats = EngineStats()
-        # caches are per-slot (B=1) so slots prefill/evict independently
-        self.caches = [R.init_cache(cfg, 1, buffer_len)
-                       for _ in range(batch_slots)]
-        self._step1 = jax.jit(
-            lambda p, c, t: R.serve_step(p, cfg, c, t))
+        # ONE stacked cache: every per-slot leaf gains a leading B axis.
+        one = R.init_cache(self.cfg, 1, buffer_len)
+        self.caches = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (batch_slots,) + a.shape), one)
+        self._step_fn = _decode_step_fn(self.cfg)
+
+    @staticmethod
+    def _plan_cfg(cfg: ModelConfig, batch_slots: int,
+                  use_mapper: bool) -> ModelConfig:
+        if not use_mapper or not cfg.ovsf.enable or cfg.exec_plan is not None:
+            return cfg
+        from repro.runtime import mapper
+        shape = ShapeConfig("serve_decode", 1, batch_slots, "decode")
+        # weight_reuse=1: the decode step is jit'd, so the eager decompress
+        # cache cannot amortise generation across steps inside the compiled
+        # program — don't let the model assume it. (Within a step, reuse
+        # across slots comes from batching itself; cross-step amortisation
+        # applies to eager consumers like CNN eval.)
+        return mapper.apply_plan(
+            cfg, mapper.plan_model(cfg, shape, weight_reuse=1))
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
+
+    def _insert_slot_cache(self, i: int, cache: dict) -> None:
+        """Scatter one prefilled B=1 cache into slot i of the stacked cache."""
+        self.caches = jax.tree_util.tree_map(
+            lambda big, small: big.at[i].set(small), self.caches, cache)
 
     def _fill_slots(self) -> None:
         for i in range(self.B):
             if self.slots[i] is None and self.queue:
                 req = self.queue.popleft()
                 prompt = jnp.asarray(req.prompt[None, :], jnp.int32)
-                self.caches[i] = R.init_cache(self.cfg, 1, self.T)
                 logits, cache = R.serve_prefill(
                     self.params, self.cfg, {"tokens": prompt}, self.T)
-                self.caches[i] = cache
+                self._insert_slot_cache(i, cache)
                 tok = int(jnp.argmax(logits[0]))
                 req.out_tokens.append(tok)
                 self.slots[i] = req
                 self.slot_remaining[i] = req.max_new_tokens - 1
                 self.stats.prefills += 1
                 self.stats.tokens_out += 1
+                if self.slot_remaining[i] <= 0 or (self.eos is not None
+                                                   and tok == self.eos):
+                    req.done = True
+                    self.slots[i] = None
+                    self.stats.completed += 1
 
     def step(self) -> int:
-        """One decode step across all active slots. Returns #active."""
+        """One decode step across all active slots. Returns #active.
+
+        Exactly one jit'd batched call advances every active slot; there is
+        no per-slot Python loop over model invocations.
+        """
         self._fill_slots()
         active = [i for i in range(self.B) if self.slots[i] is not None]
         if not active:
             return 0
+        last = np.zeros(self.B, np.int32)
+        for i in active:
+            last[i] = self.slots[i].out_tokens[-1]
+        next_toks, self.caches = self._step_fn(
+            self.params, self.caches, jnp.asarray(last))
+        nxt = np.asarray(next_toks)                  # single host sync
         for i in active:
             req = self.slots[i]
-            tok = jnp.asarray([[req.out_tokens[-1]]], jnp.int32)
-            logits, self.caches[i] = self._step1(self.params, self.caches[i],
-                                                 tok)
-            nxt = int(jnp.argmax(logits[0]))
-            req.out_tokens.append(nxt)
+            tok = int(nxt[i])
+            req.out_tokens.append(tok)
             self.stats.tokens_out += 1
             self.slot_remaining[i] -= 1
             if (self.slot_remaining[i] <= 0
-                    or (self.eos is not None and nxt == self.eos)):
+                    or (self.eos is not None and tok == self.eos)):
                 req.done = True
                 self.slots[i] = None
                 self.stats.completed += 1

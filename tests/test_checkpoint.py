@@ -59,15 +59,14 @@ def test_elastic_restore_across_mesh_shapes(tmp_path):
     """Save sharded on a (n,) mesh, restore onto a (1,) mesh (and dtypes)."""
     from jax.sharding import NamedSharding, PartitionSpec as P
     n = len(jax.devices())
-    mesh_a = jax.make_mesh((n,), ("data",),
-                           axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh_a = make_mesh((n,), ("data",))
     tree = {"w": jax.device_put(
         jnp.arange(16.0).reshape(4, 4),
         NamedSharding(mesh_a, P("data" if n > 1 and 4 % n == 0 else None)))}
     ckpt.save(tree, str(tmp_path), 3)
 
-    mesh_b = jax.make_mesh((1,), ("data",),
-                           axis_types=(jax.sharding.AxisType.Auto,))
+    mesh_b = make_mesh((1,), ("data",))
     template = {"w": jax.ShapeDtypeStruct((4, 4), jnp.float32)}
     shardings = {"w": NamedSharding(mesh_b, P())}
     back, step = ckpt.restore(str(tmp_path), template=template,

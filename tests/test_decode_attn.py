@@ -1,6 +1,9 @@
 """Flash-decoding attention kernel vs oracle (shape/dtype/pos sweeps)."""
-import hypothesis
-import hypothesis.strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (see requirements.txt)")
+import hypothesis.strategies as st  # noqa: E402
 import jax
 import jax.numpy as jnp
 import numpy as np

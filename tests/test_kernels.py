@@ -1,7 +1,10 @@
 """Pallas kernel validation: interpret-mode vs pure-jnp oracles, shape/dtype
 sweeps + hypothesis randomised shapes (assignment requirement)."""
-import hypothesis
-import hypothesis.strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (see requirements.txt)")
+import hypothesis.strategies as st  # noqa: E402
 import jax
 import jax.numpy as jnp
 import numpy as np

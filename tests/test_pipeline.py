@@ -18,8 +18,8 @@ from repro.configs.base import ModelConfig
 from repro.models import transformer as T
 from repro.train.pipeline import gpipe_apply
 
-mesh = jax.make_mesh((4, 2, 1), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*3)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((4, 2, 1), ("pod", "data", "model"))
 cfg = ModelConfig(name="t", family="dense", n_layers=8, d_model=64, n_heads=4,
                   n_kv_heads=2, d_ff=128, vocab=128, head_dim=16,
                   dtype="float32", remat=False)

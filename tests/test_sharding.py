@@ -11,8 +11,8 @@ from repro.sharding.rules import ShardingRules
 
 def _mesh():
     n = len(jax.devices())
-    return jax.make_mesh((n, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    return make_mesh((n, 1), ("data", "model"))
 
 
 @pytest.mark.parametrize("arch", ["tinyllama_1_1b", "olmoe_1b_7b",
