@@ -30,11 +30,23 @@ SECTIONS = {
 
 # sections that understand the reduced --smoke mode (fast CI signal)
 SMOKE_AWARE = {"kernels", "serving"}
+# sections that take an --hw target (registered perf_model preset name)
+HW_AWARE = {"serving"}
 
 
 def main() -> None:
-    args = [a for a in sys.argv[1:] if a != "--smoke"]
-    smoke = "--smoke" in sys.argv[1:]
+    import argparse
+
+    from repro.hwmodel.perf_model import hw_names
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("sections", nargs="*")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--hw", default="v5e", choices=list(hw_names()))
+    ns = ap.parse_args()
+    hw = ns.hw
+    args = ns.sections
+    smoke = ns.smoke
     which = args or list(SECTIONS)
     for name in which:
         fn = SECTIONS.get(name)
@@ -43,10 +55,11 @@ def main() -> None:
             continue
         t0 = time.perf_counter()
         print(f"== {name} ==")
+        kw = {"hw": hw} if name in HW_AWARE else {}
         if smoke and name in SMOKE_AWARE:
-            fn(smoke=True)
+            fn(smoke=True, **kw)
         else:
-            fn()
+            fn(**kw)
         print(f"== {name} done in {time.perf_counter() - t0:.1f}s ==")
 
     # roofline summary (if the dry-run has been run)

@@ -1,13 +1,21 @@
-"""Serving decode benchmark: batched engine vs the seed's per-slot loop.
+"""Serving benchmarks: batched decode vs the seed's per-slot loop, and
+bucketed batched prefill vs per-prompt-length prefill.
 
-The seed ``ServingEngine`` stepped B independent B=1 caches in a Python loop
-— B sequential memory-bound GEMV-shaped model calls per generated token. The
-rewritten engine advances all slots with ONE jit'd vmapped call per token.
-This bench runs both on the same model/requests and reports tokens/s plus
-the speedup, writing ``BENCH_serving.json`` for the perf trajectory.
+Two comparisons, both written to ``BENCH_serving.json``:
 
+* **decode**: the seed ``ServingEngine`` stepped B independent B=1 caches in
+  a Python loop — B sequential memory-bound GEMV-shaped model calls per
+  generated token. The engine advances all slots with ONE fused
+  decode+sample call per token.
+* **prefill (mixed-length workload)**: without bucketing, every distinct
+  prompt length traces/compiles its own prefill; with the scheduler's
+  power-of-two buckets, prompts are right-padded and prefilled in one jit'd
+  batched call per bucket — at most ``n_buckets`` traces end-to-end.
+
+``--hw`` threads any registered HW target (v5e/v5p/v6e/cpu) into the
+mapper's execution planning (the model still *runs* on the host backend).
 CPU numbers undersell the TPU story (no HBM wall on host), but the dispatch
-collapse alone is large at interactive batch sizes.
+and compile collapse alone is large at interactive batch sizes.
 """
 from __future__ import annotations
 
@@ -26,7 +34,7 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.models import registry as R
-from repro.serving.engine import Request, ServingEngine
+from repro.serving import LLMEngine, Request, ServingEngine
 
 
 @functools.lru_cache(maxsize=4)
@@ -93,12 +101,20 @@ def _requests(cfg, n, rng):
                     max_new_tokens=16) for rid in range(n)]
 
 
+def _mixed_requests(cfg, n, lo=4, hi=96):
+    """Deterministic mixed-length workload: n prompts, lengths lo..hi."""
+    lens = np.linspace(lo, hi, n).astype(int)
+    rng = np.random.default_rng(2)
+    return [Request(rid, rng.integers(0, cfg.vocab, int(L), dtype=np.int32),
+                    max_new_tokens=8) for rid, L in enumerate(lens)]
+
+
 def run(print_fn=print, smoke: bool = False,
-        json_path: str = "") -> dict:
+        json_path: str = "", hw: str = "v5e") -> dict:
     # smoke runs land in a separate file so they never clobber the
-    # full-mode perf trajectory
+    # full-mode perf trajectory (hw-suffixed: CI runs a small hw matrix)
     json_path = json_path or (
-        "BENCH_serving_smoke.json" if smoke else "BENCH_serving.json")
+        f"BENCH_serving_smoke_{hw}.json" if smoke else "BENCH_serving.json")
     B = 4
     n_req = 4 if smoke else 8
     cfg = get_smoke_config("tinyllama_1_1b")
@@ -120,7 +136,7 @@ def run(print_fn=print, smoke: bool = False,
         return eng.tokens_out, time.perf_counter() - t0
 
     def time_batched():
-        eng = ServingEngine(params, cfg, batch_slots=B, buffer_len=64)
+        eng = ServingEngine(params, cfg, batch_slots=B, buffer_len=64, hw=hw)
         for r in _requests(cfg, n_req, np.random.default_rng(0)):
             eng.submit(r)
         t0 = time.perf_counter()
@@ -139,10 +155,47 @@ def run(print_fn=print, smoke: bool = False,
     print_fn(f"serving_bench,per_slot,B={B},{tps_a:.1f}tok/s")
     print_fn(f"serving_bench,batched,B={B},{tps_b:.1f}tok/s")
     print_fn(f"serving_bench,speedup,{speedup:.2f}x")
+
+    # -- bucketed batched prefill vs per-length prefill (mixed lengths) -----
+    # End-to-end on FRESH engines: prefill tracing/compilation is the cost
+    # bucketing removes, so it stays inside the timed region. The decode
+    # step fn is shared (lru by config) and warmed above.
+    n_mixed = 8 if smoke else 16
+    lo, hi = 4, (56 if smoke else 96)
+    buf = 128
+
+    def time_mixed(bucketed: bool):
+        eng = LLMEngine(params, cfg, batch_slots=B, buffer_len=buf, hw=hw,
+                        bucketed_prefill=bucketed)
+        for r in _mixed_requests(cfg, n_mixed, lo=lo, hi=hi):
+            eng.submit(r)
+        t0 = time.perf_counter()
+        stats = eng.run_until_drained()
+        return stats, time.perf_counter() - t0
+
+    stats_u, dt_u = time_mixed(bucketed=False)
+    stats_b, dt_b = time_mixed(bucketed=True)
+    tps_u = stats_u.tokens_out / dt_u
+    tps_bk = stats_b.tokens_out / dt_b
+    bucketed_speedup = tps_bk / tps_u
+    print_fn(f"serving_bench,mixed_unbucketed,B={B},n={n_mixed},"
+             f"{tps_u:.1f}tok/s,compiles={stats_u.prefill_compiles}")
+    print_fn(f"serving_bench,mixed_bucketed,B={B},n={n_mixed},"
+             f"{tps_bk:.1f}tok/s,compiles={stats_b.prefill_compiles}")
+    print_fn(f"serving_bench,bucketed_speedup,{bucketed_speedup:.2f}x")
+
     result = {"bench": "serving", "smoke": smoke, "batch_slots": B,
-              "model": cfg.name, "backend": jax.default_backend(),
+              "model": cfg.name, "backend": jax.default_backend(), "hw": hw,
               "per_slot_tok_s": tps_a, "batched_tok_s": tps_b,
-              "speedup": speedup}
+              "speedup": speedup,
+              "bucketed_prefill": {
+                  "n_requests": n_mixed, "prompt_lens": f"mixed {lo}..{hi}",
+                  "unbucketed_tok_s": tps_u, "bucketed_tok_s": tps_bk,
+                  "speedup": bucketed_speedup,
+                  "unbucketed_prefill_compiles": stats_u.prefill_compiles,
+                  "bucketed_prefill_compiles": stats_b.prefill_compiles,
+                  "bucketed_prefill_s": stats_b.prefill_s,
+                  "unbucketed_prefill_s": stats_u.prefill_s}}
     if json_path:
         with open(json_path, "w") as f:
             json.dump(result, f, indent=2)
@@ -151,4 +204,12 @@ def run(print_fn=print, smoke: bool = False,
 
 
 if __name__ == "__main__":
-    run(smoke="--smoke" in sys.argv)
+    import argparse
+
+    from repro.serving import hw_names
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--hw", default="v5e", choices=list(hw_names()))
+    a = ap.parse_args()
+    run(smoke=a.smoke, hw=a.hw)

@@ -1,4 +1,5 @@
-"""Batched serving example: continuous batching over a slotted decode batch,
+"""Batched serving example on the request-level API: continuous batching
+with bucketed batched prefill, per-request sampling, and streaming, while
 comparing OVSF execution paths on the decode step.
 
   PYTHONPATH=src python examples/serve_batched.py
@@ -9,15 +10,13 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import dataclasses
-
 import jax
 import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.configs.base import OVSFConfig
 from repro.models import registry as R
-from repro.serving.engine import Request, ServingEngine
+from repro.serving import LLMEngine, Request, SamplingParams
 
 
 def main() -> None:
@@ -34,20 +33,38 @@ def main() -> None:
     ]:
         cfg = base.replace(ovsf=ovsf)
         params = R.model_init(jax.random.PRNGKey(0), cfg)
-        eng = ServingEngine(params, cfg, batch_slots=4, buffer_len=96,
-                            use_mapper=use_mapper)
+        eng = LLMEngine(params, cfg, batch_slots=4, buffer_len=96,
+                        use_mapper=use_mapper)
         for rid in range(8):
             plen = int(rng.integers(8, 24))
+            # even rids decode greedily, odd rids sample (seeded per request)
+            sp = (SamplingParams() if rid % 2 == 0 else
+                  SamplingParams(temperature=0.8, top_k=50, seed=rid))
             eng.submit(Request(rid, rng.integers(0, cfg.vocab, plen,
                                                  dtype=np.int32),
-                               max_new_tokens=8))
+                               max_new_tokens=8, sampling=sp))
         t0 = time.perf_counter()
         stats = eng.run_until_drained()
         dt = time.perf_counter() - t0
         n_params = R.param_count(params)
         print(f"[serve] {label:16s} params={n_params/1e6:6.1f}M "
               f"completed={stats.completed} tokens={stats.tokens_out} "
+              f"prefill_compiles={stats.prefill_compiles} "
               f"({stats.tokens_out/dt:6.1f} tok/s on CPU)")
+
+    # Streaming: tokens surface through the callback as they are committed.
+    cfg = base.replace(ovsf=OVSFConfig(enable=False))
+    params = R.model_init(jax.random.PRNGKey(0), cfg)
+    eng = LLMEngine(params, cfg, batch_slots=2, buffer_len=96)
+    chunks: list[str] = []
+    eng.submit(Request(0, rng.integers(0, cfg.vocab, 12, dtype=np.int32),
+                       max_new_tokens=6,
+                       sampling=SamplingParams(temperature=1.0, seed=42),
+                       stream=lambda rid, tok: chunks.append(str(tok))))
+    eng.run_until_drained()
+    out = eng.outputs()[0]
+    print(f"[serve] streamed rid={out.rid} ({out.finish_reason}): "
+          f"{' '.join(chunks)}")
 
 
 if __name__ == "__main__":

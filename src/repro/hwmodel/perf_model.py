@@ -28,7 +28,13 @@ from repro.core.ovsf import next_pow2
 
 @dataclasses.dataclass(frozen=True)
 class HW:
-    """TPU v5e-like chip (assignment constants)."""
+    """One hardware target for the analytical model (default: TPU v5e).
+
+    Instances double as *HW targets* for the serving/mapper stack: each
+    carries a ``name`` under which it can be registered (``register_hw``)
+    and resolved (``hw_by_name``), so callers thread ``--hw v5p`` style
+    strings instead of constructing constants.
+    """
     peak_flops: float = 197e12        # bf16
     hbm_bw: float = 819e9             # B/s
     ici_bw: float = 50e9              # B/s per link
@@ -40,12 +46,64 @@ class HW:
     # pipelined generator at that peak (the paper's CNN-WGen vector unit,
     # ~7.5-11% of the DSPs per Table 9), overlapping per Eq. (8).
     wgen_flops: float = 0.0
+    name: str = "v5e"
 
     def scaled_bw(self, factor: float) -> "HW":
         return dataclasses.replace(self, hbm_bw=self.hbm_bw * factor)
 
 
 V5E = HW()
+
+# TPU v5p: 459 TFLOP/s bf16, 95 GB HBM2e at 2765 GB/s, 6 ICI links at
+# ~100 GB/s each (Google Cloud "TPU v5p system architecture").
+V5P = HW(name="v5p", peak_flops=459e12, hbm_bw=2765e9, ici_bw=100e9,
+         hbm_bytes=95e9, vmem_bytes=128 * 2**20, vpu_flops=459e12 / 8)
+
+# TPU v6e (Trillium): 918 TFLOP/s bf16, 32 GB HBM at 1640 GB/s, 4 ICI
+# links totalling ~3.58 Tbps one-way (Google Cloud "TPU v6e" docs).
+V6E = HW(name="v6e", peak_flops=918e12, hbm_bw=1640e9, ici_bw=112e9,
+         hbm_bytes=32e9, vmem_bytes=128 * 2**20, vpu_flops=918e12 / 8)
+
+# Generic dual-socket AVX-512 server: ~2 TFLOP/s f32 across cores,
+# ~100 GB/s sustained DDR5 (STREAM-like), 32 MiB LLC standing in for
+# VMEM. Machine balance ~20 FLOP/B vs v5e's ~240, so mapper plans
+# legitimately differ between the two targets.
+CPU = HW(name="cpu", peak_flops=2e12, hbm_bw=100e9, ici_bw=0.0,
+         hbm_bytes=256e9, vmem_bytes=32 * 2**20, vpu_flops=2e12)
+
+
+# --- HW target registry (serving API surface: --hw v5e|v5p|v6e|cpu) --------
+
+_HW_TARGETS: dict = {}
+
+
+def register_hw(hw: HW) -> HW:
+    """Register a target under ``hw.name`` (later wins, enabling overrides)."""
+    _HW_TARGETS[hw.name] = hw
+    return hw
+
+
+for _hw in (V5E, V5P, V6E, CPU):
+    register_hw(_hw)
+
+
+def hw_names() -> tuple:
+    return tuple(_HW_TARGETS)
+
+
+def hw_by_name(name: str) -> HW:
+    try:
+        return _HW_TARGETS[name]
+    except KeyError:
+        raise KeyError(f"unknown HW target {name!r}; "
+                       f"registered: {sorted(_HW_TARGETS)}") from None
+
+
+def resolve_hw(hw) -> HW:
+    """Accept an ``HW`` instance or a registered target name."""
+    if isinstance(hw, HW):
+        return hw
+    return hw_by_name(hw)
 
 BoundClass = Literal["IFM", "OFM", "W", "C"]
 

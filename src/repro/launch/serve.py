@@ -1,7 +1,11 @@
-"""Serving launcher: batched requests against a (smoke or full) config.
+"""Serving launcher: batched requests through the request-level API.
 
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama_1_1b --smoke \
-      --requests 8 --max-new 12
+      --requests 8 --max-new 12 --hw v5e --temperature 0.8 --top-k 40
+
+``--hw`` picks the hardware target the mapper plans against (any registered
+preset: v5e/v5p/v6e/cpu); ``--no-bucketing`` reverts to per-prompt-length
+prefill (the pre-bucketing behaviour) for A/B comparison.
 """
 from __future__ import annotations
 
@@ -13,7 +17,7 @@ import numpy as np
 
 from repro.configs import get_config, get_smoke_config
 from repro.models import registry as R
-from repro.serving.engine import Request, ServingEngine
+from repro.serving import LLMEngine, Request, SamplingParams, hw_names
 
 
 def main(argv=None) -> None:
@@ -25,26 +29,44 @@ def main(argv=None) -> None:
     ap.add_argument("--buffer", type=int, default=128)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--hw", default="v5e", choices=list(hw_names()),
+                    help="hardware target for the mapper's execution plans")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; > 0 samples with per-request seeds")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--no-bucketing", action="store_true",
+                    help="prefill each prompt at its native length")
+    ap.add_argument("--admission", default="reject",
+                    choices=["reject", "truncate"])
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     key = jax.random.PRNGKey(args.seed)
     params = R.model_init(key, cfg)
-    print(f"[serve] {cfg.name}: {R.param_count(params)/1e6:.1f}M params")
+    print(f"[serve] {cfg.name}: {R.param_count(params)/1e6:.1f}M params "
+          f"(hw={args.hw})")
 
-    eng = ServingEngine(params, cfg, batch_slots=args.slots,
-                        buffer_len=args.buffer)
+    eng = LLMEngine(params, cfg, batch_slots=args.slots,
+                    buffer_len=args.buffer, hw=args.hw,
+                    bucketed_prefill=not args.no_bucketing,
+                    admission=args.admission)
     rng = np.random.default_rng(args.seed)
     for rid in range(args.requests):
         plen = int(rng.integers(4, args.buffer // 4))
-        eng.submit(Request(rid, rng.integers(0, cfg.vocab, plen,
-                                             dtype=np.int32),
-                           max_new_tokens=args.max_new))
+        eng.submit(Request(
+            rid, rng.integers(0, cfg.vocab, plen, dtype=np.int32),
+            max_new_tokens=args.max_new,
+            sampling=SamplingParams(temperature=args.temperature,
+                                    top_k=args.top_k, seed=rid)))
     t0 = time.perf_counter()
     stats = eng.run_until_drained()
     dt = time.perf_counter() - t0
-    print(f"[serve] completed={stats.completed} steps={stats.steps} "
-          f"tokens={stats.tokens_out} ({stats.tokens_out/dt:.1f} tok/s)")
+    print(f"[serve] completed={stats.completed} rejected={stats.rejected} "
+          f"steps={stats.steps} tokens={stats.tokens_out} "
+          f"({stats.tokens_out/dt:.1f} tok/s)")
+    print(f"[serve] prefill={stats.prefill_s:.2f}s (batches="
+          f"{stats.prefill_batches}, compiles={stats.prefill_compiles}) "
+          f"decode={stats.decode_s:.2f}s")
 
 
 if __name__ == "__main__":

@@ -30,6 +30,10 @@ def serve_prefill(params, cfg, batch, buffer_len):
     return T.serve_prefill(params, cfg, batch, buffer_len)
 
 
+def serve_prefill_ragged(params, cfg, batch, buffer_len, lengths):
+    return T.serve_prefill_ragged(params, cfg, batch, buffer_len, lengths)
+
+
 def serve_step(params, cfg, cache, tokens):
     return T.serve_step(params, cfg, cache, tokens)
 

@@ -418,6 +418,33 @@ def serve_prefill(params: dict, cfg: ModelConfig, batch: dict, buffer_len: int
     return logits[:, -1], cache
 
 
+def serve_prefill_ragged(params: dict, cfg: ModelConfig, batch: dict,
+                         buffer_len: int, lengths: jnp.ndarray
+                         ) -> tuple[jnp.ndarray, dict]:
+    """Batched prefill of right-padded prompts with per-row true lengths.
+
+    ``batch["tokens"]`` is (B, Lb) with row b's real prompt in positions
+    [0, lengths[b]) and arbitrary padding after. Causal attention means a
+    row's logits at position ``lengths[b]-1`` are independent of its padding,
+    so the returned (B, vocab) logits match an unpadded per-row prefill
+    exactly for KV-cache families. The cache holds K/V for all Lb positions
+    (padding K/V included); the serving engine re-bases each row's ``pos`` to
+    its true length, after which decode overwrites each padded position
+    before ever attending to it (the decode mask is position-bounded).
+
+    Not state-safe for SSM/hybrid families: their recurrent state would run
+    through the padding. Callers gate on family and fall back to exact
+    per-request prefill there.
+    """
+    B, Lb = batch["tokens"].shape
+    cache = init_cache(cfg, B, buffer_len)
+    logits, cache, _ = model_apply(params, cfg, batch, cache=cache)
+    idx = jnp.clip(lengths - 1, 0, Lb - 1)
+    last = jnp.take_along_axis(
+        logits, idx[:, None, None], axis=1)[:, 0]
+    return last, cache
+
+
 def serve_step(params: dict, cfg: ModelConfig, cache: dict,
                tokens: jnp.ndarray) -> tuple[jnp.ndarray, dict]:
     """One decode step: tokens (B, 1) -> (logits (B, vocab), new cache)."""

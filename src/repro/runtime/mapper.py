@@ -117,7 +117,7 @@ def _candidate_ii(layer: pm.GemmLayer, path: str, hw: pm.HW, *,
 
 
 def classify_gemm(M: int, d_in: int, d_out: int, rho: float, *,
-                  seg: int = 16, hw: pm.HW = pm.V5E, name: str = "gemm",
+                  seg: int = 16, hw=pm.V5E, name: str = "gemm",
                   weight_reuse: int = 1,
                   paths: Sequence[str] = DEFAULT_PATHS,
                   alphas_resident: bool = False) -> LayerPlan:
@@ -132,7 +132,10 @@ def classify_gemm(M: int, d_in: int, d_out: int, rho: float, *,
     materialize's dense-W read strictly, by the 1/rho compression factor).
     ``weight_reuse`` is how many invocations see the same alphas (1 for
     training; the steps-per-request scale for frozen serving params).
+    ``hw`` is an ``pm.HW`` instance or a registered target name
+    (``"v5e"``/``"v5p"``/``"v6e"``/``"cpu"``).
     """
+    hw = pm.resolve_hw(hw)
     if seg and d_in % seg:
         seg = 0
     layer = pm.GemmLayer(name, M=M, d_in=d_in, d_out=d_out, rho=min(rho, 1.0),
@@ -185,7 +188,7 @@ _LAYER_PREFIX = re.compile(r"^L\d+/")
 _WTYPE_ALIASES = {"ssm_in": "mlp_in", "ssm_out": "mlp_out"}
 
 
-def plan_model(cfg, shape, *, hw: pm.HW = pm.V5E, n_devices: int = 1,
+def plan_model(cfg, shape, *, hw=pm.V5E, n_devices: int = 1,
                tp: int = 1, paths: Sequence[str] = DEFAULT_PATHS,
                weight_reuse: Optional[int] = None) -> ExecutionPlan:
     """Emit an ExecutionPlan for a ModelConfig under a workload shape.
@@ -195,7 +198,10 @@ def plan_model(cfg, shape, *, hw: pm.HW = pm.V5E, n_devices: int = 1,
     and scanned, so one plan per weight type), and classifies each with
     ``classify_gemm``. ``weight_reuse`` defaults by workload kind: decode
     serves frozen params (high reuse), train regenerates every step.
+    ``hw`` accepts any registered HW target name (see ``pm.hw_by_name``)
+    or an ``pm.HW`` instance; the emitted plan is stamped with its name.
     """
+    hw = pm.resolve_hw(hw)
     if weight_reuse is None:
         weight_reuse = 1 if shape.kind == "train" else 256
     layers = pm.model_layers(cfg, shape, n_devices=n_devices, tp=tp)
@@ -212,7 +218,7 @@ def plan_model(cfg, shape, *, hw: pm.HW = pm.V5E, n_devices: int = 1,
         entries.append((wtype, classify_gemm(
             l.M, l.d_in, l.d_out, l.rho, seg=l.seg, hw=hw, name=wtype,
             weight_reuse=weight_reuse, paths=paths)))
-    return ExecutionPlan(tuple(entries), hw_label="v5e")
+    return ExecutionPlan(tuple(entries), hw_label=hw.name)
 
 
 def apply_plan(cfg, plan: ExecutionPlan):
@@ -224,7 +230,7 @@ def plan_and_apply(cfg, shape, **kw):
     return apply_plan(cfg, plan_model(cfg, shape, **kw))
 
 
-def suggest_rhos(cfg, shape, *, hw: pm.HW = pm.V5E, n_devices: int = 1,
+def suggest_rhos(cfg, shape, *, hw=pm.V5E, n_devices: int = 1,
                  tp: int = 1, slack: float = 1.0):
     """Hardware-aware rho autotuning (paper §6.2) for the same workload the
     mapper plans: raise each layer's OVSF ratio while generation stays off
@@ -233,18 +239,19 @@ def suggest_rhos(cfg, shape, *, hw: pm.HW = pm.V5E, n_devices: int = 1,
     re-plan."""
     from repro.hwmodel.autotune import autotune_rhos
     layers = pm.model_layers(cfg, shape, n_devices=n_devices, tp=tp)
-    return autotune_rhos(layers, hw, slack=slack)
+    return autotune_rhos(layers, pm.resolve_hw(hw), slack=slack)
 
 
 # ---------------------------------------------------------------------------
 # CNN planning (im2col GEMMs through the same engine, paper §4.1)
 # ---------------------------------------------------------------------------
 
-def plan_cnn(cfg, *, batch: int = 1, hw: pm.HW = pm.V5E,
+def plan_cnn(cfg, *, batch: int = 1, hw=pm.V5E,
              paths: Sequence[str] = DEFAULT_PATHS,
              weight_reuse: int = 256) -> ExecutionPlan:
     """Plans for a CNNConfig: each OVSF conv is an im2col GEMM with
     R = B*H'*W' rows and P = Cin*K*K contraction (§4.1 mapping)."""
+    hw = pm.resolve_hw(hw)
     entries: list[tuple[str, LayerPlan]] = []
     if cfg.depth == "squeezenet":
         specs = _squeezenet_convs(cfg)
@@ -258,7 +265,7 @@ def plan_cnn(cfg, *, batch: int = 1, hw: pm.HW = pm.V5E,
         entries.append((name, classify_gemm(
             M, fan_in, c_out, rho, seg=0, hw=hw, name=name,
             weight_reuse=weight_reuse, paths=paths)))
-    return ExecutionPlan(tuple(entries))
+    return ExecutionPlan(tuple(entries), hw_label=hw.name)
 
 
 def _resnet_convs(cfg):

@@ -1,0 +1,107 @@
+"""Request-level serving API: the public surface of ``repro.serving``.
+
+Three layers sit behind this module (vLLM-style split, sized for this repo):
+
+  ``api``        SamplingParams / Request / RequestOutput, HW targets
+  ``scheduler``  pluggable admission + length-bucketed batching (FCFS default)
+  ``core``       EngineCore: stacked cache, jit'd bucketed prefill, ONE fused
+                 decode+sample call per token
+  ``engine``     LLMEngine orchestrator (+ thin ServingEngine compat shim)
+
+Requests carry their own :class:`SamplingParams` (greedy / temperature /
+top-k with a per-request seed) and an optional streaming token callback;
+finished requests surface as :class:`RequestOutput` with a finish reason.
+
+HW targets: every mapper/perf-model entry point takes ``hw`` as either an
+``hwmodel.perf_model.HW`` instance or a registered name. The presets
+(``v5e``/``v5p``/``v6e``/``cpu``) live in ``hwmodel.perf_model``; this module
+re-exports the registry so serving callers never import hwmodel directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.hwmodel.perf_model import (HW, hw_by_name, hw_names, register_hw,
+                                      resolve_hw)
+
+# An HW target *is* a perf-model HW instance; the name is the registry key.
+HWTarget = HW
+
+__all__ = [
+    "SamplingParams", "Request", "RequestOutput",
+    "FINISH_LENGTH", "FINISH_EOS", "FINISH_REJECTED",
+    "HWTarget", "HW", "hw_by_name", "hw_names", "register_hw", "resolve_hw",
+]
+
+FINISH_LENGTH = "length"        # hit max_new_tokens
+FINISH_EOS = "eos"              # sampled the eos token
+FINISH_REJECTED = "rejected"    # failed admission (would overflow the cache)
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decoding parameters.
+
+    ``temperature <= 0`` means greedy argmax (top_k/seed are then unused).
+    ``top_k == 0`` means no top-k filtering. ``seed`` fully determines the
+    sampled token stream for a given model/prompt: sampling state is kept
+    per slot and advances once per generated token, so results do not
+    depend on batch composition or slot assignment.
+    """
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+GREEDY = SamplingParams()
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request. Mutable fields track in-flight progress."""
+    rid: int
+    prompt: np.ndarray                  # (S,) int32 token ids
+    max_new_tokens: int = 16
+    sampling: SamplingParams = GREEDY
+    # called as stream(rid, token) the moment each token is committed
+    stream: Optional[Callable[[int, int], None]] = None
+    out_tokens: list = dataclasses.field(default_factory=list)
+    finish_reason: Optional[str] = None
+
+    @property
+    def done(self) -> bool:
+        return self.finish_reason is not None
+
+    @property
+    def prompt_len(self) -> int:
+        return int(len(self.prompt))
+
+    def emit(self, tok: int) -> None:
+        self.out_tokens.append(tok)
+        if self.stream is not None:
+            self.stream(self.rid, tok)
+
+    def output(self) -> "RequestOutput":
+        return RequestOutput(rid=self.rid, prompt_len=self.prompt_len,
+                             tokens=tuple(self.out_tokens),
+                             finish_reason=self.finish_reason)
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestOutput:
+    """Immutable result of a finished (or rejected) request."""
+    rid: int
+    prompt_len: int
+    tokens: tuple
+    finish_reason: Optional[str]
+
+    @property
+    def n_tokens(self) -> int:
+        return len(self.tokens)

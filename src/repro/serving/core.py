@@ -1,0 +1,236 @@
+"""EngineCore: stacked slot cache, bucketed batched prefill, fused
+decode+sampling.
+
+The core owns everything that touches the device:
+
+* **One stacked cache** — every per-slot cache leaf carries a leading ``B``
+  slot axis; ``pos`` is per-slot, so slots sit at different sequence depths
+  inside one pytree.
+* **Bucketed batched prefill** — prompts right-padded to the scheduler's
+  bucket length prefill as ONE jit'd ``serve_prefill_ragged`` call over all
+  ``B`` slot rows (idle rows carry a 1-token dummy prompt purely for shape
+  stability). The call retraces once per bucket length, never per prompt
+  length; ``prefill_compiles`` counts actual traces.
+* **Fused decode+sample** — one jit'd vmapped call per generated token runs
+  the model step AND per-slot sampling (greedy / temperature / top-k, each
+  slot's own PRNG key), so sampling adds zero extra dispatches.
+
+Per-request sampling state lives in (B,)-shaped host arrays scattered at
+admission; a slot's PRNG key is seeded from its request's
+``SamplingParams.seed`` and advances exactly once per generated token, so
+sampled streams are independent of batch composition and slot placement.
+
+Exactness: right-padded prefill is exact for KV-cache families (causal mask;
+per-slot ``pos`` re-based to the true length; decode overwrites each padded
+cache position before attending to it). SSM/hybrid state would run through
+the padding, so those families use the exact per-request prefill path
+(``supports_bucketing`` is False and the engine falls back automatically).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import registry as R
+from repro.serving.api import Request, SamplingParams
+
+_BUCKETED_FAMILIES = ("dense", "moe", "vlm", "encdec")
+
+
+def _sample_token(logits: jnp.ndarray, temp: jnp.ndarray, top_k: jnp.ndarray,
+                  greedy: jnp.ndarray, key: jnp.ndarray):
+    """Sample one token from (V,) logits under per-slot params.
+
+    Returns (token, advanced key). Dynamic top-k: k==0 disables filtering;
+    otherwise logits below the k-th largest are masked before the
+    temperature-scaled categorical draw.
+    """
+    V = logits.shape[-1]
+    lg = logits.astype(jnp.float32)
+    tok_greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+    nkey, skey = jax.random.split(key)
+    k = jnp.where(top_k > 0, top_k, V)
+    thresh = jnp.sort(lg)[::-1][jnp.clip(k - 1, 0, V - 1)]
+    filt = jnp.where(lg >= thresh, lg, -jnp.inf)
+    scaled = filt / jnp.maximum(temp, 1e-6)
+    tok_sampled = jax.random.categorical(skey, scaled).astype(jnp.int32)
+    return jnp.where(greedy, tok_greedy, tok_sampled), nkey
+
+
+# Shared across cores; retraces per (B, V) shape only.
+_SAMPLE = jax.jit(jax.vmap(_sample_token))
+
+
+@functools.lru_cache(maxsize=16)
+def _decode_step_fn(cfg: ModelConfig):
+    """Compiled fused decode+sample step, shared across engine instances
+    with the same (hashable) config — engine restarts don't recompile."""
+
+    def _batched_step(p, caches, tokens, temps, topks, greedy, keys):
+        """(stacked caches, (B,) last tokens, (B,) sampling state)
+        -> ((B,) next tokens, caches, (B,2) advanced keys)."""
+
+        def one_slot(cache, tok):
+            logits, new_cache = R.serve_step(p, cfg, cache, tok[None, None])
+            return logits[0], new_cache
+
+        logits, new_caches = jax.vmap(one_slot)(caches, tokens)
+
+        # All-greedy batches (the default) skip the per-slot full-vocab
+        # sort + categorical entirely at runtime; greedy slots never consume
+        # their keys, so leaving them unadvanced preserves the per-request
+        # determinism contract (a sampling slot forces the mixed branch).
+        def _all_greedy(_):
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), keys
+
+        def _mixed(_):
+            return jax.vmap(_sample_token)(logits, temps, topks, greedy, keys)
+
+        toks, nkeys = jax.lax.cond(jnp.all(greedy), _all_greedy, _mixed, None)
+        return toks, new_caches, nkeys
+
+    return jax.jit(_batched_step)
+
+
+def _leaf_batch_axes(cfg: ModelConfig, buffer_len: int):
+    """Per-leaf batch-axis index of the serving cache (-1 = no batch axis,
+    e.g. the shared scalar ``pos``), found by diffing B=2 vs B=1 specs."""
+
+    def axis_of(s2, s1):
+        for ax, (a, b) in enumerate(zip(s2.shape, s1.shape)):
+            if a != b:
+                return ax
+        return -1
+
+    return jax.tree_util.tree_map(axis_of, R.cache_spec(cfg, 2, buffer_len),
+                                  R.cache_spec(cfg, 1, buffer_len))
+
+
+class EngineCore:
+    """Device-side half of the engine: caches, prefill, decode, sampling."""
+
+    def __init__(self, params, cfg: ModelConfig, *, batch_slots: int = 4,
+                 buffer_len: int = 256):
+        self.params = params
+        self.cfg = cfg
+        self.B = batch_slots
+        self.T = buffer_len
+        self.prefill_compiles = 0
+        # ONE stacked cache: every per-slot leaf gains a leading B axis.
+        one = R.init_cache(cfg, 1, buffer_len)
+        self.caches = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (batch_slots,) + a.shape), one)
+        self._axes = _leaf_batch_axes(cfg, buffer_len)
+        self._step_fn = _decode_step_fn(cfg)
+        # Per-slot sampling state (host-side, scattered at admission).
+        self.temps = np.zeros(batch_slots, np.float32)
+        self.topks = np.zeros(batch_slots, np.int32)
+        self.greedy = np.ones(batch_slots, bool)
+        self.keys = np.array(
+            np.broadcast_to(np.asarray(jax.random.PRNGKey(0)),
+                            (batch_slots, 2)))
+
+        def _raw_prefill(p, tokens, lengths):
+            # trace-time side effect: counts actual (re)compilations
+            self.prefill_compiles += 1
+            return R.serve_prefill_ragged(p, cfg, {"tokens": tokens},
+                                          buffer_len, lengths)
+
+        def _raw_prefill_exact(p, tokens):
+            self.prefill_compiles += 1
+            return R.serve_prefill(p, cfg, {"tokens": tokens}, buffer_len)
+
+        self._prefill = jax.jit(_raw_prefill)          # retraces per bucket
+        self._prefill_exact = jax.jit(_raw_prefill_exact)  # per prompt length
+
+    @property
+    def supports_bucketing(self) -> bool:
+        """Padded batched prefill is exact only for KV-cache families."""
+        return self.cfg.family in _BUCKETED_FAMILIES
+
+    # -- sampling state ----------------------------------------------------
+
+    def _set_sampling(self, i: int, sp: SamplingParams) -> None:
+        self.temps[i] = max(sp.temperature, 0.0)
+        self.topks[i] = sp.top_k
+        self.greedy[i] = sp.greedy
+        self.keys[i] = np.asarray(jax.random.PRNGKey(sp.seed))
+
+    def _sample(self, logits: jnp.ndarray) -> np.ndarray:
+        """Sample (B,) tokens from (B, V) logits; advances NO keys itself —
+        callers commit ``self.keys`` rows for the slots they own."""
+        toks, nkeys = _SAMPLE(logits, jnp.asarray(self.temps),
+                              jnp.asarray(self.topks),
+                              jnp.asarray(self.greedy),
+                              jnp.asarray(self.keys))
+        return np.asarray(toks), np.asarray(nkeys)
+
+    # -- prefill -----------------------------------------------------------
+
+    def prefill_group(self, slot_reqs: list, bucket: int) -> np.ndarray:
+        """Prefill same-bucket requests in ONE jit'd batched call.
+
+        ``slot_reqs`` is [(slot, Request)]; request rows ride at their slot
+        index inside a full (B, bucket) token batch (idle rows are dummies),
+        so one compile per bucket serves every slot subset. Returns (B,)
+        first sampled tokens (rows outside ``slot_reqs`` are meaningless).
+        """
+        Lb = min(bucket, self.T)
+        tokens = np.zeros((self.B, Lb), np.int32)
+        lengths = np.ones(self.B, np.int32)
+        for i, req in slot_reqs:
+            plen = req.prompt_len
+            tokens[i, :plen] = req.prompt
+            lengths[i] = plen
+            self._set_sampling(i, req.sampling)
+        logits, group_cache = self._prefill(self.params, jnp.asarray(tokens),
+                                            jnp.asarray(lengths))
+        for i, req in slot_reqs:
+            self._adopt_row(i, group_cache, int(lengths[i]))
+        toks, nkeys = self._sample(logits)
+        for i, _req in slot_reqs:
+            self.keys[i] = nkeys[i]
+        return toks
+
+    def prefill_one(self, slot: int, req: Request) -> int:
+        """Exact per-request prefill at native prompt length (fallback for
+        recurrent-state families and the unbucketed baseline)."""
+        self._set_sampling(slot, req.sampling)
+        prompt = jnp.asarray(req.prompt[None, :], jnp.int32)
+        logits, cache = self._prefill_exact(self.params, prompt)
+        self.caches = jax.tree_util.tree_map(
+            lambda big, small: big.at[slot].set(small), self.caches, cache)
+        toks, nkeys = self._sample(
+            jnp.broadcast_to(logits, (self.B,) + logits.shape[1:]))
+        self.keys[slot] = nkeys[slot]
+        return int(toks[slot])
+
+    def _adopt_row(self, i: int, group_cache, plen: int) -> None:
+        """Scatter row i of a B-row prefill cache into slot i, re-basing the
+        slot's ``pos`` to the true prompt length (padded K/V past it are
+        masked until decode overwrites them)."""
+
+        def put(big, grp, ax):
+            if ax < 0:
+                return big                          # shared leaf (pos)
+            return big.at[i].set(
+                jnp.take(grp, jnp.asarray([i]), axis=ax))
+
+        self.caches = jax.tree_util.tree_map(put, self.caches, group_cache,
+                                             self._axes)
+        self.caches["pos"] = self.caches["pos"].at[i].set(plen)
+
+    # -- decode ------------------------------------------------------------
+
+    def decode(self, last_tokens: np.ndarray) -> np.ndarray:
+        """Advance ALL slots one token with ONE fused decode+sample call."""
+        next_toks, self.caches, nkeys = self._step_fn(
+            self.params, self.caches, jnp.asarray(last_tokens),
+            jnp.asarray(self.temps), jnp.asarray(self.topks),
+            jnp.asarray(self.greedy), jnp.asarray(self.keys))
+        self.keys = np.array(nkeys)                  # writable host copy
+        return np.asarray(next_toks)                 # single host sync

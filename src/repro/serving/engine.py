@@ -1,139 +1,171 @@
-"""Batched serving engine: continuous batching with ONE jit'd batched decode.
+"""LLMEngine: request-level serving orchestrator (Scheduler + EngineCore).
 
-Requests queue up; the engine fills free slots by prefilling prompts and
-scattering the resulting per-slot cache into a single stacked cache pytree
-(every leaf carries a leading ``B`` slot axis). Decode then advances ALL
-active slots with exactly one jit'd call per token: the per-slot step is
-vmapped over the slot axis, so the B per-slot memory-bound GEMVs that the
-seed engine issued sequentially from Python fuse into one batched GEMM —
-precisely the regime the paper's on-the-fly weights generation (and the
-fused TiWGen kernel) was built for. Slot masks are handled host-side:
-inactive slots still flow through the batched step (shape stability) and
-their outputs are ignored.
+The engine wires the three serving layers together:
+
+* a pluggable :class:`~repro.serving.scheduler.FCFSScheduler` (or any object
+  with the same ``add`` / ``next_group`` / ``__len__`` surface) performs
+  admission control and hands back length-bucketed prefill groups;
+* an :class:`~repro.serving.core.EngineCore` owns the stacked slot cache,
+  the jit'd bucketed batched prefill, and the ONE fused decode+sample call
+  that advances every active slot per generated token;
+* this module tracks slots, finish reasons (``length`` / ``eos`` /
+  ``rejected``), streaming callbacks, and per-phase wall time.
 
 When the model has OVSF layers and no explicit plan is set, the engine asks
 the hardware-aware layer mapper (``runtime.mapper``) for a decode-shaped
-ExecutionPlan, so every compressed GEMM runs the execution path the roofline
-model picks for the (layer, device) pair instead of a global default.
+ExecutionPlan against the engine's ``hw`` target (any registered preset:
+``v5e``/``v5p``/``v6e``/``cpu``), so every compressed GEMM runs the
+execution path the roofline model picks for the (layer, device) pair.
+
+``ServingEngine`` remains as a thin compatibility alias of ``LLMEngine``
+(the dead ``greedy`` flag is gone — sampling is per-request via
+``SamplingParams``).
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-from collections import deque
+import time
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.models import registry as R
+from repro.serving.api import (FINISH_EOS, FINISH_LENGTH, Request,
+                               RequestOutput, SamplingParams)
+from repro.serving.core import EngineCore
+from repro.serving.scheduler import FCFSScheduler
 
-
-@functools.lru_cache(maxsize=16)
-def _decode_step_fn(cfg: ModelConfig):
-    """Compiled batched decode step, shared across engine instances with the
-    same (hashable) config — engine restarts don't retrace or recompile."""
-
-    def _batched_step(p, caches, tokens):
-        """(stacked caches, (B,) last tokens) -> ((B,) next, caches)."""
-
-        def one_slot(cache, tok):
-            logits, new_cache = R.serve_step(p, cfg, cache, tok[None, None])
-            return jnp.argmax(logits[0], axis=-1).astype(jnp.int32), new_cache
-
-        return jax.vmap(one_slot)(caches, tokens)
-
-    return jax.jit(_batched_step)
-
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray            # (S,) int32
-    max_new_tokens: int = 16
-    out_tokens: list = dataclasses.field(default_factory=list)
-    done: bool = False
+__all__ = ["LLMEngine", "ServingEngine", "EngineStats", "Request",
+           "SamplingParams", "RequestOutput"]
 
 
 @dataclasses.dataclass
 class EngineStats:
-    steps: int = 0                # decode steps == jit'd batched decode calls
+    steps: int = 0                # decode steps == fused decode+sample calls
     tokens_out: int = 0
-    prefills: int = 0
+    prefills: int = 0             # requests prefilled
+    prefill_batches: int = 0      # jit'd prefill calls (groups + fallbacks)
+    prefill_compiles: int = 0     # actual prefill traces (<= n_buckets when
+                                  # bucketing; per distinct length otherwise)
     completed: int = 0
+    rejected: int = 0
+    prefill_s: float = 0.0        # per-phase wall time
+    decode_s: float = 0.0
 
 
-class ServingEngine:
+class LLMEngine:
+    """Continuous-batching serving engine over a fixed set of decode slots."""
+
     def __init__(self, params, cfg: ModelConfig, *, batch_slots: int = 4,
                  buffer_len: int = 256, eos_id: Optional[int] = None,
-                 greedy: bool = True, use_mapper: bool = True):
-        self.cfg = self._plan_cfg(cfg, batch_slots, use_mapper)
+                 use_mapper: bool = True, hw="v5e",
+                 bucketed_prefill: bool = True, admission: str = "reject",
+                 scheduler=None):
+        self.cfg = self._plan_cfg(cfg, batch_slots, use_mapper, hw)
         self.params = params
         self.B = batch_slots
         self.T = buffer_len
         self.eos = eos_id
-        self.greedy = greedy
-        self.queue: deque[Request] = deque()
+        self.core = EngineCore(params, self.cfg, batch_slots=batch_slots,
+                               buffer_len=buffer_len)
+        self.bucketed = bucketed_prefill and self.core.supports_bucketing
+        self.scheduler = scheduler if scheduler is not None else FCFSScheduler(
+            buffer_len, admission=admission, bucketing=self.bucketed)
         self.slots: list[Optional[Request]] = [None] * batch_slots
         self.slot_remaining = np.zeros(batch_slots, np.int32)
         self.stats = EngineStats()
-        # ONE stacked cache: every per-slot leaf gains a leading B axis.
-        one = R.init_cache(self.cfg, 1, buffer_len)
-        self.caches = jax.tree_util.tree_map(
-            lambda a: jnp.broadcast_to(a[None], (batch_slots,) + a.shape), one)
-        self._step_fn = _decode_step_fn(self.cfg)
+        self._finished: list[RequestOutput] = []
+
+    # The fused decode+sample callable; kept assignable for instrumentation.
+    @property
+    def _step_fn(self):
+        return self.core._step_fn
+
+    @_step_fn.setter
+    def _step_fn(self, fn):
+        self.core._step_fn = fn
 
     @staticmethod
-    def _plan_cfg(cfg: ModelConfig, batch_slots: int,
-                  use_mapper: bool) -> ModelConfig:
+    def _plan_cfg(cfg: ModelConfig, batch_slots: int, use_mapper: bool,
+                  hw) -> ModelConfig:
         if not use_mapper or not cfg.ovsf.enable or cfg.exec_plan is not None:
             return cfg
         from repro.runtime import mapper
         shape = ShapeConfig("serve_decode", 1, batch_slots, "decode")
         # weight_reuse=1: the decode step is jit'd, so the eager decompress
         # cache cannot amortise generation across steps inside the compiled
-        # program — don't let the model assume it. (Within a step, reuse
-        # across slots comes from batching itself; cross-step amortisation
-        # applies to eager consumers like CNN eval.)
+        # program — don't let the model assume it.
         return mapper.apply_plan(
-            cfg, mapper.plan_model(cfg, shape, weight_reuse=1))
+            cfg, mapper.plan_model(cfg, shape, hw=hw, weight_reuse=1))
 
-    def submit(self, req: Request) -> None:
-        self.queue.append(req)
+    # -- request intake ----------------------------------------------------
 
-    def _insert_slot_cache(self, i: int, cache: dict) -> None:
-        """Scatter one prefilled B=1 cache into slot i of the stacked cache."""
-        self.caches = jax.tree_util.tree_map(
-            lambda big, small: big.at[i].set(small), self.caches, cache)
+    def submit(self, req: Request) -> bool:
+        """Admit a request (False + a ``rejected`` RequestOutput if it would
+        overflow the cache buffer under the scheduler's admission policy)."""
+        if self.scheduler.add(req):
+            return True
+        self.stats.rejected += 1
+        self._finished.append(req.output())
+        return False
+
+    def outputs(self) -> list[RequestOutput]:
+        """Finished (completed + rejected) requests, in finish order."""
+        return list(self._finished)
+
+    # -- scheduling + prefill ----------------------------------------------
+
+    def _free_slots(self) -> list[int]:
+        return [i for i in range(self.B) if self.slots[i] is None]
+
+    def _commit_first_token(self, i: int, req: Request, tok: int) -> None:
+        req.emit(tok)
+        self.slots[i] = req
+        self.slot_remaining[i] = req.max_new_tokens - 1
+        self.stats.prefills += 1
+        self.stats.tokens_out += 1
+        # eos outranks length (same priority as the decode path): a request
+        # whose last allowed token is eos stopped naturally, not truncated
+        if self.eos is not None and tok == self.eos:
+            self._finish(i, FINISH_EOS)
+        elif self.slot_remaining[i] <= 0:
+            self._finish(i, FINISH_LENGTH)
 
     def _fill_slots(self) -> None:
-        for i in range(self.B):
-            if self.slots[i] is None and self.queue:
-                req = self.queue.popleft()
-                prompt = jnp.asarray(req.prompt[None, :], jnp.int32)
-                logits, cache = R.serve_prefill(
-                    self.params, self.cfg, {"tokens": prompt}, self.T)
-                self._insert_slot_cache(i, cache)
-                tok = int(jnp.argmax(logits[0]))
-                req.out_tokens.append(tok)
-                self.slots[i] = req
-                self.slot_remaining[i] = req.max_new_tokens - 1
-                self.stats.prefills += 1
-                self.stats.tokens_out += 1
-                if self.slot_remaining[i] <= 0 or (self.eos is not None
-                                                   and tok == self.eos):
-                    req.done = True
-                    self.slots[i] = None
-                    self.stats.completed += 1
+        t0 = time.perf_counter()
+        free = self._free_slots()
+        while free and len(self.scheduler):
+            group = self.scheduler.next_group(len(free))
+            if group is None or not group.requests:
+                break
+            slot_reqs = list(zip(free, group.requests))
+            if self.bucketed:
+                toks = self.core.prefill_group(slot_reqs, group.bucket)
+                self.stats.prefill_batches += 1
+                for i, req in slot_reqs:
+                    self._commit_first_token(i, req, int(toks[i]))
+            else:
+                for i, req in slot_reqs:
+                    tok = self.core.prefill_one(i, req)
+                    self.stats.prefill_batches += 1
+                    self._commit_first_token(i, req, tok)
+            free = self._free_slots()
+        self.stats.prefill_s += time.perf_counter() - t0
+        self.stats.prefill_compiles = self.core.prefill_compiles
+
+    def _finish(self, i: int, reason: str) -> None:
+        req = self.slots[i]
+        req.finish_reason = reason
+        self._finished.append(req.output())
+        self.slots[i] = None
+        self.stats.completed += 1
+
+    # -- decode ------------------------------------------------------------
 
     def step(self) -> int:
-        """One decode step across all active slots. Returns #active.
-
-        Exactly one jit'd batched call advances every active slot; there is
-        no per-slot Python loop over model invocations.
-        """
+        """Admit + prefill waiting requests, then advance all active slots
+        one token with exactly one fused decode+sample call. Returns the
+        number of active slots (0 = nothing to decode)."""
         self._fill_slots()
         active = [i for i in range(self.B) if self.slots[i] is not None]
         if not active:
@@ -141,25 +173,35 @@ class ServingEngine:
         last = np.zeros(self.B, np.int32)
         for i in active:
             last[i] = self.slots[i].out_tokens[-1]
-        next_toks, self.caches = self._step_fn(
-            self.params, self.caches, jnp.asarray(last))
-        nxt = np.asarray(next_toks)                  # single host sync
+        t0 = time.perf_counter()
+        nxt = self._step_fn_decode(last)
+        self.stats.decode_s += time.perf_counter() - t0
         for i in active:
             req = self.slots[i]
             tok = int(nxt[i])
-            req.out_tokens.append(tok)
+            req.emit(tok)
             self.stats.tokens_out += 1
             self.slot_remaining[i] -= 1
-            if (self.slot_remaining[i] <= 0
-                    or (self.eos is not None and tok == self.eos)):
-                req.done = True
-                self.slots[i] = None
-                self.stats.completed += 1
+            if self.eos is not None and tok == self.eos:
+                self._finish(i, FINISH_EOS)
+            elif self.slot_remaining[i] <= 0:
+                self._finish(i, FINISH_LENGTH)
         self.stats.steps += 1
         return len(active)
 
+    def _step_fn_decode(self, last: np.ndarray) -> np.ndarray:
+        return self.core.decode(last)
+
     def run_until_drained(self, max_steps: int = 10_000) -> EngineStats:
         for _ in range(max_steps):
-            if self.step() == 0 and not self.queue:
+            if self.step() == 0 and not len(self.scheduler):
                 break
         return self.stats
+
+
+class ServingEngine(LLMEngine):
+    """Compatibility shim for the pre-request-API engine surface.
+
+    Same constructor minus the dead ``greedy`` flag (per-request
+    ``SamplingParams`` subsumed it). Prefer ``LLMEngine`` in new code.
+    """

@@ -1,0 +1,119 @@
+"""Pluggable request scheduling: admission control + length-bucketed batching.
+
+The scheduler owns the waiting queue and two decisions the engine core must
+not make:
+
+* **Admission** — a request whose ``prompt_len + max_new_tokens`` exceeds the
+  cache buffer would silently wrap the stacked KV cache during decode (the
+  position-update is a ``dynamic_update_slice`` at ``pos``); such requests
+  are rejected (or truncated, policy ``"truncate"``) *here*, never admitted.
+* **Bucketing** — prompt lengths are right-padded up to a small set of
+  power-of-two buckets so batched prefill traces once per *bucket* instead
+  of once per distinct prompt length. ``next_group`` hands the engine groups
+  of same-bucket requests, head-of-queue first (FCFS: the oldest waiting
+  request is always in the next group, so batching never starves it).
+
+Alternative schedulers implement the same three-method surface
+(``add`` / ``next_group`` / ``__len__``) and are passed to ``LLMEngine``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+from repro.serving.api import FINISH_REJECTED, Request
+
+
+def bucket_lengths(buffer_len: int, *, min_bucket: int = 8,
+                   n_buckets: int = 0) -> tuple[int, ...]:
+    """Power-of-two prefill buckets up to the cache buffer length.
+
+    The last bucket is clamped to ``buffer_len`` itself so a near-capacity
+    prompt still fits the buffer after padding.
+    """
+    out: list[int] = []
+    b = max(min_bucket, 1)
+    while b < buffer_len:
+        out.append(b)
+        b *= 2
+    out.append(buffer_len)
+    if n_buckets and len(out) > n_buckets:
+        out = out[-n_buckets:]
+    return tuple(out)
+
+
+def bucket_for(plen: int, buckets: tuple[int, ...]) -> int:
+    """Smallest bucket >= plen (admission guarantees one exists)."""
+    for b in buckets:
+        if plen <= b:
+            return b
+    raise ValueError(f"prompt length {plen} exceeds largest bucket "
+                     f"{buckets[-1]}")
+
+
+@dataclasses.dataclass
+class PrefillGroup:
+    """Same-bucket requests to prefill in one jit'd batched call."""
+    bucket: int
+    requests: list
+
+
+class FCFSScheduler:
+    """Default scheduler: FCFS admission order, same-bucket group batching.
+
+    ``admission``: ``"reject"`` marks overflowing requests FINISH_REJECTED at
+    ``add`` time; ``"truncate"`` clamps ``max_new_tokens`` to the remaining
+    buffer (prompts longer than ``buffer_len - 1`` are rejected either way —
+    there is no principled way to truncate a prompt on the engine's behalf).
+    """
+
+    def __init__(self, buffer_len: int, *, admission: str = "reject",
+                 min_bucket: int = 8, bucketing: bool = True):
+        if admission not in ("reject", "truncate"):
+            raise ValueError(f"admission policy {admission!r}")
+        self.buffer_len = buffer_len
+        self.admission = admission
+        self.bucketing = bucketing
+        self.buckets = bucket_lengths(buffer_len, min_bucket=min_bucket)
+        self.waiting: deque[Request] = deque()
+
+    def __len__(self) -> int:
+        return len(self.waiting)
+
+    def add(self, req: Request) -> bool:
+        """Admit or reject. Rejected requests get FINISH_REJECTED set."""
+        plen = req.prompt_len
+        overflow = plen + req.max_new_tokens > self.buffer_len
+        if plen < 1 or plen > self.buffer_len - 1 or (
+                overflow and self.admission == "reject"):
+            req.finish_reason = FINISH_REJECTED
+            return False
+        if overflow:  # admission == "truncate"
+            req.max_new_tokens = self.buffer_len - plen
+        self.waiting.append(req)
+        return True
+
+    def bucket_of(self, req: Request) -> int:
+        if not self.bucketing:
+            return req.prompt_len        # exact-length "bucket" per request
+        return bucket_for(req.prompt_len, self.buckets)
+
+    def next_group(self, max_size: int) -> Optional[PrefillGroup]:
+        """Pop the next prefill group: the head-of-queue request plus up to
+        ``max_size - 1`` younger same-bucket requests (queue order kept)."""
+        if not self.waiting or max_size < 1:
+            return None
+        head = self.waiting[0]
+        bucket = self.bucket_of(head)
+        picked = []
+        rest = deque()
+        while self.waiting and len(picked) < max_size:
+            r = self.waiting.popleft()
+            if self.bucket_of(r) == bucket:
+                picked.append(r)
+            else:
+                rest.append(r)
+        rest.extend(self.waiting)
+        self.waiting = rest
+        return PrefillGroup(bucket, picked)

@@ -57,6 +57,28 @@ def test_serving_engine_drains():
     assert stats.tokens_out == 3 * 4
 
 
+def test_serving_engine_rejects_cache_overflow():
+    # Regression: the old engine admitted prompt_len + max_new > buffer_len
+    # and decode silently wrapped the stacked cache past T. Admission now
+    # rejects (default policy) and the request surfaces with finish_reason
+    # "rejected" instead of clobbering other slots' caches.
+    cfg = get_smoke_config("tinyllama_1_1b")
+    params = R.model_init(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(params, cfg, batch_slots=2, buffer_len=32)
+    rng = np.random.default_rng(0)
+    ok = Request(0, rng.integers(0, cfg.vocab, 5, dtype=np.int32),
+                 max_new_tokens=4)
+    bad = Request(1, rng.integers(0, cfg.vocab, 20, dtype=np.int32),
+                  max_new_tokens=20)                  # 40 > 32
+    assert eng.submit(ok)
+    assert not eng.submit(bad)
+    stats = eng.run_until_drained()
+    assert stats.completed == 1 and stats.rejected == 1
+    assert bad.finish_reason == "rejected"
+    assert ok.finish_reason == "length"
+    assert len(ok.out_tokens) == 4                    # unaffected by reject
+
+
 def test_serving_greedy_matches_manual_decode():
     import jax.numpy as jnp
     cfg = get_smoke_config("tinyllama_1_1b")
