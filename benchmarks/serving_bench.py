@@ -1,16 +1,25 @@
-"""Serving benchmarks: batched decode vs the seed's per-slot loop, and
-bucketed batched prefill vs per-prompt-length prefill.
+"""Serving benchmarks: batched decode vs the seed's per-slot loop, bucketed
+batched prefill vs per-prompt-length prefill, and chunked (step-based)
+serving vs phase-based bucketed prefill.
 
-Two comparisons, both written to ``BENCH_serving.json``:
+Three comparisons, all written to ``BENCH_serving.json``:
 
-* **decode**: the seed ``ServingEngine`` stepped B independent B=1 caches in
-  a Python loop — B sequential memory-bound GEMV-shaped model calls per
-  generated token. The engine advances all slots with ONE fused
-  decode+sample call per token.
+* **decode**: the seed engine stepped B independent B=1 caches in a Python
+  loop — B sequential memory-bound GEMV-shaped model calls per generated
+  token. The engine advances all slots with ONE fused decode+sample call.
 * **prefill (mixed-length workload)**: without bucketing, every distinct
   prompt length traces/compiles its own prefill; with the scheduler's
   power-of-two buckets, prompts are right-padded and prefilled in one jit'd
   batched call per bucket — at most ``n_buckets`` traces end-to-end.
+* **chunked vs bucketed (latency)**: phase-based prefill stalls every
+  active decode slot for a whole bucket; chunked mode feeds queued prompts
+  through the decode-shaped path in fixed-size slices inside the SAME fused
+  step, so TTFT of queued requests stops gating inter-token latency. The
+  A/B runs the staggered-completion workload (mixed lengths AND mixed
+  max_new) where slots free one at a time — the realistic mix where the
+  phase-based convoy effect actually lands on ITL. TTFT and ITL p50/p95
+  are reported per mode; the chunked steady state must trace at most 2
+  step shapes (asserted — CI gate).
 
 ``--hw`` threads any registered HW target (v5e/v5p/v6e/cpu) into the
 mapper's execution planning (the model still *runs* on the host backend).
@@ -34,7 +43,9 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.models import registry as R
-from repro.serving import LLMEngine, Request, ServingEngine
+from repro.serving import LLMEngine, Request
+
+MAX_STEP_SHAPES = 2      # chunked steady state: (B, chunk) window + (B, 1)
 
 
 @functools.lru_cache(maxsize=4)
@@ -109,12 +120,44 @@ def _mixed_requests(cfg, n, lo=4, hi=96):
                     max_new_tokens=8) for rid, L in enumerate(lens)]
 
 
+def _staggered_requests(cfg, n, lo=4, hi=96):
+    """Mixed lengths AND mixed generation budgets (4..19 tokens).
+
+    Uniform ``max_new`` lets slots finish in lockstep, so phase-based
+    prefill rarely coexists with decode and its convoy effect hides from
+    ITL. Staggered completions are the realistic serving mix — slots free
+    one at a time, every phase-based prefill stalls the other three active
+    decoders — and are where chunked interleaving earns its keep.
+    """
+    lens = np.linspace(lo, hi, n).astype(int)
+    rng = np.random.default_rng(2)
+    return [Request(rid, rng.integers(0, cfg.vocab, int(L), dtype=np.int32),
+                    max_new_tokens=4 + 3 * (rid % 6))
+            for rid, L in enumerate(lens)]
+
+
+def _latency(outputs) -> dict:
+    """TTFT / inter-token-latency percentiles over finished requests."""
+    ttfts = [o.ttft_s for o in outputs if o.ttft_s is not None]
+    itls = [d for o in outputs for d in o.itls_s]
+    pct = lambda xs, q: float(np.percentile(xs, q)) if xs else 0.0
+    return {"ttft_p50_s": pct(ttfts, 50), "ttft_p95_s": pct(ttfts, 95),
+            "itl_p50_s": pct(itls, 50), "itl_p95_s": pct(itls, 95)}
+
+
 def run(print_fn=print, smoke: bool = False,
-        json_path: str = "", hw: str = "v5e") -> dict:
+        json_path: str = "", hw: str = "v5e",
+        chunk_size: int = 16) -> dict:
     # smoke runs land in a separate file so they never clobber the
-    # full-mode perf trajectory (hw-suffixed: CI runs a small hw matrix)
-    json_path = json_path or (
-        f"BENCH_serving_smoke_{hw}.json" if smoke else "BENCH_serving.json")
+    # full-mode perf trajectory (hw-suffixed: CI runs a small hw matrix);
+    # full runs against a non-default hw are hw-suffixed too, so the
+    # canonical BENCH_serving.json trajectory stays single-target (v5e)
+    if not json_path:
+        if smoke:
+            json_path = f"BENCH_serving_smoke_{hw}.json"
+        else:
+            json_path = ("BENCH_serving.json" if hw == "v5e"
+                         else f"BENCH_serving_{hw}.json")
     B = 4
     n_req = 4 if smoke else 8
     cfg = get_smoke_config("tinyllama_1_1b")
@@ -136,7 +179,7 @@ def run(print_fn=print, smoke: bool = False,
         return eng.tokens_out, time.perf_counter() - t0
 
     def time_batched():
-        eng = ServingEngine(params, cfg, batch_slots=B, buffer_len=64, hw=hw)
+        eng = LLMEngine(params, cfg, batch_slots=B, buffer_len=64, hw=hw)
         for r in _requests(cfg, n_req, np.random.default_rng(0)):
             eng.submit(r)
         t0 = time.perf_counter()
@@ -156,7 +199,7 @@ def run(print_fn=print, smoke: bool = False,
     print_fn(f"serving_bench,batched,B={B},{tps_b:.1f}tok/s")
     print_fn(f"serving_bench,speedup,{speedup:.2f}x")
 
-    # -- bucketed batched prefill vs per-length prefill (mixed lengths) -----
+    # -- mixed-length workload: unbucketed vs bucketed vs chunked -----------
     # End-to-end on FRESH engines: prefill tracing/compilation is the cost
     # bucketing removes, so it stays inside the timed region. The decode
     # step fn is shared (lru by config) and warmed above.
@@ -164,17 +207,20 @@ def run(print_fn=print, smoke: bool = False,
     lo, hi = 4, (56 if smoke else 96)
     buf = 128
 
-    def time_mixed(bucketed: bool):
+    def time_mixed(mode: str, reqs_fn=_mixed_requests):
+        kw = {"bucketed_prefill": mode == "bucketed"}
+        if mode == "chunked":
+            kw = {"chunk_size": chunk_size}
         eng = LLMEngine(params, cfg, batch_slots=B, buffer_len=buf, hw=hw,
-                        bucketed_prefill=bucketed)
-        for r in _mixed_requests(cfg, n_mixed, lo=lo, hi=hi):
+                        **kw)
+        for r in reqs_fn(cfg, n_mixed, lo=lo, hi=hi):
             eng.submit(r)
         t0 = time.perf_counter()
         stats = eng.run_until_drained()
-        return stats, time.perf_counter() - t0
+        return eng, stats, time.perf_counter() - t0
 
-    stats_u, dt_u = time_mixed(bucketed=False)
-    stats_b, dt_b = time_mixed(bucketed=True)
+    eng_u, stats_u, dt_u = time_mixed("unbucketed")
+    eng_b, stats_b, dt_b = time_mixed("bucketed")
     tps_u = stats_u.tokens_out / dt_u
     tps_bk = stats_b.tokens_out / dt_b
     bucketed_speedup = tps_bk / tps_u
@@ -183,6 +229,37 @@ def run(print_fn=print, smoke: bool = False,
     print_fn(f"serving_bench,mixed_bucketed,B={B},n={n_mixed},"
              f"{tps_bk:.1f}tok/s,compiles={stats_b.prefill_compiles}")
     print_fn(f"serving_bench,bucketed_speedup,{bucketed_speedup:.2f}x")
+
+    # -- chunked vs bucketed: staggered-completion latency A/B --------------
+    eng_sb, stats_sb, dt_sb = time_mixed("bucketed", _staggered_requests)
+    eng_c, stats_c, dt_c = time_mixed("chunked", _staggered_requests)
+    tps_sb = stats_sb.tokens_out / dt_sb
+    tps_c = stats_c.tokens_out / dt_c
+    lat = {m: _latency(e.outputs())
+           for m, e in (("unbucketed", eng_u), ("bucketed", eng_b),
+                        ("bucketed_staggered", eng_sb), ("chunked", eng_c))}
+    print_fn(f"serving_bench,staggered_bucketed,B={B},n={n_mixed},"
+             f"{tps_sb:.1f}tok/s,compiles={stats_sb.prefill_compiles}")
+    print_fn(f"serving_bench,staggered_chunked,B={B},n={n_mixed},"
+             f"chunk={chunk_size},{tps_c:.1f}tok/s,"
+             f"step_compiles={stats_c.step_compiles}")
+    for m in ("bucketed_staggered", "chunked"):
+        print_fn(f"serving_bench,latency_{m},"
+                 f"ttft_p95={lat[m]['ttft_p95_s']*1e3:.1f}ms,"
+                 f"itl_p50={lat[m]['itl_p50_s']*1e3:.1f}ms,"
+                 f"itl_p95={lat[m]['itl_p95_s']*1e3:.1f}ms")
+    itl_gain = (lat["bucketed_staggered"]["itl_p95_s"]
+                / lat["chunked"]["itl_p95_s"]
+                if lat["chunked"]["itl_p95_s"] > 0 else 0.0)
+    print_fn(f"serving_bench,chunked_itl_p95_gain,{itl_gain:.2f}x,"
+             f"throughput_ratio={tps_c / tps_sb:.2f}")
+
+    # CI gate: the chunked steady state must stay on a bounded set of fused
+    # step shapes regardless of the prompt-length mix.
+    if stats_c.step_compiles > MAX_STEP_SHAPES:
+        raise RuntimeError(
+            f"chunked serving traced {stats_c.step_compiles} step shapes "
+            f"(> {MAX_STEP_SHAPES}): the unified step is retracing")
 
     result = {"bench": "serving", "smoke": smoke, "batch_slots": B,
               "model": cfg.name, "backend": jax.default_backend(), "hw": hw,
@@ -195,7 +272,18 @@ def run(print_fn=print, smoke: bool = False,
                   "unbucketed_prefill_compiles": stats_u.prefill_compiles,
                   "bucketed_prefill_compiles": stats_b.prefill_compiles,
                   "bucketed_prefill_s": stats_b.prefill_s,
-                  "unbucketed_prefill_s": stats_u.prefill_s}}
+                  "unbucketed_prefill_s": stats_u.prefill_s},
+              "chunked_prefill": {
+                  "n_requests": n_mixed,
+                  "prompt_lens": f"mixed {lo}..{hi}",
+                  "max_new": "staggered 4..19",
+                  "chunk_size": chunk_size,
+                  "chunked_tok_s": tps_c, "bucketed_tok_s": tps_sb,
+                  "throughput_ratio_vs_bucketed": tps_c / tps_sb,
+                  "itl_p95_gain_vs_bucketed": itl_gain,
+                  "step_compiles": stats_c.step_compiles,
+                  "chunk_tokens": stats_c.chunk_tokens},
+              "latency": lat}
     if json_path:
         with open(json_path, "w") as f:
             json.dump(result, f, indent=2)
@@ -211,5 +299,6 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--hw", default="v5e", choices=list(hw_names()))
+    ap.add_argument("--chunk-size", type=int, default=16)
     a = ap.parse_args()
-    run(smoke=a.smoke, hw=a.hw)
+    run(smoke=a.smoke, hw=a.hw, chunk_size=a.chunk_size)

@@ -52,9 +52,25 @@ def main() -> None:
               f"prefill_compiles={stats.prefill_compiles} "
               f"({stats.tokens_out/dt:6.1f} tok/s on CPU)")
 
-    # Streaming: tokens surface through the callback as they are committed.
+    # Chunked prefill + decode interleaving: queued prompts feed through the
+    # decode-shaped path in fixed-size chunks inside the same fused step, so
+    # a long prompt no longer stalls active slots for a whole prefill.
     cfg = base.replace(ovsf=OVSFConfig(enable=False))
     params = R.model_init(jax.random.PRNGKey(0), cfg)
+    eng = LLMEngine(params, cfg, batch_slots=4, buffer_len=96, chunk_size=16)
+    for rid, plen in enumerate([6, 72, 10, 48, 80, 8]):
+        eng.submit(Request(rid, rng.integers(0, cfg.vocab, plen,
+                                             dtype=np.int32),
+                           max_new_tokens=8))
+    t0 = time.perf_counter()
+    stats = eng.run_until_drained()
+    dt = time.perf_counter() - t0
+    print(f"[serve] chunked(16)       completed={stats.completed} "
+          f"tokens={stats.tokens_out} chunk_tokens={stats.chunk_tokens} "
+          f"step_compiles={stats.step_compiles} "
+          f"({stats.tokens_out/dt:6.1f} tok/s on CPU)")
+
+    # Streaming: tokens surface through the callback as they are committed.
     eng = LLMEngine(params, cfg, batch_slots=2, buffer_len=96)
     chunks: list[str] = []
     eng.submit(Request(0, rng.integers(0, cfg.vocab, 12, dtype=np.int32),

@@ -117,14 +117,26 @@ def spectral_matmul(x: jnp.ndarray, alphas: jnp.ndarray, idx: jnp.ndarray,
 # most one (alphas, W) pair per cache_key.
 
 _WEIGHT_CACHE: dict[str, tuple[Any, Any, jnp.ndarray]] = {}
+_WEIGHT_CACHE_HITS = 0      # eager lookups served from the cache
+_WEIGHT_CACHE_MISSES = 0    # eager lookups that ran the generator
 
 
 def clear_weight_cache() -> None:
+    global _WEIGHT_CACHE_HITS, _WEIGHT_CACHE_MISSES
     _WEIGHT_CACHE.clear()
+    _WEIGHT_CACHE_HITS = 0
+    _WEIGHT_CACHE_MISSES = 0
 
 
 def weight_cache_stats() -> dict:
+    """Process-wide decompress-cache counters (hits/misses/entries/bytes).
+
+    Counters are cumulative since import (or ``clear_weight_cache``); callers
+    that want per-run effectiveness (e.g. ``EngineStats``) snapshot a baseline
+    and report the delta."""
     return {"entries": len(_WEIGHT_CACHE),
+            "hits": _WEIGHT_CACHE_HITS,
+            "misses": _WEIGHT_CACHE_MISSES,
             "bytes": sum(int(w.size) * w.dtype.itemsize
                          for *_s, w in _WEIGHT_CACHE.values())}
 
@@ -137,11 +149,14 @@ def cached_generate(cache_key: str, alphas: jnp.ndarray, idx: jnp.ndarray,
     tracers and caching would leak abstract values, so we fall through to the
     generator (XLA CSEs duplicate generation within one program; the cache's
     job is reuse *across* program invocations in eager serving)."""
+    global _WEIGHT_CACHE_HITS, _WEIGHT_CACHE_MISSES
     if isinstance(alphas, jax.core.Tracer) or isinstance(idx, jax.core.Tracer):
         return gen_fn()
     ent = _WEIGHT_CACHE.get(cache_key)
     if ent is not None and ent[0] is alphas and ent[1] is idx:
+        _WEIGHT_CACHE_HITS += 1
         return ent[2]
+    _WEIGHT_CACHE_MISSES += 1
     W = gen_fn()
     _WEIGHT_CACHE[cache_key] = (alphas, idx, W)
     return W

@@ -5,7 +5,12 @@
 
 ``--hw`` picks the hardware target the mapper plans against (any registered
 preset: v5e/v5p/v6e/cpu); ``--no-bucketing`` reverts to per-prompt-length
-prefill (the pre-bucketing behaviour) for A/B comparison.
+prefill (the pre-bucketing behaviour) for A/B comparison. ``--chunk-size N``
+switches to step-based serving: queued prompts feed through the decode-shaped
+path in N-token chunks, interleaved with decode in one fused call per step.
+``--calibrate`` records measured step times against the mapper's analytical
+model and reports which layers a calibrated re-plan would re-map (optionally
+saving the table with ``--calibration-out``).
 """
 from __future__ import annotations
 
@@ -38,6 +43,14 @@ def main(argv=None) -> None:
                     help="prefill each prompt at its native length")
     ap.add_argument("--admission", default="reject",
                     choices=["reject", "truncate"])
+    ap.add_argument("--chunk-size", type=int, default=None,
+                    help="step-based serving: interleave N-token prompt "
+                         "chunks with decode (None = phase-based prefill)")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="record measured-vs-modeled step times and report "
+                         "the calibrated re-plan")
+    ap.add_argument("--calibration-out", default="",
+                    help="write the calibration table JSON here")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -49,7 +62,8 @@ def main(argv=None) -> None:
     eng = LLMEngine(params, cfg, batch_slots=args.slots,
                     buffer_len=args.buffer, hw=args.hw,
                     bucketed_prefill=not args.no_bucketing,
-                    admission=args.admission)
+                    admission=args.admission, chunk_size=args.chunk_size,
+                    calibrate=args.calibrate)
     rng = np.random.default_rng(args.seed)
     for rid in range(args.requests):
         plen = int(rng.integers(4, args.buffer // 4))
@@ -66,7 +80,35 @@ def main(argv=None) -> None:
           f"({stats.tokens_out/dt:.1f} tok/s)")
     print(f"[serve] prefill={stats.prefill_s:.2f}s (batches="
           f"{stats.prefill_batches}, compiles={stats.prefill_compiles}) "
-          f"decode={stats.decode_s:.2f}s")
+          f"decode={stats.decode_s:.2f}s mixed={stats.mixed_s:.2f}s "
+          f"step_compiles={stats.step_compiles}")
+    print(f"[serve] weight_cache: hits={stats.weight_cache_hits} "
+          f"misses={stats.weight_cache_misses} "
+          f"entries={stats.weight_cache_entries}")
+
+    if args.calibrate:
+        old = eng.cfg.exec_plan
+        new = eng.replan()
+        if old is None or not len(eng.calibration):
+            print("[serve] calibrate: no OVSF plan / no decode samples "
+                  "recorded — nothing to correct")
+        else:
+            changed = [(n, a.path, b.path)
+                       for (n, a), (_n, b) in zip(old.entries, new.entries)
+                       if a.path != b.path]
+            facs = eng.calibration.factors(eng.hw_label)
+            print(f"[serve] calibrate: {len(eng.calibration)} keys, "
+                  f"relative factors: "
+                  + ", ".join(f"{k}={v:.2f}" for k, v in sorted(facs.items())))
+            if changed:
+                for n, a, b in changed:
+                    print(f"[serve] calibrate: {n}: {a} -> {b}")
+            else:
+                print("[serve] calibrate: measured factors keep every "
+                      "layer on its modeled path")
+        if args.calibration_out:
+            eng.calibration.save(args.calibration_out)
+            print(f"[serve] calibrate: table -> {args.calibration_out}")
 
 
 if __name__ == "__main__":

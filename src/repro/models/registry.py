@@ -38,6 +38,10 @@ def serve_step(params, cfg, cache, tokens):
     return T.serve_step(params, cfg, cache, tokens)
 
 
+def serve_step_window(params, cfg, cache, tokens, n_valid):
+    return T.serve_step_window(params, cfg, cache, tokens, n_valid)
+
+
 def cache_spec(cfg, B, T_len):
     return T.cache_spec(cfg, B, T_len)
 

@@ -450,3 +450,38 @@ def serve_step(params: dict, cfg: ModelConfig, cache: dict,
     """One decode step: tokens (B, 1) -> (logits (B, vocab), new cache)."""
     logits, cache, _ = model_apply(params, cfg, {"tokens": tokens}, cache=cache)
     return logits[:, -1], cache
+
+
+def serve_step_window(params: dict, cfg: ModelConfig, cache: dict,
+                      tokens: jnp.ndarray, n_valid: jnp.ndarray
+                      ) -> tuple[jnp.ndarray, dict]:
+    """Ragged decode-shaped window: advance the cache by ``n_valid`` of the
+    ``W`` supplied tokens (chunked prefill + decode interleaving).
+
+    ``tokens`` is (B, W) with the real tokens in columns [0, n_valid) and
+    arbitrary padding after; ``n_valid`` is a scalar (callers vmap over slots,
+    so each slot carries its own count: 1 for a decode slot, up to W for a
+    prompt chunk, 0 for an idle slot). Returns the (B, vocab) logits at column
+    ``n_valid - 1`` — the next-token logits after the last real token — and
+    the cache with ``pos`` advanced by exactly ``n_valid``.
+
+    Exactness mirrors ``serve_prefill_ragged``: causal attention makes the
+    returned logits independent of the padding columns, and the padded K/V
+    written at positions [pos + n_valid, pos + W) sit beyond every reachable
+    query position until the true tokens at those positions overwrite them
+    (the decode mask is position-bounded, ``t <= query_pos``). Callers must
+    size the cache buffer so ``pos + W`` never exceeds it — the serving core
+    over-allocates by the window width so the scatter never clamps at the
+    buffer edge. Not state-safe for SSM/hybrid families (recurrent state
+    would run through the padding); callers gate on family.
+    """
+    W = tokens.shape[1]
+    logits, new_cache, _ = model_apply(params, cfg, {"tokens": tokens},
+                                       cache=cache)
+    # model_apply advanced pos by W; re-base to the true token count.
+    new_cache["pos"] = cache["pos"] + n_valid
+    idx = jnp.clip(n_valid - 1, 0, W - 1)
+    last = jnp.take_along_axis(
+        logits, jnp.broadcast_to(idx, (logits.shape[0],))[:, None, None],
+        axis=1)[:, 0]
+    return last, new_cache

@@ -120,7 +120,8 @@ def classify_gemm(M: int, d_in: int, d_out: int, rho: float, *,
                   seg: int = 16, hw=pm.V5E, name: str = "gemm",
                   weight_reuse: int = 1,
                   paths: Sequence[str] = DEFAULT_PATHS,
-                  alphas_resident: bool = False) -> LayerPlan:
+                  alphas_resident: bool = False,
+                  calibration=None) -> LayerPlan:
     """Map one OVSF GEMM y[M, d_out] = x[M, d_in] @ W(alphas) to a plan.
 
     Pure in (shape, rho, hw, weight_reuse): evaluates each candidate path
@@ -134,6 +135,12 @@ def classify_gemm(M: int, d_in: int, d_out: int, rho: float, *,
     training; the steps-per-request scale for frozen serving params).
     ``hw`` is an ``pm.HW`` instance or a registered target name
     (``"v5e"``/``"v5p"``/``"v6e"``/``"cpu"``).
+
+    ``calibration`` (a ``runtime.calibrate.CalibrationTable``) closes the
+    measured-vs-modeled loop: each candidate's modeled II is multiplied by
+    the table's relative correction factor for ``(name, path, hw.name)``
+    before the minimum is taken, so serving-measured skew re-ranks paths on
+    the next planning pass (unmeasured candidates keep factor 1.0).
     """
     hw = pm.resolve_hw(hw)
     if seg and d_in % seg:
@@ -153,6 +160,8 @@ def classify_gemm(M: int, d_in: int, d_out: int, rho: float, *,
     for path in paths:
         ii, bound = _candidate_ii(layer, path, hw, weight_reuse=weight_reuse,
                                   block_m=128)
+        if calibration is not None:
+            ii *= calibration.factor(name, path, hw.name)
         if ii < best_ii:
             best_path, best_ii, best_bound = path, ii, bound
     assert best_path is not None
@@ -190,7 +199,8 @@ _WTYPE_ALIASES = {"ssm_in": "mlp_in", "ssm_out": "mlp_out"}
 
 def plan_model(cfg, shape, *, hw=pm.V5E, n_devices: int = 1,
                tp: int = 1, paths: Sequence[str] = DEFAULT_PATHS,
-               weight_reuse: Optional[int] = None) -> ExecutionPlan:
+               weight_reuse: Optional[int] = None,
+               calibration=None) -> ExecutionPlan:
     """Emit an ExecutionPlan for a ModelConfig under a workload shape.
 
     Expands the config into per-device GEMMs via ``pm.model_layers``,
@@ -200,6 +210,8 @@ def plan_model(cfg, shape, *, hw=pm.V5E, n_devices: int = 1,
     serves frozen params (high reuse), train regenerates every step.
     ``hw`` accepts any registered HW target name (see ``pm.hw_by_name``)
     or an ``pm.HW`` instance; the emitted plan is stamped with its name.
+    ``calibration`` threads a measured-vs-modeled correction table
+    (``runtime.calibrate.CalibrationTable``) into every classification.
     """
     hw = pm.resolve_hw(hw)
     if weight_reuse is None:
@@ -217,7 +229,8 @@ def plan_model(cfg, shape, *, hw=pm.V5E, n_devices: int = 1,
         seen.add(wtype)
         entries.append((wtype, classify_gemm(
             l.M, l.d_in, l.d_out, l.rho, seg=l.seg, hw=hw, name=wtype,
-            weight_reuse=weight_reuse, paths=paths)))
+            weight_reuse=weight_reuse, paths=paths,
+            calibration=calibration)))
     return ExecutionPlan(tuple(entries), hw_label=hw.name)
 
 

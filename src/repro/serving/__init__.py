@@ -3,15 +3,18 @@ from repro.serving.api import (FINISH_EOS, FINISH_LENGTH, FINISH_REJECTED,
                                HWTarget, Request, RequestOutput,
                                SamplingParams, hw_by_name, hw_names,
                                register_hw, resolve_hw)
-from repro.serving.core import EngineCore
+from repro.serving.core import EngineCore, StepOutput
 from repro.serving.engine import EngineStats, LLMEngine, ServingEngine
-from repro.serving.scheduler import (FCFSScheduler, PrefillGroup, bucket_for,
+from repro.serving.scheduler import (ChunkTask, FCFSScheduler,
+                                     PrefillAssignment, PrefillGroup,
+                                     SchedulerOutput, bucket_for,
                                      bucket_lengths)
 
 __all__ = [
     "SamplingParams", "Request", "RequestOutput",
     "FINISH_LENGTH", "FINISH_EOS", "FINISH_REJECTED",
     "HWTarget", "hw_by_name", "hw_names", "register_hw", "resolve_hw",
-    "FCFSScheduler", "PrefillGroup", "bucket_lengths", "bucket_for",
+    "FCFSScheduler", "PrefillGroup", "PrefillAssignment", "ChunkTask",
+    "SchedulerOutput", "StepOutput", "bucket_lengths", "bucket_for",
     "EngineCore", "LLMEngine", "ServingEngine", "EngineStats",
 ]

@@ -20,6 +20,7 @@ re-exports the registry so serving callers never import hwmodel directly.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Optional
 
 import numpy as np
@@ -74,6 +75,9 @@ class Request:
     stream: Optional[Callable[[int, int], None]] = None
     out_tokens: list = dataclasses.field(default_factory=list)
     finish_reason: Optional[str] = None
+    # latency bookkeeping: the engine stamps submission; emit stamps tokens
+    t_submit: float = 0.0
+    token_times: list = dataclasses.field(default_factory=list)
 
     @property
     def done(self) -> bool:
@@ -84,14 +88,20 @@ class Request:
         return int(len(self.prompt))
 
     def emit(self, tok: int) -> None:
+        self.token_times.append(time.perf_counter())
         self.out_tokens.append(tok)
         if self.stream is not None:
             self.stream(self.rid, tok)
 
     def output(self) -> "RequestOutput":
+        ttft = (self.token_times[0] - self.t_submit
+                if self.token_times and self.t_submit else None)
+        itls = tuple(b - a for a, b in zip(self.token_times,
+                                           self.token_times[1:]))
         return RequestOutput(rid=self.rid, prompt_len=self.prompt_len,
                              tokens=tuple(self.out_tokens),
-                             finish_reason=self.finish_reason)
+                             finish_reason=self.finish_reason,
+                             ttft_s=ttft, itls_s=itls)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,6 +111,12 @@ class RequestOutput:
     prompt_len: int
     tokens: tuple
     finish_reason: Optional[str]
+    # time-to-first-token (submission -> first committed token; None when no
+    # token was emitted) and the inter-token latency samples between
+    # consecutive committed tokens — the raw material for the serving
+    # bench's p50/p95 percentiles.
+    ttft_s: Optional[float] = None
+    itls_s: tuple = ()
 
     @property
     def n_tokens(self) -> int:

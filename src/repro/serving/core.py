@@ -1,34 +1,47 @@
-"""EngineCore: stacked slot cache, bucketed batched prefill, fused
-decode+sampling.
+"""EngineCore: stacked slot cache, unified step execution, fused sampling.
 
-The core owns everything that touches the device:
+The core owns everything that touches the device, behind one contract:
+``step(SchedulerOutput) -> StepOutput``.
 
 * **One stacked cache** — every per-slot cache leaf carries a leading ``B``
   slot axis; ``pos`` is per-slot, so slots sit at different sequence depths
-  inside one pytree.
-* **Bucketed batched prefill** — prompts right-padded to the scheduler's
-  bucket length prefill as ONE jit'd ``serve_prefill_ragged`` call over all
-  ``B`` slot rows (idle rows carry a 1-token dummy prompt purely for shape
-  stability). The call retraces once per bucket length, never per prompt
-  length; ``prefill_compiles`` counts actual traces.
-* **Fused decode+sample** — one jit'd vmapped call per generated token runs
-  the model step AND per-slot sampling (greedy / temperature / top-k, each
-  slot's own PRNG key), so sampling adds zero extra dispatches.
+  inside one pytree. In chunked mode the buffer is over-allocated by the
+  window width so ragged window writes never clamp at the buffer edge
+  (``dynamic_update_slice`` clamps its start index — without the slack a
+  near-capacity slot's padded columns would silently overwrite history).
+* **Fused window step (chunked mode)** — ONE jit'd vmapped call advances
+  decode slots (1 valid token) and consumes prompt chunks (up to
+  ``chunk_size`` valid tokens) in the same ``(B, W)`` batch via the ragged
+  ``serve_step_window`` entry point. Steady state compiles exactly two step
+  shapes — ``W = chunk_size`` (any chunk scheduled) and ``W = 1`` (pure
+  decode) — regardless of the prompt-length mix.
+* **Bucketed batched prefill (legacy mode)** — prompts right-padded to the
+  scheduler's bucket length prefill as ONE jit'd ``serve_prefill_ragged``
+  call over all ``B`` slot rows. The call retraces once per bucket length,
+  never per prompt length; ``prefill_compiles`` counts actual traces.
+* **Fused decode+sample** — the model step AND per-slot sampling (greedy /
+  temperature / top-k, each slot's own PRNG key) run in the same jit'd call,
+  so sampling adds zero extra dispatches.
 
 Per-request sampling state lives in (B,)-shaped host arrays scattered at
 admission; a slot's PRNG key is seeded from its request's
-``SamplingParams.seed`` and advances exactly once per generated token, so
-sampled streams are independent of batch composition and slot placement.
+``SamplingParams.seed`` and advances exactly once per *emitted* token (a
+mid-prompt chunk commits no key), so sampled streams are independent of
+batch composition, slot placement, and chunking.
 
-Exactness: right-padded prefill is exact for KV-cache families (causal mask;
-per-slot ``pos`` re-based to the true length; decode overwrites each padded
-cache position before attending to it). SSM/hybrid state would run through
-the padding, so those families use the exact per-request prefill path
-(``supports_bucketing`` is False and the engine falls back automatically).
+Exactness: right-padded prefill/windows are exact for KV-cache families
+(causal mask; per-slot ``pos`` re-based to the true length; decode
+overwrites each padded cache position before attending to it). SSM/hybrid
+state would run through the padding, so those families use the exact
+per-request prefill path (``supports_bucketing`` is False and the engine
+falls back automatically).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
+import time
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -37,6 +50,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import registry as R
 from repro.serving.api import Request, SamplingParams
+from repro.serving.scheduler import SchedulerOutput
 
 _BUCKETED_FAMILIES = ("dense", "moe", "vlm", "encdec")
 
@@ -96,6 +110,62 @@ def _decode_step_fn(cfg: ModelConfig):
     return jax.jit(_batched_step)
 
 
+@functools.lru_cache(maxsize=32)
+def _window_step_fn(cfg: ModelConfig, W: int):
+    """Compiled fused window step: per-slot ragged (W-wide) model advance +
+    sampling, shared across engine instances with the same (config, width)."""
+
+    def _batched_window(p, caches, tokens, n_tok, temps, topks, greedy, keys):
+        """(stacked caches, (B, W) token windows, (B,) valid counts,
+        (B,) sampling state) -> ((B,) sampled tokens, caches, (B,2) keys).
+
+        Row semantics: n_tok == 1 with the last generated token in column 0
+        is a decode slot; 1 < n_tok <= W is a prompt chunk; n_tok == 0 is an
+        idle slot (cache pos unchanged, sampled token meaningless)."""
+
+        def one_slot(cache, toks, n):
+            logits, new_cache = R.serve_step_window(p, cfg, cache,
+                                                    toks[None], n)
+            return logits[0], new_cache
+
+        logits, new_caches = jax.vmap(one_slot)(caches, tokens, n_tok)
+
+        def _all_greedy(_):
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), keys
+
+        def _mixed(_):
+            return jax.vmap(_sample_token)(logits, temps, topks, greedy, keys)
+
+        toks, nkeys = jax.lax.cond(jnp.all(greedy), _all_greedy, _mixed, None)
+        return toks, new_caches, nkeys
+
+    return jax.jit(_batched_window)
+
+
+@dataclasses.dataclass
+class StepOutput:
+    """Result of one ``EngineCore.step``: sampled tokens + timing samples.
+
+    ``first_tokens`` maps slot -> the first sampled token of a request whose
+    prompt completed this step (legacy prefill or final chunk);
+    ``decode_tokens`` maps slot -> the next generated token of a decoding
+    slot. Wall times are split by phase so the measured-vs-modeled
+    calibration loop (``runtime.calibrate``) can consume clean decode-shaped
+    samples (``decode_s``) separately from prefill/mixed work.
+    """
+    first_tokens: dict = dataclasses.field(default_factory=dict)
+    decode_tokens: dict = dataclasses.field(default_factory=dict)
+    prefill_s: float = 0.0      # legacy bucketed/exact prefill wall time
+    decode_s: float = 0.0       # pure fused decode wall time
+    mixed_s: float = 0.0        # fused window (chunks + decode) wall time
+    n_prompt_tokens: int = 0    # prompt tokens consumed (chunks + prefills)
+    n_decode_tokens: int = 0    # decode slots advanced
+
+    @property
+    def wall_s(self) -> float:
+        return self.prefill_s + self.decode_s + self.mixed_s
+
+
 def _leaf_batch_axes(cfg: ModelConfig, buffer_len: int):
     """Per-leaf batch-axis index of the serving cache (-1 = no batch axis,
     e.g. the shared scalar ``pos``), found by diffing B=2 vs B=1 specs."""
@@ -114,17 +184,23 @@ class EngineCore:
     """Device-side half of the engine: caches, prefill, decode, sampling."""
 
     def __init__(self, params, cfg: ModelConfig, *, batch_slots: int = 4,
-                 buffer_len: int = 256):
+                 buffer_len: int = 256, window: int = 0):
         self.params = params
         self.cfg = cfg
         self.B = batch_slots
         self.T = buffer_len
+        self.window = window
+        # Logical capacity is buffer_len (admission math unchanged); the
+        # allocation carries `window` slack columns so a W-wide ragged write
+        # at pos <= buffer_len - 1 never clamps (see module docstring).
+        self.T_alloc = buffer_len + window
         self.prefill_compiles = 0
+        self.step_shapes: set = set()   # distinct fused step shapes traced
         # ONE stacked cache: every per-slot leaf gains a leading B axis.
-        one = R.init_cache(cfg, 1, buffer_len)
+        one = R.init_cache(cfg, 1, self.T_alloc)
         self.caches = jax.tree_util.tree_map(
             lambda a: jnp.broadcast_to(a[None], (batch_slots,) + a.shape), one)
-        self._axes = _leaf_batch_axes(cfg, buffer_len)
+        self._axes = _leaf_batch_axes(cfg, self.T_alloc)
         self._step_fn = _decode_step_fn(cfg)
         # Per-slot sampling state (host-side, scattered at admission).
         self.temps = np.zeros(batch_slots, np.float32)
@@ -134,15 +210,17 @@ class EngineCore:
             np.broadcast_to(np.asarray(jax.random.PRNGKey(0)),
                             (batch_slots, 2)))
 
+        alloc_len = self.T_alloc
+
         def _raw_prefill(p, tokens, lengths):
             # trace-time side effect: counts actual (re)compilations
             self.prefill_compiles += 1
             return R.serve_prefill_ragged(p, cfg, {"tokens": tokens},
-                                          buffer_len, lengths)
+                                          alloc_len, lengths)
 
         def _raw_prefill_exact(p, tokens):
             self.prefill_compiles += 1
-            return R.serve_prefill(p, cfg, {"tokens": tokens}, buffer_len)
+            return R.serve_prefill(p, cfg, {"tokens": tokens}, alloc_len)
 
         self._prefill = jax.jit(_raw_prefill)          # retraces per bucket
         self._prefill_exact = jax.jit(_raw_prefill_exact)  # per prompt length
@@ -159,6 +237,14 @@ class EngineCore:
         self.topks[i] = sp.top_k
         self.greedy[i] = sp.greedy
         self.keys[i] = np.asarray(jax.random.PRNGKey(sp.seed))
+
+    def clear_sampling(self, i: int) -> None:
+        """Reset a freed slot to greedy defaults (the next request re-seeds
+        at admission; an idle sampling slot would otherwise force the mixed
+        branch of every fused step)."""
+        self.temps[i] = 0.0
+        self.topks[i] = 0
+        self.greedy[i] = True
 
     def _sample(self, logits: jnp.ndarray) -> np.ndarray:
         """Sample (B,) tokens from (B, V) logits; advances NO keys itself —
@@ -228,9 +314,92 @@ class EngineCore:
 
     def decode(self, last_tokens: np.ndarray) -> np.ndarray:
         """Advance ALL slots one token with ONE fused decode+sample call."""
+        self.step_shapes.add(("decode", 1))
         next_toks, self.caches, nkeys = self._step_fn(
             self.params, self.caches, jnp.asarray(last_tokens),
             jnp.asarray(self.temps), jnp.asarray(self.topks),
             jnp.asarray(self.greedy), jnp.asarray(self.keys))
         self.keys = np.array(nkeys)                  # writable host copy
         return np.asarray(next_toks)                 # single host sync
+
+    # -- unified step ------------------------------------------------------
+
+    def step(self, so: SchedulerOutput,
+             last_tokens: Optional[np.ndarray] = None) -> StepOutput:
+        """Execute one scheduler iteration against the device.
+
+        Chunked mode (``so.chunks`` non-empty, or decode-only): ONE fused
+        jit'd call advances decode slots and consumes prompt chunks in the
+        same ``(B, W)`` batch. Legacy mode (``so.prefill_groups``): bucketed
+        (or exact) prefill calls per group, then the fused ``(B, 1)`` decode
+        for the running slots. ``last_tokens`` carries each decode slot's
+        previously generated token at its slot index.
+        """
+        out = StepOutput()
+        for pg in so.prefill_groups:
+            t0 = time.perf_counter()
+            if pg.exact:
+                for i, req in pg.slot_reqs:
+                    out.first_tokens[i] = self.prefill_one(i, req)
+            else:
+                toks = self.prefill_group(list(pg.slot_reqs), pg.bucket)
+                for i, req in pg.slot_reqs:
+                    out.first_tokens[i] = int(toks[i])
+            out.prefill_s += time.perf_counter() - t0
+            out.n_prompt_tokens += sum(r.prompt_len for _i, r in pg.slot_reqs)
+        if so.chunks:
+            t0 = time.perf_counter()
+            self._window_step(so, last_tokens, out)
+            out.mixed_s += time.perf_counter() - t0
+            out.n_prompt_tokens += sum(c.length for c in so.chunks)
+        elif so.decode_slots:
+            last = np.zeros(self.B, np.int32)
+            for i in so.decode_slots:
+                last[i] = last_tokens[i]
+            t0 = time.perf_counter()
+            nxt = self.decode(last)
+            out.decode_s += time.perf_counter() - t0
+            for i in so.decode_slots:
+                out.decode_tokens[i] = int(nxt[i])
+        out.n_decode_tokens = len(out.decode_tokens)
+        return out
+
+    def _window_step(self, so: SchedulerOutput,
+                     last_tokens: Optional[np.ndarray],
+                     out: StepOutput) -> None:
+        """ONE fused ragged window call: decode slots ride at width 1, chunk
+        slots at their slice length, idle slots at 0 — all inside a single
+        (B, W) batch so prefill never stalls inter-token latency."""
+        W = self.window or max(c.length for c in so.chunks)
+        tokens = np.zeros((self.B, W), np.int32)
+        n_tok = np.zeros(self.B, np.int32)
+        for i in so.decode_slots:
+            tokens[i, 0] = last_tokens[i]
+            n_tok[i] = 1
+        fresh = []
+        for c in so.chunks:
+            tokens[c.slot, :c.length] = c.req.prompt[c.start:c.start + c.length]
+            n_tok[c.slot] = c.length
+            if c.start == 0:            # new request: re-base pos, seed keys
+                self._set_sampling(c.slot, c.req.sampling)
+                fresh.append(c.slot)
+        if fresh:
+            self.caches["pos"] = self.caches["pos"].at[
+                jnp.asarray(fresh)].set(0)
+        self.step_shapes.add(("window", W))
+        fn = _window_step_fn(self.cfg, W)
+        toks, self.caches, nkeys = fn(
+            self.params, self.caches, jnp.asarray(tokens),
+            jnp.asarray(n_tok), jnp.asarray(self.temps),
+            jnp.asarray(self.topks), jnp.asarray(self.greedy),
+            jnp.asarray(self.keys))
+        toks, nkeys = np.asarray(toks), np.asarray(nkeys)
+        # Commit keys ONLY for emitting slots: a mid-prompt chunk consumes no
+        # randomness, keeping sampled streams identical to the unchunked path.
+        for i in so.decode_slots:
+            out.decode_tokens[i] = int(toks[i])
+            self.keys[i] = nkeys[i]
+        for c in so.chunks:
+            if c.last:
+                out.first_tokens[c.slot] = int(toks[c.slot])
+                self.keys[c.slot] = nkeys[c.slot]

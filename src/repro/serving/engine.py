@@ -1,39 +1,48 @@
-"""LLMEngine: request-level serving orchestrator (Scheduler + EngineCore).
+"""LLMEngine: step-based request-level serving orchestrator.
 
-The engine wires the three serving layers together:
+The engine wires the serving layers together around a single per-iteration
+contract (vLLM-style):
 
-* a pluggable :class:`~repro.serving.scheduler.FCFSScheduler` (or any object
-  with the same ``add`` / ``next_group`` / ``__len__`` surface) performs
-  admission control and hands back length-bucketed prefill groups;
-* an :class:`~repro.serving.core.EngineCore` owns the stacked slot cache,
-  the jit'd bucketed batched prefill, and the ONE fused decode+sample call
-  that advances every active slot per generated token;
-* this module tracks slots, finish reasons (``length`` / ``eos`` /
-  ``rejected``), streaming callbacks, and per-phase wall time.
+* a pluggable :class:`~repro.serving.scheduler.FCFSScheduler` performs
+  admission control and emits one
+  :class:`~repro.serving.scheduler.SchedulerOutput` per ``step()`` — a token
+  budget split across running decode slots and fixed-size chunks of queued
+  prompts (``chunk_size`` set), or whole length-bucketed prefill groups
+  (``chunk_size=None``, the legacy phase-based mode);
+* an :class:`~repro.serving.core.EngineCore` executes it:
+  ``core.step(SchedulerOutput) -> StepOutput`` — in chunked mode ONE fused
+  jit'd call advances decode slots and consumes prompt chunks in the same
+  batch, so a long queued prompt no longer stalls inter-token latency for
+  every active slot;
+* this module tracks slots, prefill progress, finish reasons (``length`` /
+  ``eos`` / ``rejected``), streaming callbacks, per-phase wall time, and the
+  decompress-weight-cache counters.
 
 When the model has OVSF layers and no explicit plan is set, the engine asks
 the hardware-aware layer mapper (``runtime.mapper``) for a decode-shaped
-ExecutionPlan against the engine's ``hw`` target (any registered preset:
-``v5e``/``v5p``/``v6e``/``cpu``), so every compressed GEMM runs the
-execution path the roofline model picks for the (layer, device) pair.
+ExecutionPlan against the engine's ``hw`` target. With ``calibrate=True``
+the engine additionally feeds each pure-decode step's measured wall time
+into a :class:`~repro.runtime.calibrate.CalibrationTable`; ``replan()``
+re-runs the mapper under the accumulated measured-vs-modeled corrections.
 
-``ServingEngine`` remains as a thin compatibility alias of ``LLMEngine``
-(the dead ``greedy`` flag is gone — sampling is per-request via
-``SamplingParams``).
+``ServingEngine`` remains as a **deprecated** compatibility alias of
+``LLMEngine`` and now emits a ``DeprecationWarning``.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Optional
 
 import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.serving.api import (FINISH_EOS, FINISH_LENGTH, Request,
-                               RequestOutput, SamplingParams)
-from repro.serving.core import EngineCore
-from repro.serving.scheduler import FCFSScheduler
+                               RequestOutput, SamplingParams, resolve_hw)
+from repro.serving.core import _BUCKETED_FAMILIES, EngineCore, StepOutput
+from repro.serving.scheduler import (FCFSScheduler, SchedulerOutput,
+                                     legacy_schedule)
 
 __all__ = ["LLMEngine", "ServingEngine", "EngineStats", "Request",
            "SamplingParams", "RequestOutput"]
@@ -41,16 +50,25 @@ __all__ = ["LLMEngine", "ServingEngine", "EngineStats", "Request",
 
 @dataclasses.dataclass
 class EngineStats:
-    steps: int = 0                # decode steps == fused decode+sample calls
+    steps: int = 0                # fused decode/window calls
     tokens_out: int = 0
-    prefills: int = 0             # requests prefilled
+    prefills: int = 0             # requests whose prompt completed
     prefill_batches: int = 0      # jit'd prefill calls (groups + fallbacks)
     prefill_compiles: int = 0     # actual prefill traces (<= n_buckets when
                                   # bucketing; per distinct length otherwise)
+    step_compiles: int = 0        # distinct fused step shapes traced
+                                  # (chunked steady state: <= 2)
+    chunk_tokens: int = 0         # prompt tokens consumed via chunks
     completed: int = 0
     rejected: int = 0
-    prefill_s: float = 0.0        # per-phase wall time
-    decode_s: float = 0.0
+    prefill_s: float = 0.0        # per-phase wall time (legacy prefill)
+    decode_s: float = 0.0         # pure fused decode steps
+    mixed_s: float = 0.0          # fused window steps (chunks + decode)
+    # decompress-weight-cache effectiveness for THIS run (delta against the
+    # process-wide kernels.ops counters snapshotted at engine construction)
+    weight_cache_hits: int = 0
+    weight_cache_misses: int = 0
+    weight_cache_entries: int = 0
 
 
 class LLMEngine:
@@ -60,21 +78,44 @@ class LLMEngine:
                  buffer_len: int = 256, eos_id: Optional[int] = None,
                  use_mapper: bool = True, hw="v5e",
                  bucketed_prefill: bool = True, admission: str = "reject",
-                 scheduler=None):
+                 scheduler=None, chunk_size: Optional[int] = None,
+                 max_step_tokens: Optional[int] = None,
+                 calibrate: bool = False):
+        self._base_cfg = cfg
+        self.hw = hw
+        self.hw_label = resolve_hw(hw).name
         self.cfg = self._plan_cfg(cfg, batch_slots, use_mapper, hw)
         self.params = params
         self.B = batch_slots
         self.T = buffer_len
         self.eos = eos_id
+        if chunk_size is not None and cfg.family not in _BUCKETED_FAMILIES:
+            warnings.warn(
+                f"chunked prefill requires a KV-cache family (got "
+                f"{cfg.family!r}: recurrent state would run through window "
+                f"padding); falling back to phase-based serving", stacklevel=2)
+            chunk_size = None
+        self.chunk = chunk_size
+        self.max_step_tokens = max_step_tokens
         self.core = EngineCore(params, self.cfg, batch_slots=batch_slots,
-                               buffer_len=buffer_len)
+                               buffer_len=buffer_len,
+                               window=chunk_size or 0)
         self.bucketed = bucketed_prefill and self.core.supports_bucketing
         self.scheduler = scheduler if scheduler is not None else FCFSScheduler(
-            buffer_len, admission=admission, bucketing=self.bucketed)
+            buffer_len, admission=admission, bucketing=self.bucketed,
+            chunk_size=chunk_size)
         self.slots: list[Optional[Request]] = [None] * batch_slots
         self.slot_remaining = np.zeros(batch_slots, np.int32)
+        # prompt tokens consumed per slot (== prompt_len once decoding)
+        self._prefill_done = np.zeros(batch_slots, np.int64)
         self.stats = EngineStats()
         self._finished: list[RequestOutput] = []
+        from repro.kernels import ops as _ops
+        self._ops = _ops
+        self._wc_base = _ops.weight_cache_stats()
+        self.calibrate = calibrate
+        from repro.runtime.calibrate import CalibrationTable
+        self.calibration = CalibrationTable()
 
     # The fused decode+sample callable; kept assignable for instrumentation.
     @property
@@ -103,6 +144,7 @@ class LLMEngine:
     def submit(self, req: Request) -> bool:
         """Admit a request (False + a ``rejected`` RequestOutput if it would
         overflow the cache buffer under the scheduler's admission policy)."""
+        req.t_submit = time.perf_counter()
         if self.scheduler.add(req):
             return True
         self.stats.rejected += 1
@@ -113,14 +155,32 @@ class LLMEngine:
         """Finished (completed + rejected) requests, in finish order."""
         return list(self._finished)
 
-    # -- scheduling + prefill ----------------------------------------------
+    # -- scheduling --------------------------------------------------------
 
     def _free_slots(self) -> list[int]:
         return [i for i in range(self.B) if self.slots[i] is None]
 
+    def _running_view(self) -> list:
+        return [(i, self.slots[i], int(self._prefill_done[i]))
+                for i in range(self.B) if self.slots[i] is not None]
+
+    def _schedule(self) -> SchedulerOutput:
+        running, free = self._running_view(), self._free_slots()
+        if hasattr(self.scheduler, "schedule"):
+            return self.scheduler.schedule(
+                running, free, token_budget=self.max_step_tokens,
+                exact_prefill=not self.bucketed)
+        # Legacy three-method scheduler (add/next_group/__len__): adapt its
+        # whole-group surface onto the step contract.
+        return legacy_schedule(self.scheduler, running, free,
+                               not self.bucketed)
+
+    # -- token commit ------------------------------------------------------
+
     def _commit_first_token(self, i: int, req: Request, tok: int) -> None:
         req.emit(tok)
         self.slots[i] = req
+        self._prefill_done[i] = req.prompt_len
         self.slot_remaining[i] = req.max_new_tokens - 1
         self.stats.prefills += 1
         self.stats.tokens_out += 1
@@ -131,54 +191,55 @@ class LLMEngine:
         elif self.slot_remaining[i] <= 0:
             self._finish(i, FINISH_LENGTH)
 
-    def _fill_slots(self) -> None:
-        t0 = time.perf_counter()
-        free = self._free_slots()
-        while free and len(self.scheduler):
-            group = self.scheduler.next_group(len(free))
-            if group is None or not group.requests:
-                break
-            slot_reqs = list(zip(free, group.requests))
-            if self.bucketed:
-                toks = self.core.prefill_group(slot_reqs, group.bucket)
-                self.stats.prefill_batches += 1
-                for i, req in slot_reqs:
-                    self._commit_first_token(i, req, int(toks[i]))
-            else:
-                for i, req in slot_reqs:
-                    tok = self.core.prefill_one(i, req)
-                    self.stats.prefill_batches += 1
-                    self._commit_first_token(i, req, tok)
-            free = self._free_slots()
-        self.stats.prefill_s += time.perf_counter() - t0
-        self.stats.prefill_compiles = self.core.prefill_compiles
-
     def _finish(self, i: int, reason: str) -> None:
         req = self.slots[i]
         req.finish_reason = reason
         self._finished.append(req.output())
         self.slots[i] = None
+        # re-arm the freed slot as greedy so one finished sampling request
+        # doesn't pin every later fused step on the slow mixed-sampling
+        # branch (the all-greedy fast path tests ALL B rows)
+        self.core.clear_sampling(i)
         self.stats.completed += 1
 
-    # -- decode ------------------------------------------------------------
+    # -- the step loop -----------------------------------------------------
 
     def step(self) -> int:
-        """Admit + prefill waiting requests, then advance all active slots
-        one token with exactly one fused decode+sample call. Returns the
-        number of active slots (0 = nothing to decode)."""
-        self._fill_slots()
-        active = [i for i in range(self.B) if self.slots[i] is not None]
-        if not active:
-            return 0
+        """One scheduler iteration: emit a SchedulerOutput, execute it as
+        one ``EngineCore.step``, commit the results. Returns the remaining
+        work — occupied slots after the step plus queued waiting requests —
+        so ``while eng.step(): ...`` drains fully even when every occupied
+        slot finishes in the same iteration (0 = engine fully idle)."""
+        so = self._schedule()
+        if so.empty:
+            return self._remaining()
         last = np.zeros(self.B, np.int32)
-        for i in active:
+        for i in so.decode_slots:
             last[i] = self.slots[i].out_tokens[-1]
-        t0 = time.perf_counter()
-        nxt = self._step_fn_decode(last)
-        self.stats.decode_s += time.perf_counter() - t0
-        for i in active:
+        for c in so.chunks:             # bind newly admitted requests
+            if c.start == 0:
+                self.slots[c.slot] = c.req
+                self._prefill_done[c.slot] = 0
+        for pg in so.prefill_groups:    # legacy whole-prompt prefill
+            for i, req in pg.slot_reqs:
+                self.slots[i] = req
+                self._prefill_done[i] = 0
+        out = self.core.step(so, last)
+        self._commit(so, out)
+        return self._remaining()
+
+    def _remaining(self) -> int:
+        return (sum(s is not None for s in self.slots)
+                + len(self.scheduler))
+
+    def _commit(self, so: SchedulerOutput, out: StepOutput) -> None:
+        for c in so.chunks:
+            self._prefill_done[c.slot] += c.length
+        self.stats.chunk_tokens += sum(c.length for c in so.chunks)
+        for i, tok in out.first_tokens.items():
+            self._commit_first_token(i, self.slots[i], tok)
+        for i, tok in out.decode_tokens.items():
             req = self.slots[i]
-            tok = int(nxt[i])
             req.emit(tok)
             self.stats.tokens_out += 1
             self.slot_remaining[i] -= 1
@@ -186,22 +247,57 @@ class LLMEngine:
                 self._finish(i, FINISH_EOS)
             elif self.slot_remaining[i] <= 0:
                 self._finish(i, FINISH_LENGTH)
-        self.stats.steps += 1
-        return len(active)
-
-    def _step_fn_decode(self, last: np.ndarray) -> np.ndarray:
-        return self.core.decode(last)
+        st = self.stats
+        st.prefill_s += out.prefill_s
+        st.decode_s += out.decode_s
+        st.mixed_s += out.mixed_s
+        if so.decode_slots or so.chunks:
+            st.steps += 1
+        st.prefill_batches += sum(
+            len(pg.slot_reqs) if pg.exact else 1 for pg in so.prefill_groups)
+        st.prefill_compiles = self.core.prefill_compiles
+        st.step_compiles = len(self.core.step_shapes)
+        wc = self._ops.weight_cache_stats()
+        st.weight_cache_hits = wc["hits"] - self._wc_base["hits"]
+        st.weight_cache_misses = wc["misses"] - self._wc_base["misses"]
+        st.weight_cache_entries = wc["entries"]
+        if (self.calibrate and out.decode_s > 0.0 and not so.chunks
+                and not so.prefill_groups and self.cfg.exec_plan is not None):
+            from repro.runtime.calibrate import update_from_step
+            update_from_step(self.calibration, self.cfg.exec_plan,
+                             out.decode_s, self.hw_label)
 
     def run_until_drained(self, max_steps: int = 10_000) -> EngineStats:
         for _ in range(max_steps):
-            if self.step() == 0 and not len(self.scheduler):
+            if self.step() == 0:
                 break
         return self.stats
 
+    # -- measured-vs-modeled calibration -----------------------------------
+
+    def replan(self):
+        """Re-run the mapper under the accumulated calibration table.
+
+        Returns the corrected decode-shaped ExecutionPlan; compare against
+        ``self.cfg.exec_plan`` to see which layers the measured-vs-modeled
+        loop re-mapped. (The engine does not hot-swap the plan — a new plan
+        keys new jit traces, so callers rebuild the engine to adopt it.)
+        """
+        from repro.runtime import mapper
+        shape = ShapeConfig("serve_decode", 1, self.B, "decode")
+        return mapper.plan_model(self._base_cfg, shape, hw=self.hw,
+                                 weight_reuse=1, calibration=self.calibration)
+
 
 class ServingEngine(LLMEngine):
-    """Compatibility shim for the pre-request-API engine surface.
+    """Deprecated compatibility shim for the pre-request-API engine surface.
 
-    Same constructor minus the dead ``greedy`` flag (per-request
-    ``SamplingParams`` subsumed it). Prefer ``LLMEngine`` in new code.
+    Use :class:`LLMEngine` — same constructor (the dead ``greedy`` flag was
+    already removed; per-request ``SamplingParams`` subsumed it).
     """
+
+    def __init__(self, *args, **kw):
+        warnings.warn(
+            "ServingEngine is deprecated; use repro.serving.LLMEngine "
+            "(same constructor)", DeprecationWarning, stacklevel=2)
+        super().__init__(*args, **kw)

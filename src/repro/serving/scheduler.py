@@ -1,20 +1,28 @@
-"""Pluggable request scheduling: admission control + length-bucketed batching.
+"""Pluggable request scheduling: admission, chunking, step-level batching.
 
-The scheduler owns the waiting queue and two decisions the engine core must
-not make:
+The scheduler owns the waiting queue and the per-iteration decision of what
+the engine core executes next:
 
 * **Admission** — a request whose ``prompt_len + max_new_tokens`` exceeds the
   cache buffer would silently wrap the stacked KV cache during decode (the
   position-update is a ``dynamic_update_slice`` at ``pos``); such requests
   are rejected (or truncated, policy ``"truncate"``) *here*, never admitted.
-* **Bucketing** — prompt lengths are right-padded up to a small set of
-  power-of-two buckets so batched prefill traces once per *bucket* instead
-  of once per distinct prompt length. ``next_group`` hands the engine groups
-  of same-bucket requests, head-of-queue first (FCFS: the oldest waiting
-  request is always in the next group, so batching never starves it).
+* **Step scheduling** — ``schedule`` emits one :class:`SchedulerOutput` per
+  engine iteration: a token budget split across running decode slots (one
+  token each, never preempted) and fixed-size **chunks** of queued/partial
+  prompts (vLLM-style chunked prefill, ``chunk_size`` set), or — in the
+  legacy phase-based mode (``chunk_size=None``) — whole length-bucketed
+  prefill groups for the free slots.
+* **Bucketing** (legacy mode) — prompt lengths are right-padded up to a
+  small set of power-of-two buckets so batched prefill traces once per
+  *bucket* instead of once per distinct prompt length. ``next_group`` hands
+  the engine groups of same-bucket requests, head-of-queue first (FCFS: the
+  oldest waiting request is always in the next group, so batching never
+  starves it).
 
-Alternative schedulers implement the same three-method surface
-(``add`` / ``next_group`` / ``__len__``) and are passed to ``LLMEngine``.
+Alternative schedulers implement ``add`` / ``schedule`` / ``__len__`` (or
+the legacy ``add`` / ``next_group`` / ``__len__`` surface, which the engine
+adapts) and are passed to ``LLMEngine``.
 """
 from __future__ import annotations
 
@@ -59,22 +67,74 @@ class PrefillGroup:
     requests: list
 
 
+@dataclasses.dataclass(frozen=True)
+class ChunkTask:
+    """One fixed-size slice of a prompt to consume this step (chunked mode).
+
+    ``req.prompt[start : start + length]`` rides in slot ``slot`` of the
+    fused window call; ``last`` marks the slice that completes the prompt
+    (its sampled token is the request's first output token).
+    """
+    slot: int
+    req: Request
+    start: int
+    length: int
+    last: bool
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefillAssignment:
+    """Legacy phase-based prefill: one bucketed (or exact) group mapped onto
+    concrete slots. ``exact`` requests per-request native-length prefill
+    (recurrent-state families / the unbucketed baseline)."""
+    bucket: int
+    slot_reqs: tuple          # ((slot, Request), ...)
+    exact: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerOutput:
+    """What the engine core executes in ONE ``step()`` iteration.
+
+    Chunked mode fills ``decode_slots`` + ``chunks`` (executed together in
+    one fused window call); legacy mode fills ``decode_slots`` +
+    ``prefill_groups`` (groups first, then the fused decode call).
+    """
+    decode_slots: tuple = ()        # slots advancing one generated token
+    chunks: tuple = ()              # ChunkTask prompt slices this step
+    prefill_groups: tuple = ()      # PrefillAssignment (legacy mode)
+    n_scheduled_tokens: int = 0
+
+    @property
+    def empty(self) -> bool:
+        return not (self.decode_slots or self.chunks or self.prefill_groups)
+
+
 class FCFSScheduler:
-    """Default scheduler: FCFS admission order, same-bucket group batching.
+    """Default scheduler: FCFS admission order, chunked or bucketed batching.
 
     ``admission``: ``"reject"`` marks overflowing requests FINISH_REJECTED at
     ``add`` time; ``"truncate"`` clamps ``max_new_tokens`` to the remaining
     buffer (prompts longer than ``buffer_len - 1`` are rejected either way —
     there is no principled way to truncate a prompt on the engine's behalf).
+
+    ``chunk_size``: when set, ``schedule`` interleaves fixed-size prompt
+    chunks with decode (one unified step per iteration — long queued prompts
+    stop gating inter-token latency); when ``None``, it emits whole
+    length-bucketed prefill groups (the legacy phase-based mode).
     """
 
     def __init__(self, buffer_len: int, *, admission: str = "reject",
-                 min_bucket: int = 8, bucketing: bool = True):
+                 min_bucket: int = 8, bucketing: bool = True,
+                 chunk_size: Optional[int] = None):
         if admission not in ("reject", "truncate"):
             raise ValueError(f"admission policy {admission!r}")
+        if chunk_size is not None and chunk_size < 1:
+            raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
         self.buffer_len = buffer_len
         self.admission = admission
         self.bucketing = bucketing
+        self.chunk_size = chunk_size
         self.buckets = bucket_lengths(buffer_len, min_bucket=min_bucket)
         self.waiting: deque[Request] = deque()
 
@@ -117,3 +177,84 @@ class FCFSScheduler:
         rest.extend(self.waiting)
         self.waiting = rest
         return PrefillGroup(bucket, picked)
+
+    # -- per-iteration step scheduling --------------------------------------
+
+    def schedule(self, running, free_slots, *,
+                 token_budget: Optional[int] = None,
+                 exact_prefill: bool = False) -> SchedulerOutput:
+        """Emit one step's worth of work.
+
+        ``running`` is the engine's slot view: ``[(slot, Request,
+        prefill_done)]`` for occupied slots (``prefill_done == prompt_len``
+        means the slot is decoding); ``free_slots`` are unoccupied slot ids.
+
+        Chunked mode: decode slots are scheduled first and never preempted
+        (partially decoding a fused batch would desynchronise slot caches);
+        the remaining ``token_budget`` is split FCFS across prompt chunks —
+        continuing partial prefills before new admissions, each capped at
+        ``chunk_size`` tokens. Legacy mode: all running slots decode, and
+        free slots are filled with whole bucketed prefill groups
+        (``exact_prefill`` forces per-request native-length prefill).
+        """
+        if self.chunk_size is None:
+            return self._schedule_legacy(running, free_slots, exact_prefill)
+        chunk = self.chunk_size
+        decodes = [s for s, req, done in running if done >= req.prompt_len]
+        budget = (token_budget if token_budget is not None
+                  else len(decodes) + chunk * max(len(running)
+                                                  + len(free_slots), 1))
+        budget -= len(decodes)          # decodes are never preempted
+        chunks: list[ChunkTask] = []
+        for slot, req, done in running:
+            remaining = req.prompt_len - done
+            if remaining <= 0:
+                continue
+            # A mid-prefill slot ALWAYS progresses by at least one token,
+            # budget notwithstanding: a decode-only step would advance every
+            # slot's cache (the fused call is all-B), corrupting a partial
+            # prefill that was scheduled nothing. The budget is therefore a
+            # soft target with floor decodes + 1-per-partial-prefill.
+            take = min(chunk, remaining, max(budget, 1))
+            chunks.append(ChunkTask(slot, req, done, take,
+                                    done + take >= req.prompt_len))
+            budget -= take
+        for slot in free_slots:
+            if not self.waiting or budget <= 0:
+                break
+            req = self.waiting.popleft()
+            take = min(chunk, req.prompt_len, budget)
+            chunks.append(ChunkTask(slot, req, 0, take,
+                                    take >= req.prompt_len))
+            budget -= take
+        n_tok = len(decodes) + sum(c.length for c in chunks)
+        return SchedulerOutput(decode_slots=tuple(decodes),
+                               chunks=tuple(chunks),
+                               n_scheduled_tokens=n_tok)
+
+    def _schedule_legacy(self, running, free_slots,
+                         exact_prefill: bool) -> SchedulerOutput:
+        return legacy_schedule(self, running, free_slots, exact_prefill)
+
+
+def legacy_schedule(scheduler, running, free_slots,
+                    exact_prefill: bool) -> SchedulerOutput:
+    """Adapt any ``add`` / ``next_group`` / ``__len__`` scheduler onto the
+    step contract: all running slots decode, free slots fill with whole
+    prefill groups. Shared by ``FCFSScheduler`` (``chunk_size=None``) and
+    the engine's adapter for custom legacy schedulers."""
+    decodes = tuple(s for s, _req, _d in running)
+    groups: list[PrefillAssignment] = []
+    free = list(free_slots)
+    while free and len(scheduler):
+        g = scheduler.next_group(len(free))
+        if g is None or not g.requests:
+            break
+        groups.append(PrefillAssignment(
+            g.bucket, tuple(zip(free, g.requests)), exact=exact_prefill))
+        free = free[len(g.requests):]
+    n_tok = len(decodes) + sum(r.prompt_len for pg in groups
+                               for _s, r in pg.slot_reqs)
+    return SchedulerOutput(decode_slots=decodes,
+                           prefill_groups=tuple(groups),
+                           n_scheduled_tokens=n_tok)

@@ -6,7 +6,7 @@ import pytest
 from repro.configs import get_smoke_config
 from repro.data.synthetic import Prefetcher, TokenStream, pack_documents
 from repro.models import registry as R
-from repro.serving.engine import Request, ServingEngine
+from repro.serving.engine import LLMEngine, Request
 
 
 def test_stream_deterministic_by_step():
@@ -46,7 +46,7 @@ def test_pack_documents():
 def test_serving_engine_drains():
     cfg = get_smoke_config("tinyllama_1_1b")
     params = R.model_init(jax.random.PRNGKey(0), cfg)
-    eng = ServingEngine(params, cfg, batch_slots=2, buffer_len=32)
+    eng = LLMEngine(params, cfg, batch_slots=2, buffer_len=32)
     rng = np.random.default_rng(0)
     for rid in range(3):
         eng.submit(Request(rid, rng.integers(0, cfg.vocab, 5, dtype=np.int32),
@@ -64,7 +64,7 @@ def test_serving_engine_rejects_cache_overflow():
     # "rejected" instead of clobbering other slots' caches.
     cfg = get_smoke_config("tinyllama_1_1b")
     params = R.model_init(jax.random.PRNGKey(0), cfg)
-    eng = ServingEngine(params, cfg, batch_slots=2, buffer_len=32)
+    eng = LLMEngine(params, cfg, batch_slots=2, buffer_len=32)
     rng = np.random.default_rng(0)
     ok = Request(0, rng.integers(0, cfg.vocab, 5, dtype=np.int32),
                  max_new_tokens=4)
@@ -84,7 +84,7 @@ def test_serving_greedy_matches_manual_decode():
     cfg = get_smoke_config("tinyllama_1_1b")
     params = R.model_init(jax.random.PRNGKey(0), cfg)
     prompt = np.arange(1, 6, dtype=np.int32)
-    eng = ServingEngine(params, cfg, batch_slots=1, buffer_len=32)
+    eng = LLMEngine(params, cfg, batch_slots=1, buffer_len=32)
     eng.submit(Request(0, prompt, max_new_tokens=3))
     req = None
     while eng.step():

@@ -198,10 +198,10 @@ def test_weight_cache_skips_tracers():
 
 def test_engine_issues_one_batched_decode_call_per_step():
     from repro.models import registry as R
-    from repro.serving.engine import Request, ServingEngine
+    from repro.serving.engine import LLMEngine, Request
     cfg = get_smoke_config("tinyllama_1_1b")
     params = R.model_init(jax.random.PRNGKey(0), cfg)
-    eng = ServingEngine(params, cfg, batch_slots=4, buffer_len=32)
+    eng = LLMEngine(params, cfg, batch_slots=4, buffer_len=32)
     calls = {"n": 0}
     inner = eng._step_fn
 
