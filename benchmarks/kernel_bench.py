@@ -36,7 +36,10 @@ def _time(fn, *args, reps=5) -> float:
 
 
 def run(print_fn=print, smoke: bool = False,
-        json_path: str = "") -> list[dict]:
+        json_path: str = "", alpha_dtype: str = "") -> list[dict]:
+    """``alpha_dtype`` ("int8"/"int4") additionally gates that dtype's modeled
+    fused II strictly below fused-fp (int8 is always gated — the bench FAILS,
+    for CI, if quantising the alpha stream stops paying on v5e)."""
     json_path = json_path or (
         "BENCH_kernels_smoke.json" if smoke else "BENCH_kernels.json")
     rows = []
@@ -64,26 +67,60 @@ def run(print_fn=print, smoke: bool = False,
     t_fused = _time(fused, x, p["alphas"], p["idx"], reps=reps)
     # off-TPU the fused path runs the f32 decompress-then-GEMM oracle, not
     # the TiWGen kernel — label it _ref so trajectories don't misread it
-    fused_name = "ovsf_fused" if ops.on_tpu() else "ovsf_fused_ref"
+    ref_sfx = "" if ops.on_tpu() else "_ref"
     for name, t in [("dense", t_dense), ("ovsf_spectral", t_spec),
-                    ("ovsf_materialize", t_mat), (fused_name, t_fused)]:
+                    ("ovsf_materialize", t_mat),
+                    (f"ovsf_fused{ref_sfx}", t_fused)]:
         print_fn(f"kernel_bench,cpu_wall,{name},{t:.1f}us")
         rows.append(dict(kind="cpu", name=name, us=t))
 
-    # analytical decode-shape roofline per path (v5e)
-    for path in ("materialize", "fused", "spectral"):
-        l = pm.GemmLayer("bench", M=8, d_in=4096, d_out=4096, rho=0.5,
-                         ovsf=True, exec_path=path, seg=16)
-        t = pm.layer_timing(l)
-        print_fn(f"kernel_bench,v5e_model,{path},ii={t.ii*1e6:.2f}us,"
-                 f"bound={t.bound},mem_w={t.t_mem_w*1e6:.2f}us,"
-                 f"wgen={t.t_wgen*1e6:.2f}us,eng={t.t_eng*1e6:.2f}us")
-        rows.append(dict(kind="v5e", name=path, ii_us=t.ii * 1e6,
-                         bound=t.bound))
+    # quantised alpha storage: measured CPU walls for the same shape
+    for dt in ("int8", "int4"):
+        pq = ovsf.quantize_params(p, dt)
+        al, sc, _ = ovsf.alpha_params(pq)
+        fused_q = jax.jit(lambda a, q, s, ix, dt=dt: ops.ovsf_matmul(
+            a, q, ix, path="fused", use_pallas=False,
+            alpha_scale=s, alpha_dtype=dt))
+        mat_q = jax.jit(lambda a, q, s, ix, dt=dt: ops.ovsf_matmul(
+            a, q, ix, path="materialize", use_pallas=False,
+            alpha_scale=s, alpha_dtype=dt))
+        for name, t in [
+                (f"ovsf_fused_{dt}{ref_sfx}",
+                 _time(fused_q, x, al, sc, p["idx"], reps=reps)),
+                (f"ovsf_materialize_{dt}",
+                 _time(mat_q, x, al, sc, p["idx"], reps=reps))]:
+            print_fn(f"kernel_bench,cpu_wall,{name},{t:.1f}us")
+            rows.append(dict(kind="cpu", name=name, us=t))
+
+    # analytical decode-shape roofline per (path, alpha dtype) on v5e
+    model_ii: dict = {}
+    for dt in ("", "int8", "int4"):
+        for path in ("materialize", "fused", "spectral"):
+            name = f"{path}_{dt}" if dt else path
+            l = pm.GemmLayer("bench", M=8, d_in=4096, d_out=4096, rho=0.5,
+                             ovsf=True, exec_path=path, seg=16, alpha_dtype=dt)
+            t = pm.layer_timing(l)
+            model_ii[name] = t.ii
+            print_fn(f"kernel_bench,v5e_model,{name},ii={t.ii*1e6:.2f}us,"
+                     f"bound={t.bound},mem_w={t.t_mem_w*1e6:.2f}us,"
+                     f"wgen={t.t_wgen*1e6:.2f}us,eng={t.t_eng*1e6:.2f}us")
+            rows.append(dict(kind="v5e", name=name, ii_us=t.ii * 1e6,
+                             bound=t.bound))
     ld = pm.GemmLayer("dense", M=8, d_in=4096, d_out=4096)
     t = pm.layer_timing(ld)
     print_fn(f"kernel_bench,v5e_model,dense,ii={t.ii*1e6:.2f}us,bound={t.bound}")
     rows.append(dict(kind="v5e", name="dense", ii_us=t.ii * 1e6, bound=t.bound))
+
+    # CI gate: quantising the stored alphas must strictly lower the modeled
+    # fused II on v5e (the whole point of the alpha pipeline); int8 is always
+    # checked, plus whichever dtype the caller asked for.
+    for dt in {"int8", alpha_dtype} - {""}:
+        if not model_ii[f"fused_{dt}"] < model_ii["fused"]:
+            raise RuntimeError(
+                f"modeled fused-{dt} II ({model_ii[f'fused_{dt}']*1e6:.2f}us) "
+                f"is not strictly below fused-fp "
+                f"({model_ii['fused']*1e6:.2f}us) on v5e")
+    print_fn("kernel_bench,gate,fused_int8_ii_below_fp,ok")
 
     if json_path:
         payload = {"bench": "kernels", "smoke": smoke,
@@ -96,4 +133,9 @@ def run(print_fn=print, smoke: bool = False,
 
 
 if __name__ == "__main__":
-    run(smoke="--smoke" in sys.argv)
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--alpha-dtype", default="", choices=["", "int8", "int4"])
+    a = ap.parse_args()
+    run(smoke=a.smoke, alpha_dtype=a.alpha_dtype)

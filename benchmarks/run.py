@@ -32,6 +32,8 @@ SECTIONS = {
 SMOKE_AWARE = {"kernels", "serving"}
 # sections that take an --hw target (registered perf_model preset name)
 HW_AWARE = {"serving"}
+# sections that take an --alpha-dtype (quantised alpha storage)
+ALPHA_AWARE = {"kernels", "serving"}
 
 
 def main() -> None:
@@ -43,6 +45,10 @@ def main() -> None:
     ap.add_argument("sections", nargs="*")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--hw", default="v5e", choices=list(hw_names()))
+    ap.add_argument("--alpha-dtype", default="",
+                    choices=["", "int8", "int4"],
+                    help="quantised alpha storage for the alpha-aware "
+                         "sections (kernels gate on it)")
     ns = ap.parse_args()
     hw = ns.hw
     args = ns.sections
@@ -56,6 +62,8 @@ def main() -> None:
         t0 = time.perf_counter()
         print(f"== {name} ==")
         kw = {"hw": hw} if name in HW_AWARE else {}
+        if ns.alpha_dtype and name in ALPHA_AWARE:
+            kw["alpha_dtype"] = ns.alpha_dtype
         if smoke and name in SMOKE_AWARE:
             fn(smoke=True, **kw)
         else:

@@ -147,20 +147,25 @@ def _latency(outputs) -> dict:
 
 def run(print_fn=print, smoke: bool = False,
         json_path: str = "", hw: str = "v5e",
-        chunk_size: int = 16) -> dict:
+        chunk_size: int = 16, alpha_dtype: str = "") -> dict:
     # smoke runs land in a separate file so they never clobber the
     # full-mode perf trajectory (hw-suffixed: CI runs a small hw matrix);
     # full runs against a non-default hw are hw-suffixed too, so the
     # canonical BENCH_serving.json trajectory stays single-target (v5e)
     if not json_path:
+        sfx = f"_{alpha_dtype}" if alpha_dtype else ""
         if smoke:
-            json_path = f"BENCH_serving_smoke_{hw}.json"
+            json_path = f"BENCH_serving_smoke_{hw}{sfx}.json"
         else:
-            json_path = ("BENCH_serving.json" if hw == "v5e"
-                         else f"BENCH_serving_{hw}.json")
+            json_path = (f"BENCH_serving{sfx}.json" if hw == "v5e"
+                         else f"BENCH_serving_{hw}{sfx}.json")
     B = 4
     n_req = 4 if smoke else 8
     cfg = get_smoke_config("tinyllama_1_1b")
+    if alpha_dtype:
+        import dataclasses
+        cfg = cfg.replace(ovsf=dataclasses.replace(
+            cfg.ovsf, alpha_dtype=alpha_dtype))
     if not smoke:
         # Size the stack so decode is genuinely weight-read bound on the host
         # (weights >> LLC): this is the regime the batched rewrite targets —
@@ -263,6 +268,7 @@ def run(print_fn=print, smoke: bool = False,
 
     result = {"bench": "serving", "smoke": smoke, "batch_slots": B,
               "model": cfg.name, "backend": jax.default_backend(), "hw": hw,
+              "alpha_dtype": alpha_dtype,
               "per_slot_tok_s": tps_a, "batched_tok_s": tps_b,
               "speedup": speedup,
               "bucketed_prefill": {
@@ -300,5 +306,8 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--hw", default="v5e", choices=list(hw_names()))
     ap.add_argument("--chunk-size", type=int, default=16)
+    ap.add_argument("--alpha-dtype", default="", choices=["", "int8", "int4"],
+                    help="serve with quantised alpha storage")
     a = ap.parse_args()
-    run(smoke=a.smoke, hw=a.hw, chunk_size=a.chunk_size)
+    run(smoke=a.smoke, hw=a.hw, chunk_size=a.chunk_size,
+        alpha_dtype=a.alpha_dtype)

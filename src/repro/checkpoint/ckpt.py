@@ -114,6 +114,15 @@ def restore(directory: str, step: Optional[int] = None, *,
         arr = by_path[name]
         assert tuple(arr.shape) == tuple(leaf.shape), \
             f"{name}: ckpt {arr.shape} != template {leaf.shape}"
+        # elastic restore casts float<->float (e.g. f32 -> bf16) freely, but a
+        # float<->int cast would silently corrupt quantised leaves (int8/int4
+        # alphas must round-trip bit-exactly): refuse with a clear error.
+        if (np.issubdtype(np.dtype(leaf.dtype), np.integer)
+                != np.issubdtype(arr.dtype, np.integer)):
+            raise TypeError(
+                f"{name}: refusing float<->int cast on restore "
+                f"(ckpt {arr.dtype} -> template {leaf.dtype}); re-convert the "
+                "checkpoint to the template's alpha_dtype instead")
         arr = arr.astype(leaf.dtype)
         leaves.append(jax.device_put(arr, sh) if sh is not None
                       else jax.numpy.asarray(arr))

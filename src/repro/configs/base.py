@@ -35,7 +35,20 @@ class OVSFConfig:
     seg_len: int = 16
     min_dim: int = 512                    # skip matrices smaller than this
     targets: tuple[str, ...] = ("attn", "mlp", "expert")
-    alpha_dtype: str = ""                 # reserved (int8 alphas); not wired yet
+    # Storage dtype of the alpha coefficients: "" (model dtype), "int8", or
+    # "int4" (packed two-per-byte). Quantised alphas shrink the only HBM
+    # weight traffic the fused path has left; the Pallas generator dequantises
+    # per tile (see kernels.ovsf_gemm) and the perf model / mapper account the
+    # reduced alpha bytes.
+    alpha_dtype: str = ""
+
+    def __post_init__(self):
+        from repro.core.ovsf import validate_alpha_dtype
+        validate_alpha_dtype(self.alpha_dtype)
+        if self.exec_path not in ("materialize", "fused", "spectral"):
+            raise ValueError(
+                f"unknown exec_path {self.exec_path!r}; expected "
+                "materialize | fused | spectral")
 
     def rho_for(self, name: str) -> float:
         for pat, r in self.rho_overrides:

@@ -206,6 +206,116 @@ def extract_kxk(w4: jnp.ndarray, k: int, method: Literal["crop", "adaptive"] = "
 
 
 # ---------------------------------------------------------------------------
+# Alpha quantisation (int8 / int4-packed) — the stored-representation opt
+# ---------------------------------------------------------------------------
+# After the fused path, the only HBM weight traffic left is the (J, d_out)
+# alpha buffer. Per-segment symmetric quantisation shrinks those bytes 2x/4x
+# on top of the rho compression (unzipFPGA / Petrica et al.: quantising the
+# *stored* form compounds with on-the-fly generation). Scales are one fp32
+# per code segment (shape (n_seg, 1)); int4 packs two nibbles per int8 byte
+# along d_out, so d_out must be even for int4.
+
+ALPHA_DTYPES = ("", "int8", "int4")
+_ALPHA_KEY = {"": "alphas", "int8": "alphas_q8", "int4": "alphas_q4"}
+_ALPHA_QMAX = {"int8": 127.0, "int4": 7.0}
+
+
+def validate_alpha_dtype(dtype: str) -> str:
+    if dtype not in ALPHA_DTYPES:
+        raise ValueError(
+            f"unknown alpha_dtype {dtype!r}; expected one of "
+            f"{ALPHA_DTYPES} ('' = unquantised, stored in model dtype)")
+    return dtype
+
+
+def quantize_alphas(alphas: jnp.ndarray, n_seg: int, dtype: str
+                    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(J, d_out) alphas -> (q, scale) with per-segment symmetric scaling.
+
+    Rows are grouped into ``n_seg`` contiguous segments of J//n_seg rows
+    (the per-segment alpha layout of Alg. 1; n_seg=1 for monolithic codes).
+    scale: (n_seg, 1) fp32, scale[s] = max|alpha_seg| / qmax. q: int8 of
+    shape (J, d_out) for int8, or (J, d_out//2) with two nibbles per byte
+    (low nibble = even column) for int4.
+    """
+    validate_alpha_dtype(dtype)
+    if dtype not in _ALPHA_QMAX:
+        raise ValueError("quantize_alphas needs dtype 'int8' or 'int4'")
+    J, d_out = alphas.shape
+    if n_seg <= 0 or J % n_seg:
+        raise ValueError(f"J {J} not divisible into {n_seg} segments")
+    if dtype == "int4" and d_out % 2:
+        raise ValueError(
+            f"int4 alpha packing needs an even d_out, got {d_out}; "
+            "use int8 for odd output widths")
+    qmax = _ALPHA_QMAX[dtype]
+    a = jnp.asarray(alphas, jnp.float32).reshape(n_seg, J // n_seg, d_out)
+    amax = jnp.max(jnp.abs(a), axis=(1, 2))                     # (n_seg,)
+    scale = jnp.where(amax > 0, amax / qmax, 1.0)
+    q = jnp.clip(jnp.round(a / scale[:, None, None]), -qmax, qmax)
+    q = q.reshape(J, d_out).astype(jnp.int8)
+    if dtype == "int4":
+        lo = q[:, 0::2].astype(jnp.int32)
+        hi = q[:, 1::2].astype(jnp.int32)
+        q = ((hi << 4) | (lo & 0xF)).astype(jnp.int8)
+    return q, scale.reshape(n_seg, 1)
+
+
+def unpack_int4(q: jnp.ndarray) -> jnp.ndarray:
+    """(..., d_out//2) packed nibbles -> (..., d_out) int32 in [-8, 7]."""
+    p32 = q.astype(jnp.int32)
+    hi = p32 >> 4                                   # arithmetic: sign-correct
+    lo = p32 & 0xF
+    lo = lo - jnp.where(lo >= 8, 16, 0)
+    return jnp.stack([lo, hi], axis=-1).reshape(q.shape[:-1] + (-1,))
+
+
+def dequantize_alphas(q: jnp.ndarray, scale: jnp.ndarray, dtype: str
+                      ) -> jnp.ndarray:
+    """Invert ``quantize_alphas``: int8/packed-int4 -> fp32 (J, d_out)."""
+    if dtype not in _ALPHA_QMAX:
+        raise ValueError(f"dequantize_alphas: bad dtype {dtype!r}")
+    if dtype == "int4":
+        q = unpack_int4(q)
+    s = jnp.asarray(scale, jnp.float32).reshape(-1)             # (n_seg,)
+    J = q.shape[0]
+    if s.shape[0] <= 0 or J % s.shape[0]:
+        raise ValueError(f"J {J} not divisible by n_seg {s.shape[0]}")
+    per_row = jnp.repeat(s, J // s.shape[0])[:, None]           # (J, 1)
+    return q.astype(jnp.float32) * per_row
+
+
+def quantize_params(params: dict, alpha_dtype: str) -> dict:
+    """OVSF param dict {"alphas", "idx", ...} -> quantised-storage form.
+
+    The fp32 ``alphas`` leaf is replaced by ``alphas_q8``/``alphas_q4`` plus
+    the ``alpha_scale`` (n_seg, 1) leaf; all other keys pass through. Key
+    *names* (not array dtypes) carry the format so jit-traced consumers can
+    branch statically (see ``alpha_params``).
+    """
+    validate_alpha_dtype(alpha_dtype)
+    if not alpha_dtype:
+        return dict(params)
+    idx = params["idx"]
+    n_seg = idx.shape[0] if idx.ndim == 2 else 1
+    q, scale = quantize_alphas(jnp.asarray(params["alphas"], jnp.float32),
+                               n_seg, alpha_dtype)
+    out = {k: v for k, v in params.items() if k != "alphas"}
+    out[_ALPHA_KEY[alpha_dtype]] = q
+    out["alpha_scale"] = scale
+    return out
+
+
+def alpha_params(p: dict) -> tuple[jnp.ndarray, Optional[jnp.ndarray], str]:
+    """(stored_alphas, scale_or_None, alpha_dtype) from an OVSF param dict."""
+    if "alphas_q8" in p:
+        return p["alphas_q8"], p["alpha_scale"], "int8"
+    if "alphas_q4" in p:
+        return p["alphas_q4"], p["alpha_scale"], "int4"
+    return p["alphas"], None, ""
+
+
+# ---------------------------------------------------------------------------
 # OVSF layer parameter container
 # ---------------------------------------------------------------------------
 
@@ -232,6 +342,13 @@ class OVSFSpec:
     rho: float
     strategy: BasisStrategy = "iterative"
     seg: int = 0
+    # Storage dtype of the alpha coefficients: "" (model dtype), "int8", or
+    # "int4" (two nibbles packed per int8 byte). Quantisation is symmetric
+    # per segment with one fp32 scale per segment.
+    alpha_dtype: str = ""
+
+    def __post_init__(self):
+        validate_alpha_dtype(self.alpha_dtype)
 
     @property
     def L(self) -> int:
@@ -272,6 +389,8 @@ def compress_matrix(w: jnp.ndarray, spec: OVSFSpec) -> dict:
     Monolithic: {alphas (n_keep, d_out), idx (n_keep,)}.
     Segmented:  {alphas (n_seg*n_keep, d_out), idx (n_seg, n_keep)} — per-
     segment iterative selection, exactly Alg. 1's per-layer alpha layout.
+    With ``spec.alpha_dtype`` set the alphas leaf is emitted in quantised
+    storage form (``quantize_params``: alphas_q8/alphas_q4 + alpha_scale).
     """
     assert w.shape == (spec.d_in, spec.d_out), (w.shape, spec)
     if not spec.seg:
@@ -280,7 +399,8 @@ def compress_matrix(w: jnp.ndarray, spec: OVSFSpec) -> dict:
         if kept.shape[-1] != spec.n_keep:           # rho rounding guard
             idx = idx[: spec.n_keep]
             kept = kept[..., : spec.n_keep]
-        return {"alphas": kept.T.astype(w.dtype), "idx": idx}
+        out = {"alphas": kept.T.astype(w.dtype), "idx": idx}
+        return quantize_params(out, spec.alpha_dtype)
     L0, ns, nk = spec.seg, spec.n_seg, spec.n_keep
     ws = w.T.reshape(spec.d_out, ns, L0)            # (d_out, ns, L0)
     al = fwht(ws, axis=-1) / L0                     # exact per-segment alphas
@@ -291,12 +411,16 @@ def compress_matrix(w: jnp.ndarray, spec: OVSFSpec) -> dict:
         kepts.append(kept[..., : nk])               # (d_out, nk)
     idx = jnp.stack(idxs)                           # (ns, nk)
     alphas = jnp.stack(kepts, axis=1)               # (d_out, ns, nk)
-    return {"alphas": alphas.reshape(spec.d_out, ns * nk).T.astype(w.dtype),
-            "idx": idx}
+    out = {"alphas": alphas.reshape(spec.d_out, ns * nk).T.astype(w.dtype),
+           "idx": idx}
+    return quantize_params(out, spec.alpha_dtype)
 
 
 def decompress_matrix(params: dict, spec: OVSFSpec) -> jnp.ndarray:
     """OVSF params -> dense (d_in, d_out) weight (pure-jnp reference path)."""
+    al, scale, adt = alpha_params(params)
+    if adt:
+        params = dict(params, alphas=dequantize_alphas(al, scale, adt))
     if not spec.seg:
         w_t = reconstruct(params["alphas"].T, params["idx"], spec.d_in,
                           L=spec.L)

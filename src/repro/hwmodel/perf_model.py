@@ -131,6 +131,28 @@ class GemmLayer:
     # (weights read once per step); > 1 for the FPGA workloads. On-the-fly
     # generation removes this entire term — the paper's core win.
     weight_reread: int = 1
+    # Storage dtype of the streamed alpha coefficients: "" (alphas in the
+    # activation dtype, dtype_bytes each), "int8" (1 B), or "int4" (0.5 B
+    # packed). Quantising the stored form shrinks the only HBM weight
+    # traffic the fused path has left, raising the roofline of IFM-bound
+    # rows (unzipFPGA / Petrica et al.).
+    alpha_dtype: str = ""
+
+    @property
+    def alpha_itemsize(self) -> float:
+        """Bytes per stored alpha coefficient."""
+        return {"": float(self.dtype_bytes),
+                "int8": 1.0, "int4": 0.5}[self.alpha_dtype]
+
+    @property
+    def alpha_hbm_bytes(self) -> float:
+        """Alpha-stream bytes per step: coefficients + per-segment fp32
+        scales (the scales are J/n_keep values — noise next to the buffer,
+        but modeled so int4's 8x claim stays honest)."""
+        b = self.j_total * self.d_out * self.alpha_itemsize
+        if self.alpha_dtype:
+            b += (self.j_total // self.n_keep) * 4.0
+        return b
 
     @property
     def L(self) -> int:
@@ -199,7 +221,7 @@ def layer_timing(layer: GemmLayer, hw: HW = V5E) -> LayerTiming:
         gen_peak = hw.wgen_flops or hw.peak_flops
         pipelined = hw.wgen_flops > 0
         if not layer.alphas_resident:
-            t_w = J * do * by / hw.hbm_bw       # alphas only cross HBM
+            t_w = layer.alpha_hbm_bytes / hw.hbm_bw  # alphas only cross HBM
         if layer.exec_path == "spectral":
             # per-seg FWHT on activations (VPU, overlaps the MXU) +
             # rho-smaller GEMM on the MXU
@@ -235,8 +257,10 @@ def model_layers(cfg, shape, *, n_devices: int = 256, tp: int = 16
         rho = o.rho_for(name) if (o.enable and group in o.targets
                                   and min(d_in, d_out) >= o.min_dim) else 1.0
         seg = o.seg_len if (o.seg_len and d_in % max(o.seg_len, 1) == 0) else 0
+        is_ovsf = o.enable and rho < 1.0
         return GemmLayer(name, M, d_in, d_out, rho=rho,
-                         ovsf=o.enable and rho < 1.0, exec_path=ex, seg=seg)
+                         ovsf=is_ovsf, exec_path=ex, seg=seg,
+                         alpha_dtype=o.alpha_dtype if is_ovsf else "")
 
     d, hd = cfg.d_model, cfg.hd
     layers: list[GemmLayer] = []

@@ -47,19 +47,28 @@ def fwht(x: jnp.ndarray, *, use_pallas: bool | None = None,
 
 
 def decompress(alphas: jnp.ndarray, idx: jnp.ndarray, d_in: int, *,
+               alpha_scale=None, alpha_dtype: str = "",
                use_pallas: bool | None = None, interpret: bool = False
                ) -> jnp.ndarray:
     """Dense (d_in, d_out) weights from OVSF params.
 
     idx (J,) -> monolithic codes; idx (n_seg, n_keep) -> segmented codes
-    (the paper's Alg. 1 layout).
+    (the paper's Alg. 1 layout). Quantised alphas (``alpha_dtype`` int8/int4
+    + ``alpha_scale``): the Pallas path dequantises inside the generator
+    loop; the jnp paths dequantise up front (XLA fuses the convert into the
+    consumer, and materialize's dataflow round-trips dense W regardless).
     """
     if use_pallas is None:
         use_pallas = on_tpu()
     if idx.ndim == 2:
+        if alpha_dtype:
+            alphas = ovsf.dequantize_alphas(alphas, alpha_scale, alpha_dtype)
         return _segmented_decompress(alphas, idx, d_in)
     if use_pallas:
-        return ovsf_decompress(alphas, idx, d_in=d_in, interpret=interpret)
+        return ovsf_decompress(alphas, idx, d_in=d_in, alpha_scale=alpha_scale,
+                               alpha_dtype=alpha_dtype, interpret=interpret)
+    if alpha_dtype:
+        alphas = ovsf.dequantize_alphas(alphas, alpha_scale, alpha_dtype)
     # FWHT-based decompression: no LxL temp, HLO stays small for dry-runs.
     return kref.fwht_decompress_ref(alphas, idx, d_in)
 
@@ -78,14 +87,19 @@ def _segmented_decompress(alphas: jnp.ndarray, idx: jnp.ndarray, d_in: int
 
 
 def spectral_matmul(x: jnp.ndarray, alphas: jnp.ndarray, idx: jnp.ndarray,
-                    *, use_pallas: bool | None = None, interpret: bool = False
+                    *, alpha_scale=None, alpha_dtype: str = "",
+                    use_pallas: bool | None = None, interpret: bool = False
                     ) -> jnp.ndarray:
     """y = x @ W via the activation-transform identity (exact).
 
     Monolithic: y = fwht(pad(x))[:, idx] @ alphas.
     Segmented:  per length-L0 segment, y = concat_s(fwht(x_s)[:, idx_s]) @ A —
     a single dense GEMM with contraction rho*d_in (block-diagonal basis).
+    Quantised alphas are dequantised before the GEMM (the alphas ARE the
+    B-operand here; the int8 bytes are still what crosses HBM under fusion).
     """
+    if alpha_dtype:
+        alphas = ovsf.dequantize_alphas(alphas, alpha_scale, alpha_dtype)
     d_in = x.shape[-1]
     if idx.ndim == 2:
         ns, nk = idx.shape
@@ -163,18 +177,26 @@ def cached_generate(cache_key: str, alphas: jnp.ndarray, idx: jnp.ndarray,
 
 
 def cached_decompress(alphas: jnp.ndarray, idx: jnp.ndarray, d_in: int, *,
-                      cache_key: str, use_pallas: bool | None = None,
+                      cache_key: str, alpha_scale=None, alpha_dtype: str = "",
+                      use_pallas: bool | None = None,
                       interpret: bool = False) -> jnp.ndarray:
     """``decompress`` with once-per-parameter-version memoisation.
 
     Handles an (E, J, d_out) expert bank by vmapping the generator over the
-    leading axis (shared idx), mirroring ``moe._expert_matmul``."""
+    leading axis (shared idx), mirroring ``moe._expert_matmul``. The cache
+    key must already carry the alpha dtype (``ovsf_matmul`` appends it) so a
+    dtype switch can never serve a stale fp32 W."""
     def gen():
         if alphas.ndim == 3:
+            if alpha_dtype:
+                raise NotImplementedError(
+                    "quantised (E, J, d_out) expert alpha banks are not "
+                    "supported yet (per-expert scales)")
             return jax.vmap(lambda a: decompress(
                 a, idx, d_in, use_pallas=use_pallas,
                 interpret=interpret))(alphas)
-        return decompress(alphas, idx, d_in, use_pallas=use_pallas,
+        return decompress(alphas, idx, d_in, alpha_scale=alpha_scale,
+                          alpha_dtype=alpha_dtype, use_pallas=use_pallas,
                           interpret=interpret)
     return cached_generate(cache_key, alphas, idx, gen)
 
@@ -182,6 +204,7 @@ def cached_decompress(alphas: jnp.ndarray, idx: jnp.ndarray, d_in: int, *,
 def ovsf_matmul(x: jnp.ndarray, alphas: jnp.ndarray, idx: jnp.ndarray, *,
                 path: ExecPath = "materialize",
                 plan: Optional[Any] = None,
+                alpha_scale=None, alpha_dtype: str = "",
                 use_pallas: bool | None = None,
                 interpret: bool = False,
                 block_m: int = 128, block_n: int = 128,
@@ -191,7 +214,11 @@ def ovsf_matmul(x: jnp.ndarray, alphas: jnp.ndarray, idx: jnp.ndarray, *,
     ``plan`` (a ``runtime.mapper.LayerPlan``) overrides path, Pallas block
     sizes, and the decompress-cache policy — the hardware-aware per-layer
     dispatch of paper §5. Without a plan, behaviour is the legacy explicit
-    ``path=`` dispatch with default blocks.
+    ``path=`` dispatch with default blocks. ``alpha_dtype``/``alpha_scale``
+    select the quantised alpha-storage form (see ``core.ovsf.alpha_params``
+    to unpack a param dict): the fused Pallas path streams the quantised
+    bytes and dequantises in-kernel; the other paths dequantise at the GEMM
+    boundary.
     """
     cache_key = ""
     if plan is not None:
@@ -200,29 +227,39 @@ def ovsf_matmul(x: jnp.ndarray, alphas: jnp.ndarray, idx: jnp.ndarray, *,
         block_k, block_j = plan.block_k, plan.block_j
         if plan.cache_weights:
             cache_key = plan.cache_key or f"ovsf:{id(alphas)}"
+    if cache_key:
+        # the key carries the alpha dtype: an alpha-dtype switch re-keys the
+        # slot instead of ever serving a stale fp32 (or stale-int8) W
+        cache_key = f"{cache_key}|{alpha_dtype or 'fp'}"
     if use_pallas is None:
         use_pallas = on_tpu()
     lead = x.shape[:-1]
     d_in = x.shape[-1]
-    d_out = alphas.shape[-1]
+    d_out = alphas.shape[-1] * (2 if alpha_dtype == "int4" else 1)
     x2 = x.reshape(-1, d_in)
 
     if path == "spectral":
-        y = spectral_matmul(x2, alphas, idx, use_pallas=use_pallas,
+        y = spectral_matmul(x2, alphas, idx, alpha_scale=alpha_scale,
+                            alpha_dtype=alpha_dtype, use_pallas=use_pallas,
                             interpret=interpret)
     elif path == "fused":
         if use_pallas:
-            y = ovsf_gemm(x2, alphas, idx, interpret=interpret,
+            y = ovsf_gemm(x2, alphas, idx, alpha_scale=alpha_scale,
+                          alpha_dtype=alpha_dtype, interpret=interpret,
                           block_m=block_m, block_n=block_n,
                           block_k=block_k, block_j=block_j)
         else:
-            y = kref.ovsf_matmul_ref(x2, alphas, idx)
+            y = kref.ovsf_matmul_ref(x2, alphas, idx, alpha_scale=alpha_scale,
+                                     alpha_dtype=alpha_dtype)
     elif path == "materialize":
         if cache_key:
             W = cached_decompress(alphas, idx, d_in, cache_key=cache_key,
+                                  alpha_scale=alpha_scale,
+                                  alpha_dtype=alpha_dtype,
                                   use_pallas=use_pallas, interpret=interpret)
         else:
-            W = decompress(alphas, idx, d_in, use_pallas=use_pallas,
+            W = decompress(alphas, idx, d_in, alpha_scale=alpha_scale,
+                           alpha_dtype=alpha_dtype, use_pallas=use_pallas,
                            interpret=interpret)
         y = (x2 @ W.astype(x2.dtype)).astype(x.dtype)
     else:

@@ -27,7 +27,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.ovsf import next_pow2
+from repro.core.ovsf import next_pow2, unpack_int4
 
 
 def _sign_tile(idx_col: jnp.ndarray, j0: jnp.ndarray, k0: jnp.ndarray,
@@ -61,19 +61,43 @@ def _sign_tile(idx_col: jnp.ndarray, j0: jnp.ndarray, k0: jnp.ndarray,
     return s
 
 
+def _dequant_tile(al_c: jnp.ndarray, scale_c: jnp.ndarray,
+                  quant: str) -> jnp.ndarray:
+    """Fused dequant epilogue: int8 / packed-int4 alpha tile -> fp32.
+
+    This runs *inside* the generator loop on the (bj, bn) tile just DMA'd
+    from HBM — the quantised bytes are what crossed the memory wall; fp32
+    alphas exist only tile-at-a-time in VMEM. scale_c is the per-row
+    (segment-expanded) fp32 scale column.
+    """
+    al = unpack_int4(al_c) if quant == "int4" else al_c
+    return al.astype(jnp.float32) * scale_c.astype(jnp.float32)
+
+
 def _gen_w_tile(idx_ref, alpha_ref, k: jnp.ndarray, *, bk: int, bj: int,
-                seg: int = 0, n_keep: int = 0) -> jnp.ndarray:
-    """Generate the (bk, bn) weight tile for k-block ``k`` from alphas in VMEM."""
+                seg: int = 0, n_keep: int = 0, scale_ref=None,
+                quant: str = "") -> jnp.ndarray:
+    """Generate the (bk, bn) weight tile for k-block ``k`` from alphas in VMEM.
+
+    With ``quant`` set, ``alpha_ref`` holds int8 (or int4-packed-in-int8)
+    coefficients and ``scale_ref`` the per-row fp32 scales; each chunk is
+    dequantised in-register right before its MXU contraction.
+    """
     J = idx_ref.shape[0]
-    bn = alpha_ref.shape[1]
+    bn_store = alpha_ref.shape[1]
+    bn = 2 * bn_store if quant == "int4" else bn_store
     k0 = k * bk
     n_chunks = J // bj
 
     def body(c, acc):
         j0 = c * bj
         idx_c = jax.lax.dynamic_slice(idx_ref[...], (j0, 0), (bj, 1))
-        al_c = jax.lax.dynamic_slice(
-            alpha_ref[...], (j0, 0), (bj, bn)).astype(jnp.float32)
+        al_c = jax.lax.dynamic_slice(alpha_ref[...], (j0, 0), (bj, bn_store))
+        if quant:
+            sc_c = jax.lax.dynamic_slice(scale_ref[...], (j0, 0), (bj, 1))
+            al_c = _dequant_tile(al_c, sc_c, quant)
+        else:
+            al_c = al_c.astype(jnp.float32)
         S = _sign_tile(idx_c, j0, k0, bk, seg, n_keep)                 # (bj, bk)
         return acc + jax.lax.dot_general(
             S, al_c, (((0,), (0,)), ((), ())),
@@ -83,12 +107,31 @@ def _gen_w_tile(idx_ref, alpha_ref, k: jnp.ndarray, *, bk: int, bj: int,
     return jax.lax.fori_loop(0, n_chunks, body, acc0)
 
 
+def _row_scales(alpha_scale, J: int, bj: int) -> jnp.ndarray:
+    """(n_seg,)/(n_seg,1) per-segment scales -> padded (Jp, 1) per-row fp32.
+
+    J fp32 values — 1/d_out of the alpha buffer; negligible HBM traffic next
+    to the int8 stream it describes."""
+    s = jnp.asarray(alpha_scale, jnp.float32).reshape(-1)
+    if s.shape[0] <= 0 or J % s.shape[0]:
+        raise ValueError(
+            f"alpha_scale has {s.shape[0]} segments; J={J} not divisible")
+    rows = jnp.repeat(s, J // s.shape[0])
+    return _pad1(rows, bj).reshape(-1, 1)
+
+
 # ---------------------------------------------------------------------------
 # Fused on-the-fly GEMM (TiWGen)
 # ---------------------------------------------------------------------------
 
-def _ovsf_gemm_kernel(idx_ref, x_ref, alpha_ref, o_ref, acc_ref, *,
-                      bk: int, bj: int, nk: int, seg: int, n_keep: int):
+def _ovsf_gemm_kernel(idx_ref, x_ref, alpha_ref, *rest,
+                      bk: int, bj: int, nk: int, seg: int, n_keep: int,
+                      quant: str = ""):
+    if quant:
+        scale_ref, o_ref, acc_ref = rest
+    else:
+        o_ref, acc_ref = rest
+        scale_ref = None
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -96,7 +139,8 @@ def _ovsf_gemm_kernel(idx_ref, x_ref, alpha_ref, o_ref, acc_ref, *,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     w_tile = _gen_w_tile(idx_ref, alpha_ref, k, bk=bk, bj=bj, seg=seg,
-                         n_keep=n_keep)                                # (bk, bn)
+                         n_keep=n_keep, scale_ref=scale_ref,
+                         quant=quant)                                  # (bk, bn)
     x_tile = x_ref[...].astype(jnp.float32)                            # (bm, bk)
     acc_ref[...] += jax.lax.dot_general(
         x_tile, w_tile, (((1,), (0,)), ((), ())),
@@ -109,8 +153,10 @@ def _ovsf_gemm_kernel(idx_ref, x_ref, alpha_ref, o_ref, acc_ref, *,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block_m", "block_n", "block_k", "block_j", "interpret"))
+    static_argnames=("block_m", "block_n", "block_k", "block_j",
+                     "alpha_dtype", "interpret"))
 def ovsf_gemm(x: jnp.ndarray, alphas: jnp.ndarray, idx: jnp.ndarray, *,
+              alpha_scale=None, alpha_dtype: str = "",
               block_m: int = 128, block_n: int = 128, block_k: int = 128,
               block_j: int = 128, interpret: bool = False) -> jnp.ndarray:
     """y = x @ W where W[k, n] = sum_j H[idx[j], k] * alphas[j, n].
@@ -118,9 +164,22 @@ def ovsf_gemm(x: jnp.ndarray, alphas: jnp.ndarray, idx: jnp.ndarray, *,
     x: (M, d_in), alphas: (J, d_out) -> (M, d_out). idx: (J,) int32 for
     monolithic codes, or (n_seg, n_keep) for the segmented (Alg. 1) layout.
     Weight bytes read from HBM: J*d_out instead of d_in*d_out.
+
+    With ``alpha_dtype`` = "int8"/"int4" the alphas operand is the quantised
+    storage form ((J, d_out) int8 or (J, d_out//2) nibble-packed int8) and
+    ``alpha_scale`` the per-segment scales; the generator loop dequantises
+    each tile in-register right before its S^T @ alpha contraction, so the
+    quantised bytes are all that streams from HBM — fp32 alphas are never
+    materialised.
     """
+    quant = alpha_dtype
+    if quant not in ("", "int8", "int4"):
+        raise ValueError(f"ovsf_gemm: bad alpha_dtype {alpha_dtype!r}")
+    if quant and alpha_scale is None:
+        raise ValueError("ovsf_gemm: alpha_scale required for quantised alphas")
     M, d_in = x.shape
-    J, d_out = alphas.shape
+    J = alphas.shape[0]
+    d_out = alphas.shape[1] * (2 if quant == "int4" else 1)
     seg = 0
     keep = 0
     if idx.ndim == 2:
@@ -131,25 +190,35 @@ def ovsf_gemm(x: jnp.ndarray, alphas: jnp.ndarray, idx: jnp.ndarray, *,
             block_k = max((block_k // seg) * seg, seg)
     bm = min(block_m, _ceil_mult(M, 8))
     bn = min(block_n, d_out)
+    if quant == "int4" and bn % 2:
+        bn += 1
     bk = min(block_k, d_in)
     bj = min(block_j, _ceil_mult(J, 8))
 
     xp = _pad2(x, bm, bk)
-    alp = _pad2(alphas, bj, bn)
+    alp = _pad2(alphas, bj, bn // 2 if quant == "int4" else bn)
     idxp = _pad1(idx.astype(jnp.int32), bj).reshape(-1, 1)
     Mp, Kp = xp.shape
-    Jp, Np = alp.shape
+    Jp = alp.shape[0]
+    Np = alp.shape[1] * (2 if quant == "int4" else 1)
     nk = Kp // bk
+    bn_store = bn // 2 if quant == "int4" else bn
+
+    operands = [idxp, xp, alp]
+    in_specs = [
+        pl.BlockSpec((Jp, 1), lambda m, n, k: (0, 0)),        # idx (whole)
+        pl.BlockSpec((bm, bk), lambda m, n, k: (m, k)),       # x
+        pl.BlockSpec((Jp, bn_store), lambda m, n, k: (0, n)), # alphas
+    ]
+    if quant:
+        operands.append(_row_scales(alpha_scale, J, bj))
+        in_specs.append(pl.BlockSpec((Jp, 1), lambda m, n, k: (0, 0)))
 
     out = pl.pallas_call(
         functools.partial(_ovsf_gemm_kernel, bk=bk, bj=bj, nk=nk, seg=seg,
-                          n_keep=keep),
+                          n_keep=keep, quant=quant),
         grid=(Mp // bm, Np // bn, nk),
-        in_specs=[
-            pl.BlockSpec((Jp, 1), lambda m, n, k: (0, 0)),   # idx (whole)
-            pl.BlockSpec((bm, bk), lambda m, n, k: (m, k)),  # x
-            pl.BlockSpec((Jp, bn), lambda m, n, k: (0, n)),  # alphas
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
         out_shape=jax.ShapeDtypeStruct((Mp, Np), x.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
@@ -159,7 +228,7 @@ def ovsf_gemm(x: jnp.ndarray, alphas: jnp.ndarray, idx: jnp.ndarray, *,
         compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(idxp, xp, alp)
+    )(*operands)
     return out[:M, :d_out]
 
 
@@ -167,22 +236,38 @@ def ovsf_gemm(x: jnp.ndarray, alphas: jnp.ndarray, idx: jnp.ndarray, *,
 # Weight-stationary decompression (generate once, reuse)
 # ---------------------------------------------------------------------------
 
-def _decompress_kernel(idx_ref, alpha_ref, o_ref, *, bk: int, bj: int,
-                       seg: int, n_keep: int):
+def _decompress_kernel(idx_ref, alpha_ref, *rest, bk: int, bj: int,
+                       seg: int, n_keep: int, quant: str = ""):
+    if quant:
+        scale_ref, o_ref = rest
+    else:
+        (o_ref,) = rest
+        scale_ref = None
     k = pl.program_id(0)
     o_ref[...] = _gen_w_tile(idx_ref, alpha_ref, k, bk=bk, bj=bj, seg=seg,
-                             n_keep=n_keep).astype(o_ref.dtype)
+                             n_keep=n_keep, scale_ref=scale_ref,
+                             quant=quant).astype(o_ref.dtype)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("d_in", "block_n", "block_k", "block_j", "interpret"))
+    static_argnames=("d_in", "block_n", "block_k", "block_j", "alpha_dtype",
+                     "interpret"))
 def ovsf_decompress(alphas: jnp.ndarray, idx: jnp.ndarray, *, d_in: int,
+                    alpha_scale=None, alpha_dtype: str = "",
                     block_n: int = 256, block_k: int = 256, block_j: int = 128,
                     interpret: bool = False) -> jnp.ndarray:
     """Materialise dense W (d_in, d_out) from (J, d_out) alphas + code ids
-    ((J,) monolithic or (n_seg, n_keep) segmented)."""
-    J, d_out = alphas.shape
+    ((J,) monolithic or (n_seg, n_keep) segmented). Quantised alphas
+    (``alpha_dtype`` int8/int4 + ``alpha_scale``) are dequantised tile-wise
+    inside the generator loop, same epilogue as ``ovsf_gemm``."""
+    quant = alpha_dtype
+    if quant not in ("", "int8", "int4"):
+        raise ValueError(f"ovsf_decompress: bad alpha_dtype {alpha_dtype!r}")
+    if quant and alpha_scale is None:
+        raise ValueError("ovsf_decompress: alpha_scale required")
+    J = alphas.shape[0]
+    d_out = alphas.shape[1] * (2 if quant == "int4" else 1)
     seg = 0
     keep = 0
     if idx.ndim == 2:
@@ -194,27 +279,38 @@ def ovsf_decompress(alphas: jnp.ndarray, idx: jnp.ndarray, *, d_in: int,
     L = next_pow2(d_in)
     bk = min(block_k, L if not seg else d_in)
     bn = min(block_n, d_out)
+    if quant == "int4" and bn % 2:
+        bn += 1
     bj = min(block_j, _ceil_mult(J, 8))
 
-    alp = _pad2(alphas, bj, bn)
+    alp = _pad2(alphas, bj, bn // 2 if quant == "int4" else bn)
     idxp = _pad1(idx.astype(jnp.int32), bj).reshape(-1, 1)
-    Jp, Np = alp.shape
+    Jp = alp.shape[0]
+    Np = alp.shape[1] * (2 if quant == "int4" else 1)
     Kp = _round_up(d_in, bk)
+    bn_store = bn // 2 if quant == "int4" else bn
+
+    operands = [idxp, alp]
+    in_specs = [
+        pl.BlockSpec((Jp, 1), lambda k, n: (0, 0)),
+        pl.BlockSpec((Jp, bn_store), lambda k, n: (0, n)),
+    ]
+    if quant:
+        operands.append(_row_scales(alpha_scale, J, bj))
+        in_specs.append(pl.BlockSpec((Jp, 1), lambda k, n: (0, 0)))
 
     out = pl.pallas_call(
         functools.partial(_decompress_kernel, bk=bk, bj=bj, seg=seg,
-                          n_keep=keep),
+                          n_keep=keep, quant=quant),
         grid=(Kp // bk, Np // bn),
-        in_specs=[
-            pl.BlockSpec((Jp, 1), lambda k, n: (0, 0)),
-            pl.BlockSpec((Jp, bn), lambda k, n: (0, n)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bk, bn), lambda k, n: (k, n)),
-        out_shape=jax.ShapeDtypeStruct((Kp, Np), alphas.dtype),
+        out_shape=jax.ShapeDtypeStruct(
+            (Kp, Np), jnp.float32 if quant else alphas.dtype),
         compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
-    )(idxp, alp)
+    )(*operands)
     return out[:d_in, :d_out]
 
 

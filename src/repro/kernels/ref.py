@@ -16,14 +16,25 @@ def fwht_ref(x: jnp.ndarray) -> jnp.ndarray:
     return ovsf.fwht(x, axis=-1)
 
 
-def ovsf_decompress_ref(alphas: jnp.ndarray, idx: jnp.ndarray, d_in: int
+def dequant_ref(alphas: jnp.ndarray, alpha_scale, alpha_dtype: str
+                ) -> jnp.ndarray:
+    """Quantised-storage alphas -> fp32 (identity when alpha_dtype is '')."""
+    if not alpha_dtype:
+        return alphas
+    return ovsf.dequantize_alphas(alphas, alpha_scale, alpha_dtype)
+
+
+def ovsf_decompress_ref(alphas: jnp.ndarray, idx: jnp.ndarray, d_in: int, *,
+                        alpha_scale=None, alpha_dtype: str = ""
                         ) -> jnp.ndarray:
     """(J, d_out) alphas + code ids -> dense (d_in, d_out) W.
 
     Monolithic idx (J,): W[k, n] = sum_j H[idx[j], k] * alphas[j, n], k < d_in
     (crop of length-L codes). Segmented idx (n_seg, n_keep): block-diagonal
     basis — each segment's codes only touch its own length-L0 slice (Alg. 1).
+    Quantised alphas (int8/int4 + scale) are dequantised up front.
     """
+    alphas = dequant_ref(alphas, alpha_scale, alpha_dtype)
     if idx.ndim == 2:
         ns, nk = idx.shape
         L0 = d_in // ns
@@ -36,13 +47,15 @@ def ovsf_decompress_ref(alphas: jnp.ndarray, idx: jnp.ndarray, d_in: int
     return S.T @ alphas
 
 
-def ovsf_matmul_ref(x: jnp.ndarray, alphas: jnp.ndarray, idx: jnp.ndarray
+def ovsf_matmul_ref(x: jnp.ndarray, alphas: jnp.ndarray, idx: jnp.ndarray, *,
+                    alpha_scale=None, alpha_dtype: str = ""
                     ) -> jnp.ndarray:
     """Fused on-the-fly GEMM oracle: y = x @ W(alphas, idx).
 
     x: (M, d_in); alphas: (n_keep, d_out); returns (M, d_out). Computed in f32.
     """
     d_in = x.shape[-1]
+    alphas = dequant_ref(alphas, alpha_scale, alpha_dtype)
     W = ovsf_decompress_ref(alphas.astype(jnp.float32), idx, d_in)
     return (x.astype(jnp.float32) @ W).astype(x.dtype)
 

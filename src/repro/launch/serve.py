@@ -15,6 +15,7 @@ saving the table with ``--calibration-out``).
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -36,6 +37,10 @@ def main(argv=None) -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--hw", default="v5e", choices=list(hw_names()),
                     help="hardware target for the mapper's execution plans")
+    ap.add_argument("--alpha-dtype", default="", choices=["", "int8", "int4"],
+                    help="quantised alpha storage: int8 halves / int4 "
+                         "quarters the streamed alpha bytes (dequantised "
+                         "in-kernel by the fused generator)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; > 0 samples with per-request seeds")
     ap.add_argument("--top-k", type=int, default=0)
@@ -54,10 +59,18 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.alpha_dtype:
+        if not cfg.ovsf.enable:
+            print(f"[serve] --alpha-dtype {args.alpha_dtype} ignored: "
+                  f"{cfg.name} has no OVSF layers")
+        cfg = cfg.replace(ovsf=dataclasses.replace(
+            cfg.ovsf, alpha_dtype=args.alpha_dtype))
     key = jax.random.PRNGKey(args.seed)
     params = R.model_init(key, cfg)
     print(f"[serve] {cfg.name}: {R.param_count(params)/1e6:.1f}M params "
-          f"(hw={args.hw})")
+          f"(hw={args.hw}"
+          + (f", alphas={args.alpha_dtype}" if args.alpha_dtype else "")
+          + ")")
 
     eng = LLMEngine(params, cfg, batch_slots=args.slots,
                     buffer_len=args.buffer, hw=args.hw,
@@ -84,7 +97,8 @@ def main(argv=None) -> None:
           f"step_compiles={stats.step_compiles}")
     print(f"[serve] weight_cache: hits={stats.weight_cache_hits} "
           f"misses={stats.weight_cache_misses} "
-          f"entries={stats.weight_cache_entries}")
+          f"entries={stats.weight_cache_entries} "
+          f"bytes={stats.weight_cache_bytes}")
 
     if args.calibrate:
         old = eng.cfg.exec_plan

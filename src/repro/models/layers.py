@@ -39,6 +39,8 @@ def linear_init(key: jax.Array, cfg: ModelConfig, name: str, d_in: int,
                              strategy=cfg.ovsf.strategy,  # type: ignore[arg-type]
                              seg=seg)
         p.update(ovsf.init_ovsf(key, spec, scale=scale, dtype=dtype))
+        if cfg.ovsf.alpha_dtype:
+            p = ovsf.quantize_params(p, cfg.ovsf.alpha_dtype)
     else:
         std = float(np.sqrt(scale / d_in))
         p["w"] = jax.random.normal(key, (d_in, d_out), dtype) * std
@@ -61,13 +63,15 @@ def linear_apply(p: dict, x: jnp.ndarray, cfg: ModelConfig,
     hardware-aware execution plan when ``cfg.exec_plan`` is set; OVSF layers
     then dispatch per-layer (path, blocks, cache) instead of the uniform
     ``cfg.ovsf.exec_path``."""
-    if "alphas" in p:
+    if "alphas" in p or "alphas_q8" in p or "alphas_q4" in p:
+        al, scale, adt = ovsf.alpha_params(p)
         plan = layer_plan(cfg, name)
         if plan is not None:
-            y = kops.ovsf_matmul(x, p["alphas"], p["idx"], plan=plan)
+            y = kops.ovsf_matmul(x, al, p["idx"], plan=plan,
+                                 alpha_scale=scale, alpha_dtype=adt)
         else:
-            y = kops.ovsf_matmul(x, p["alphas"], p["idx"],
-                                 path=cfg.ovsf.exec_path)
+            y = kops.ovsf_matmul(x, al, p["idx"], path=cfg.ovsf.exec_path,
+                                 alpha_scale=scale, alpha_dtype=adt)
     else:
         y = x @ p["w"].astype(x.dtype)
     if "b" in p:
@@ -76,15 +80,19 @@ def linear_apply(p: dict, x: jnp.ndarray, cfg: ModelConfig,
 
 
 def linear_convert_to_ovsf(p: dict, rho: float, strategy: str = "iterative",
-                           seg: int = 16) -> dict:
-    """Compress a dense linear param dict into OVSF form (paper's Converter)."""
+                           seg: int = 16, alpha_dtype: str = "") -> dict:
+    """Compress a dense linear param dict into OVSF form (paper's Converter).
+
+    ``alpha_dtype`` "int8"/"int4" emits the quantised storage form
+    (alphas_q8/alphas_q4 + per-segment alpha_scale)."""
     w = p["w"]
     if seg and w.shape[0] % seg:
         seg = 0
     spec = ovsf.OVSFSpec(w.shape[0], w.shape[1], rho=rho, strategy=strategy,  # type: ignore[arg-type]
-                         seg=seg)
+                         seg=seg, alpha_dtype=alpha_dtype)
     out = ovsf.compress_matrix(jnp.asarray(w, jnp.float32), spec)
-    out = {"alphas": out["alphas"].astype(w.dtype), "idx": out["idx"]}
+    if "alphas" in out:
+        out = {"alphas": out["alphas"].astype(w.dtype), "idx": out["idx"]}
     if "b" in p:
         out["b"] = p["b"]
     return out

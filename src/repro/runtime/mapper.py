@@ -58,6 +58,8 @@ class LayerPlan:
     cache_key: str = ""             # identity key for the decompress cache
     bound: str = "C"                # roofline bound class at decision time
     ii_s: float = 0.0               # modeled initiation interval (seconds)
+    alpha_dtype: str = ""           # alpha storage dtype the plan was modeled
+                                    # under ("" fp / "int8" / "int4")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,7 +108,7 @@ def _candidate_ii(layer: pm.GemmLayer, path: str, hw: pm.HW, *,
         by = layer.dtype_bytes
         dense_read = layer.d_in * layer.d_out * by / hw.hbm_bw
         alpha_read = 0.0 if layer.alphas_resident else \
-            layer.j_total * layer.d_out * by / hw.hbm_bw
+            layer.alpha_hbm_bytes / hw.hbm_bw
         t = dataclasses.replace(
             t,
             t_wgen=t.t_wgen / weight_reuse,
@@ -121,6 +123,7 @@ def classify_gemm(M: int, d_in: int, d_out: int, rho: float, *,
                   weight_reuse: int = 1,
                   paths: Sequence[str] = DEFAULT_PATHS,
                   alphas_resident: bool = False,
+                  alpha_dtype: str = "",
                   calibration=None) -> LayerPlan:
     """Map one OVSF GEMM y[M, d_out] = x[M, d_in] @ W(alphas) to a plan.
 
@@ -141,13 +144,18 @@ def classify_gemm(M: int, d_in: int, d_out: int, rho: float, *,
     the table's relative correction factor for ``(name, path, hw.name)``
     before the minimum is taken, so serving-measured skew re-ranks paths on
     the next planning pass (unmeasured candidates keep factor 1.0).
+
+    ``alpha_dtype`` ("int8"/"int4") models the quantised alpha stream —
+    halved/quartered t_mem_w for every path that reads alphas from HBM, so
+    fused-int8 can clear an IFM bound that fused-fp left standing.
     """
     hw = pm.resolve_hw(hw)
     if seg and d_in % seg:
         seg = 0
     layer = pm.GemmLayer(name, M=M, d_in=d_in, d_out=d_out, rho=min(rho, 1.0),
                          ovsf=rho < 1.0, seg=seg,
-                         alphas_resident=alphas_resident)
+                         alphas_resident=alphas_resident,
+                         alpha_dtype=alpha_dtype if rho < 1.0 else "")
     if not layer.ovsf:
         blocks = tb.balance_blocks(M, d_in, d_out,
                                    vmem_limit=int(hw.vmem_bytes * 0.75))
@@ -178,7 +186,8 @@ def classify_gemm(M: int, d_in: int, d_out: int, rho: float, *,
     return LayerPlan(best_path, block_m=blocks.bm, block_n=blocks.bn,
                      block_k=bk, block_j=bj,
                      cache_weights=best_path == "materialize",
-                     cache_key=name, bound=best_bound, ii_s=best_ii)
+                     cache_key=name, bound=best_bound, ii_s=best_ii,
+                     alpha_dtype=alpha_dtype)
 
 
 def _ceil8(n: int) -> int:
@@ -230,7 +239,7 @@ def plan_model(cfg, shape, *, hw=pm.V5E, n_devices: int = 1,
         entries.append((wtype, classify_gemm(
             l.M, l.d_in, l.d_out, l.rho, seg=l.seg, hw=hw, name=wtype,
             weight_reuse=weight_reuse, paths=paths,
-            calibration=calibration)))
+            alpha_dtype=l.alpha_dtype, calibration=calibration)))
     return ExecutionPlan(tuple(entries), hw_label=hw.name)
 
 

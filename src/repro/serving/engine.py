@@ -69,6 +69,7 @@ class EngineStats:
     weight_cache_hits: int = 0
     weight_cache_misses: int = 0
     weight_cache_entries: int = 0
+    weight_cache_bytes: int = 0   # resident dense-W footprint (process-wide)
 
 
 class LLMEngine:
@@ -261,6 +262,7 @@ class LLMEngine:
         st.weight_cache_hits = wc["hits"] - self._wc_base["hits"]
         st.weight_cache_misses = wc["misses"] - self._wc_base["misses"]
         st.weight_cache_entries = wc["entries"]
+        st.weight_cache_bytes = wc["bytes"]
         if (self.calibrate and out.decode_s > 0.0 and not so.chunks
                 and not so.prefill_groups and self.cfg.exec_plan is not None):
             from repro.runtime.calibrate import update_from_step

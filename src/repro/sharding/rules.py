@@ -70,7 +70,9 @@ class ShardingRules:
         stacked = parts[0] in ("blocks",) or "blocks" in parts[:2]
         off = 1 if (stacked and len(shape) >= 2) else 0
 
-        if leaf in ("idx",):
+        if leaf in ("idx", "alpha_scale"):
+            # code ids and per-segment quant scales span the whole (possibly
+            # TP-sharded) alpha buffer: replicate
             return P()
         if len(shape) - off <= 1:              # biases, norms, A_log, D, ...
             return P(*([None] * len(shape)))
