@@ -20,6 +20,16 @@ Three comparisons, all written to ``BENCH_serving.json``:
   phase-based convoy effect actually lands on ITL. TTFT and ITL p50/p95
   are reported per mode; the chunked steady state must trace at most 2
   step shapes (asserted — CI gate).
+* **packed vs padded window**: the (B, W) window step pads every decode
+  slot to W columns, so a step with decode slots + one in-flight chunk is
+  mostly dead FLOPs. The token-packed step flattens the step's valid
+  tokens into one dense pow-2-bucketed stream. Same staggered workload,
+  fresh engines, compiles timed; per-step padding efficiency
+  (valid / batch tokens, `EngineStats.packed_tokens / padded_tokens`) is
+  recorded for both modes, the packed steady state must trace at most 3
+  step shapes (CI gate), and in full mode the bench RAISES unless packed
+  achieves >= 1.15x throughput or >= 1.15x better ITL p95 (the serving
+  analogue of the kernel bench's int8 II gate).
 
 ``--hw`` threads any registered HW target (v5e/v5p/v6e/cpu) into the
 mapper's execution planning (the model still *runs* on the host backend).
@@ -46,6 +56,11 @@ from repro.models import registry as R
 from repro.serving import LLMEngine, Request
 
 MAX_STEP_SHAPES = 2      # chunked steady state: (B, chunk) window + (B, 1)
+MAX_PACKED_STEP_SHAPES = 3   # packed: decode bucket + mixed bucket (+1 rare
+                             # pow-2 overflow when prefill floors exceed the
+                             # token budget)
+PACKED_GATE = 1.15       # packed must beat the padded window by this factor
+                         # on throughput OR ITL p95 (full mode; raises)
 
 
 @functools.lru_cache(maxsize=4)
@@ -216,6 +231,8 @@ def run(print_fn=print, smoke: bool = False,
         kw = {"bucketed_prefill": mode == "bucketed"}
         if mode == "chunked":
             kw = {"chunk_size": chunk_size}
+        elif mode == "packed":
+            kw = {"chunk_size": chunk_size, "packed": True}
         eng = LLMEngine(params, cfg, batch_slots=B, buffer_len=buf, hw=hw,
                         **kw)
         for r in reqs_fn(cfg, n_mixed, lo=lo, hi=hi):
@@ -266,6 +283,41 @@ def run(print_fn=print, smoke: bool = False,
             f"chunked serving traced {stats_c.step_compiles} step shapes "
             f"(> {MAX_STEP_SHAPES}): the unified step is retracing")
 
+    # -- packed vs padded window: same staggered workload, fresh engines ----
+    eng_p, stats_p, dt_p = time_mixed("packed", _staggered_requests)
+    tps_p = stats_p.tokens_out / dt_p
+    lat["packed"] = _latency(eng_p.outputs())
+    eff_window = stats_c.padding_efficiency
+    eff_packed = stats_p.padding_efficiency
+    packed_itl_gain = (lat["chunked"]["itl_p95_s"]
+                       / lat["packed"]["itl_p95_s"]
+                       if lat["packed"]["itl_p95_s"] > 0 else 0.0)
+    packed_tps_ratio = tps_p / tps_c if tps_c > 0 else 0.0
+    print_fn(f"serving_bench,staggered_packed,B={B},n={n_mixed},"
+             f"chunk={chunk_size},{tps_p:.1f}tok/s,"
+             f"step_compiles={stats_p.step_compiles},"
+             f"efficiency={eff_packed:.2f}")
+    print_fn(f"serving_bench,padding_efficiency,"
+             f"window={eff_window:.2f},packed={eff_packed:.2f}")
+    print_fn(f"serving_bench,packed_vs_window,"
+             f"throughput_ratio={packed_tps_ratio:.2f},"
+             f"itl_p95_gain={packed_itl_gain:.2f}x")
+
+    # CI gate: the packed steady state must also stay shape-bounded.
+    if stats_p.step_compiles > MAX_PACKED_STEP_SHAPES:
+        raise RuntimeError(
+            f"packed serving traced {stats_p.step_compiles} step shapes "
+            f"(> {MAX_PACKED_STEP_SHAPES}): the pow-2 token bucketing is "
+            f"leaking shapes")
+    # Perf gate (full mode only — smoke wall-clock on shared CI runners is
+    # noise): packed must beat the padded window on throughput OR ITL p95.
+    if not smoke and packed_tps_ratio < PACKED_GATE \
+            and packed_itl_gain < PACKED_GATE:
+        raise RuntimeError(
+            f"packed step regressed: {packed_tps_ratio:.2f}x throughput / "
+            f"{packed_itl_gain:.2f}x ITL p95 vs the padded window (need "
+            f">= {PACKED_GATE}x on one)")
+
     result = {"bench": "serving", "smoke": smoke, "batch_slots": B,
               "model": cfg.name, "backend": jax.default_backend(), "hw": hw,
               "alpha_dtype": alpha_dtype,
@@ -289,6 +341,21 @@ def run(print_fn=print, smoke: bool = False,
                   "itl_p95_gain_vs_bucketed": itl_gain,
                   "step_compiles": stats_c.step_compiles,
                   "chunk_tokens": stats_c.chunk_tokens},
+              "packed_step": {
+                  "n_requests": n_mixed,
+                  "prompt_lens": f"mixed {lo}..{hi}",
+                  "max_new": "staggered 4..19",
+                  "chunk_size": chunk_size,
+                  "packed_tok_s": tps_p, "window_tok_s": tps_c,
+                  "throughput_ratio_vs_window": packed_tps_ratio,
+                  "itl_p95_gain_vs_window": packed_itl_gain,
+                  "padding_efficiency_window": eff_window,
+                  "padding_efficiency_packed": eff_packed,
+                  "window_valid_tokens": stats_c.packed_tokens,
+                  "window_batch_tokens": stats_c.padded_tokens,
+                  "packed_valid_tokens": stats_p.packed_tokens,
+                  "packed_batch_tokens": stats_p.padded_tokens,
+                  "step_compiles": stats_p.step_compiles},
               "latency": lat}
     if json_path:
         with open(json_path, "w") as f:

@@ -108,6 +108,14 @@ def resolve_hw(hw) -> HW:
 BoundClass = Literal["IFM", "OFM", "W", "C"]
 
 
+def padding_efficiency(valid_tokens: float, batch_tokens: float) -> float:
+    """Valid tokens / batch tokens: THE padding-efficiency definition, shared
+    by ``EngineStats``, the serving bench, and this model's wasted-FLOP term
+    so the three never drift apart. 1.0 when the batch carried no padding
+    (or nothing ran)."""
+    return valid_tokens / batch_tokens if batch_tokens else 1.0
+
+
 @dataclasses.dataclass(frozen=True)
 class GemmLayer:
     """One weight application: y[M, d_out] = x[M, d_in] @ W."""
@@ -137,6 +145,21 @@ class GemmLayer:
     # traffic the fused path has left, raising the roofline of IFM-bound
     # rows (unzipFPGA / Petrica et al.).
     alpha_dtype: str = ""
+    # Valid rows out of M (0 = all M rows are real work). A padded serving
+    # step carries dead rows — a decode slot inside a (B, W) window drags
+    # W-1 padding columns through every GEMM — and the wasted-token term
+    # prices that as the II this layer would shed at M = valid rows
+    # (``LayerTiming.t_wasted``): token-proportional stages shrink with the
+    # rows, weight-side stages do not, and the pipeline max arbitrates.
+    m_valid: int = 0
+
+    @property
+    def valid_rows(self) -> int:
+        return min(self.m_valid, self.M) if self.m_valid else self.M
+
+    @property
+    def wasted_row_frac(self) -> float:
+        return 1.0 - padding_efficiency(self.valid_rows, self.M)
 
     @property
     def alpha_itemsize(self) -> float:
@@ -181,6 +204,11 @@ class LayerTiming:
     t_wgen: float
     t_eng: float
     pipelined_gen: bool = True   # False: gen timeshares the engine unit (TPU)
+    # II seconds attributable to padding rows: this layer's ii minus the ii
+    # of the identical layer at M = valid rows (GemmLayer.m_valid). 0 when
+    # the batch is fully valid OR when a weight-side stage (per-weight, not
+    # per-token) stays the bound either way — padding then costs nothing.
+    t_wasted: float = 0.0
 
     @property
     def t_mem(self) -> float:
@@ -235,15 +263,23 @@ def layer_timing(layer: GemmLayer, hw: HW = V5E) -> LayerTiming:
         else:  # materialize: dense W round-trips HBM (generate, write, reread)
             t_gen = 2.0 * gen_macs_per_w * di * do / gen_peak
             t_w += 2.0 * di * do * by / hw.hbm_bw
-    return LayerTiming(t_in, t_w, t_out, t_gen, t_eng, pipelined)
+    t = LayerTiming(t_in, t_w, t_out, t_gen, t_eng, pipelined)
+    if layer.m_valid and layer.valid_rows < M:
+        ideal = layer_timing(
+            dataclasses.replace(layer, M=layer.valid_rows, m_valid=0), hw)
+        t.t_wasted = max(t.ii - ideal.ii, 0.0)
+    return t
 
 
-def model_layers(cfg, shape, *, n_devices: int = 256, tp: int = 16
-                 ) -> list[GemmLayer]:
+def model_layers(cfg, shape, *, n_devices: int = 256, tp: int = 16,
+                 m_valid: int = 0) -> list[GemmLayer]:
     """Expand a ModelConfig x ShapeConfig into per-device GEMM workloads.
 
     Decode: M = batch/dp tokens; train/prefill: M = batch*seq/dp. TP divides
     d_out (column-parallel) or d_in (row-parallel) per Megatron convention.
+    ``m_valid`` marks how many of the M token rows are real work (0 = all):
+    a padded serving step models as M = batch tokens with m_valid = valid
+    tokens, pricing the dead rows (``LayerTiming.t_wasted``).
     """
     dp = max(n_devices // tp, 1)
     if shape.kind == "decode":
@@ -252,6 +288,10 @@ def model_layers(cfg, shape, *, n_devices: int = 256, tp: int = 16
         M = max(shape.global_batch * shape.seq_len // dp, 1)
     o = cfg.ovsf
     ex = o.exec_path if o.enable else "materialize"
+    # m_valid is a GLOBAL token count like global_batch: shard it over dp
+    # the same way M was, so the per-device wasted fraction matches the
+    # global one instead of clamping to "no waste" whenever dp > 1.
+    mv = min(max(m_valid // dp, 1), M) if m_valid else 0
 
     def mk(name, d_in, d_out, group):
         rho = o.rho_for(name) if (o.enable and group in o.targets
@@ -260,7 +300,8 @@ def model_layers(cfg, shape, *, n_devices: int = 256, tp: int = 16
         is_ovsf = o.enable and rho < 1.0
         return GemmLayer(name, M, d_in, d_out, rho=rho,
                          ovsf=is_ovsf, exec_path=ex, seg=seg,
-                         alpha_dtype=o.alpha_dtype if is_ovsf else "")
+                         alpha_dtype=o.alpha_dtype if is_ovsf else "",
+                         m_valid=mv)
 
     d, hd = cfg.d_model, cfg.hd
     layers: list[GemmLayer] = []
@@ -304,6 +345,14 @@ class ModelTiming:
     timings: list
     total_s: float
     bounds: dict
+    wasted_s: float = 0.0        # II seconds attributable to padding rows
+                                 # (total_s minus the same step at valid M)
+
+    @property
+    def step_efficiency(self) -> float:
+        """1 - wasted/total in (0, 1]: how much of the modeled step was real
+        work (each layer's waste is bounded by its own II)."""
+        return 1.0 - (self.wasted_s / self.total_s if self.total_s else 0.0)
 
     def bound_of(self, name: str) -> BoundClass:
         for l, t in zip(self.layers, self.timings):
@@ -317,7 +366,23 @@ def model_timing(layers: list[GemmLayer], hw: HW = V5E) -> ModelTiming:
     bounds: dict = {}
     for l, t in zip(layers, ts):
         bounds[l.name] = t.bound
-    return ModelTiming(layers, ts, sum(t.ii for t in ts), bounds)
+    return ModelTiming(layers, ts, sum(t.ii for t in ts), bounds,
+                       wasted_s=sum(t.t_wasted for t in ts))
+
+
+def serve_step_timing(cfg, *, valid_tokens: int, batch_tokens: int,
+                      hw: HW = V5E, n_devices: int = 1, tp: int = 1
+                      ) -> ModelTiming:
+    """Model one serving step that batches ``batch_tokens`` rows of which
+    ``valid_tokens`` are real work — the padded (B, W) window step vs its
+    token-packed replacement, priced on the same analytical model the
+    mapper/calibration loop uses. ``ShapeConfig`` is decode-kind with the
+    batch-token count as the per-step row dimension."""
+    from repro.configs.base import ShapeConfig
+    shape = ShapeConfig("serve_step", 1, batch_tokens, "decode")
+    layers = model_layers(cfg, shape, n_devices=n_devices, tp=tp,
+                          m_valid=valid_tokens)
+    return model_timing(layers, hw)
 
 
 def throughput(layers: list[GemmLayer], hw: HW = V5E,

@@ -8,9 +8,12 @@ preset: v5e/v5p/v6e/cpu); ``--no-bucketing`` reverts to per-prompt-length
 prefill (the pre-bucketing behaviour) for A/B comparison. ``--chunk-size N``
 switches to step-based serving: queued prompts feed through the decode-shaped
 path in N-token chunks, interleaved with decode in one fused call per step.
-``--calibrate`` records measured step times against the mapper's analytical
-model and reports which layers a calibrated re-plan would re-map (optionally
-saving the table with ``--calibration-out``).
+``--packed`` (with ``--chunk-size``) replaces the padded (B, W) window step
+with the token-packed step: only valid tokens reach the model, and the
+padding-efficiency counters are reported. ``--calibrate`` records measured
+step times against the mapper's analytical model and reports which layers a
+calibrated re-plan would re-map (optionally saving the table with
+``--calibration-out``).
 """
 from __future__ import annotations
 
@@ -51,6 +54,10 @@ def main(argv=None) -> None:
     ap.add_argument("--chunk-size", type=int, default=None,
                     help="step-based serving: interleave N-token prompt "
                          "chunks with decode (None = phase-based prefill)")
+    ap.add_argument("--packed", action="store_true",
+                    help="token-packed step: flatten the step's valid "
+                         "tokens into one dense stream instead of the "
+                         "padded (B, W) window (requires --chunk-size)")
     ap.add_argument("--calibrate", action="store_true",
                     help="record measured-vs-modeled step times and report "
                          "the calibrated re-plan")
@@ -72,11 +79,13 @@ def main(argv=None) -> None:
           + (f", alphas={args.alpha_dtype}" if args.alpha_dtype else "")
           + ")")
 
+    if args.packed and args.chunk_size is None:
+        raise SystemExit("--packed requires --chunk-size")
     eng = LLMEngine(params, cfg, batch_slots=args.slots,
                     buffer_len=args.buffer, hw=args.hw,
                     bucketed_prefill=not args.no_bucketing,
                     admission=args.admission, chunk_size=args.chunk_size,
-                    calibrate=args.calibrate)
+                    packed=args.packed, calibrate=args.calibrate)
     rng = np.random.default_rng(args.seed)
     for rid in range(args.requests):
         plen = int(rng.integers(4, args.buffer // 4))
@@ -95,6 +104,10 @@ def main(argv=None) -> None:
           f"{stats.prefill_batches}, compiles={stats.prefill_compiles}) "
           f"decode={stats.decode_s:.2f}s mixed={stats.mixed_s:.2f}s "
           f"step_compiles={stats.step_compiles}")
+    print(f"[serve] padding: valid={stats.packed_tokens} "
+          f"batch={stats.padded_tokens} "
+          f"efficiency={stats.padding_efficiency:.2f}"
+          + (" (packed)" if args.packed else ""))
     print(f"[serve] weight_cache: hits={stats.weight_cache_hits} "
           f"misses={stats.weight_cache_misses} "
           f"entries={stats.weight_cache_entries} "

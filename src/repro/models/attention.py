@@ -110,6 +110,69 @@ def attn_apply(p: dict, cfg: ModelConfig, x: jnp.ndarray, *,
     return y, new_cache
 
 
+def attn_apply_packed(p: dict, cfg: ModelConfig, x: jnp.ndarray, *,
+                      positions: jnp.ndarray, slot_ids: jnp.ndarray,
+                      cache: dict) -> tuple[jnp.ndarray, dict]:
+    """Packed-query attention over a stacked per-slot KV cache.
+
+    ``x`` is (1, T, d): T tokens from *different* sequences flattened into one
+    dense stream (the serving engine's token-packed step). ``slot_ids`` /
+    ``positions`` are (T,): each token's cache row and its position inside
+    that row. ``cache["k"]/["v"]`` are (B, Tbuf, Hkv, hd) stacked slot
+    buffers. Padding tokens carry ``slot_id == B``: their scatter rows are
+    out of bounds and dropped (``mode="drop"``), and their gather index is
+    clipped back into range — they read slot ``B - 1``'s buffer (compute
+    wasted, result discarded by the caller).
+
+    Scatter-then-attend makes intra-step causality fall out of the position
+    mask: every new K/V lands at its true (slot, pos) first, then token t
+    attends its own slot's buffer at positions ``<= positions[t]`` — earlier
+    same-step tokens of the same slot are visible (p' < p), later ones and
+    stale rows from a previous occupant (p' > p) are masked. Duplicate
+    (slot, pos) pairs never occur among valid tokens: the scheduler packs
+    each slot's tokens at consecutive, unique positions.
+    """
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    T = x.shape[1]
+    B, Tbuf = cache["k"].shape[0], cache["k"].shape[1]
+    q = _split_heads(L.linear_apply(p["q"], x, cfg, "attn_q"), H, hd)
+    k = _split_heads(L.linear_apply(p["k"], x, cfg, "attn_k"), Hkv, hd)
+    v = _split_heads(L.linear_apply(p["v"], x, cfg, "attn_v"), Hkv, hd)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+
+    kd = cache["k"].dtype
+    ck = cache["k"].at[slot_ids, positions].set(_quant_like(k[0], kd),
+                                                mode="drop")
+    cv = cache["v"].at[slot_ids, positions].set(_quant_like(v[0], kd),
+                                                mode="drop")
+    sid = jnp.clip(slot_ids, 0, B - 1)
+    kt = jnp.take(ck, sid, axis=0)          # (T, Tbuf, Hkv, hd)
+    vt = jnp.take(cv, sid, axis=0)
+    t = jnp.arange(Tbuf)
+    mask = t[None, None, :] <= positions[:, None, None]     # (T, 1, Tbuf)
+    out = sdpa(q[0][:, None], _dequant(kt, q.dtype),
+               _dequant(vt, q.dtype), mask)                 # (T, 1, H, hd)
+    y = L.linear_apply(p["o"], out.reshape(1, T, H * hd), cfg, "attn_o")
+    return y, {"k": ck, "v": cv}
+
+
+def cross_attn_packed(p: dict, cfg: ModelConfig, x: jnp.ndarray, *,
+                      slot_ids: jnp.ndarray, cache: dict) -> jnp.ndarray:
+    """Packed-query cross attention: each token attends its slot's
+    precomputed encoder K/V ((B, Te, Hkv, hd) stacked buffers), no mask."""
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    T = x.shape[1]
+    B = cache["k"].shape[0]
+    q = _split_heads(L.linear_apply(p["q"], x, cfg, "attn_q"), H, hd)
+    sid = jnp.clip(slot_ids, 0, B - 1)
+    kt = jnp.take(cache["k"], sid, axis=0)
+    vt = jnp.take(cache["v"], sid, axis=0)
+    out = sdpa(q[0][:, None], _dequant(kt, q.dtype),
+               _dequant(vt, q.dtype), None)
+    return L.linear_apply(p["o"], out.reshape(1, T, H * hd), cfg, "attn_o")
+
+
 def make_cross_cache(p: dict, cfg: ModelConfig, src: jnp.ndarray) -> dict:
     """Precompute encoder K/V for cross attention (prefill of enc-dec)."""
     Hkv, hd = cfg.n_kv_heads, cfg.hd

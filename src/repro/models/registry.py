@@ -42,6 +42,12 @@ def serve_step_window(params, cfg, cache, tokens, n_valid):
     return T.serve_step_window(params, cfg, cache, tokens, n_valid)
 
 
+def serve_step_packed(params, cfg, cache, tokens, slot_ids, positions,
+                      new_pos, emit_idx):
+    return T.serve_step_packed(params, cfg, cache, tokens, slot_ids,
+                               positions, new_pos, emit_idx)
+
+
 def cache_spec(cfg, B, T_len):
     return T.cache_spec(cfg, B, T_len)
 

@@ -485,3 +485,89 @@ def serve_step_window(params: dict, cfg: ModelConfig, cache: dict,
         logits, jnp.broadcast_to(idx, (logits.shape[0],))[:, None, None],
         axis=1)[:, 0]
     return last, new_cache
+
+
+_PACKED_FAMILIES = ("dense", "vlm", "moe", "encdec")
+
+
+def _packed_block(p: dict, cfg: ModelConfig, kind: str, x: jnp.ndarray, *,
+                  slot_ids: jnp.ndarray, positions: jnp.ndarray, cache: dict
+                  ) -> tuple[jnp.ndarray, dict, jnp.ndarray]:
+    """One block over a packed token stream (x: (1, T, d)); mirrors
+    ``block_apply`` for the KV-cache kinds with the packed attention path."""
+    aux = jnp.float32(0.0)
+    new_cache = dict(cache)
+    h = L.rmsnorm_apply(p["norm1"], x, cfg.norm_eps)
+    y, upd = A.attn_apply_packed(p["attn"], cfg, h, positions=positions,
+                                 slot_ids=slot_ids,
+                                 cache={"k": cache["k"], "v": cache["v"]})
+    x = x + y
+    new_cache.update(upd)
+    if "cross" in p:
+        h = L.rmsnorm_apply(p["norm_x"], x, cfg.norm_eps)
+        y = A.cross_attn_packed(p["cross"], cfg, h, slot_ids=slot_ids,
+                                cache={"k": cache["xk"], "v": cache["xv"]})
+        x = x + y
+    h = L.rmsnorm_apply(p["norm2"], x, cfg.norm_eps)
+    if kind == "moe":
+        y, aux = M.moe_apply(p["moe"], cfg, h)
+    else:
+        y = _mlp_apply(p["mlp"], cfg, h)
+    return x + y, new_cache, aux
+
+
+def serve_step_packed(params: dict, cfg: ModelConfig, cache: dict,
+                      tokens: jnp.ndarray, slot_ids: jnp.ndarray,
+                      positions: jnp.ndarray, new_pos: jnp.ndarray,
+                      emit_idx: jnp.ndarray) -> tuple[jnp.ndarray, dict]:
+    """Token-packed ragged step: ONE dense pass over every valid token of a
+    serving iteration, with zero padded-row model FLOPs.
+
+    Where ``serve_step_window`` pads each slot's work to a (B, W) batch (a
+    decode slot drags W-1 dead columns through every layer whenever a chunk
+    is in flight), this entry point takes the scheduler's flattened layout:
+
+    tokens / slot_ids / positions : (T,)
+        all valid tokens of the step — decode slots contribute 1 token at
+        their fill position, chunk tasks up to chunk_size prompt tokens at
+        positions [start, start+length). T is the pow-2 *bucket*, so the
+        tail is padding: those tokens carry ``slot_id == B`` (scatter
+        dropped, output discarded).
+    new_pos : (B,)
+        each slot's post-step fill level (host-computed; fresh slots re-base
+        to their consumed length, idle slots keep their old value).
+    emit_idx : (B,)
+        packed index of slot b's LAST valid token (0 for slots that emit
+        nothing this step — their logits row is computed but meaningless).
+
+    Returns ((B, vocab) next-token logits gathered at ``emit_idx`` BEFORE
+    the unembed — only B rows pay the vocab matmul, vs B*W on the window
+    path — and the cache with per-slot ``pos`` set to ``new_pos``).
+
+    Exactness: K/V are scattered at their true (slot, position) first, then
+    each token attends its own slot's buffer under the position-bounded mask
+    (``p <= positions[t]``) — see ``attention.attn_apply_packed``. Per-slot
+    writes never clamp (scatter, not dynamic_update_slice), so no window
+    over-allocation is needed. Not state-safe for SSM/hybrid families.
+    """
+    if cfg.family not in _PACKED_FAMILIES:
+        raise NotImplementedError(
+            f"packed step requires a KV-cache family, got {cfg.family!r}")
+    kind = _layer_kind(cfg)
+    x = L.embed_apply(params["embed"], tokens[None])     # (1, T, d)
+    layer_cache = {k: v for k, v in cache.items() if k != "pos"}
+
+    def body(carry, scanned):
+        xx, aux = carry
+        pp, cc = scanned
+        xx, new_c, a = _packed_block(pp, cfg, kind, xx, slot_ids=slot_ids,
+                                     positions=positions, cache=cc)
+        return (xx, aux + a), new_c
+
+    (x, _aux), new_layer_cache = jax.lax.scan(
+        body, (x, jnp.float32(0.0)), (params["blocks"], layer_cache))
+    feats = jnp.take(x[0], emit_idx, axis=0)             # (B, d)
+    logits = _unembed(params, cfg, feats[None])[0]       # (B, vocab)
+    new_cache = dict(new_layer_cache)
+    new_cache["pos"] = new_pos
+    return logits, new_cache

@@ -5,10 +5,11 @@ from repro.serving.api import (FINISH_EOS, FINISH_LENGTH, FINISH_REJECTED,
                                register_hw, resolve_hw)
 from repro.serving.core import EngineCore, StepOutput
 from repro.serving.engine import EngineStats, LLMEngine, ServingEngine
-from repro.serving.scheduler import (ChunkTask, FCFSScheduler,
+from repro.serving.scheduler import (ChunkTask, FCFSScheduler, PackedStep,
                                      PrefillAssignment, PrefillGroup,
                                      SchedulerOutput, bucket_for,
-                                     bucket_lengths)
+                                     bucket_lengths, pack_bucket, pack_step,
+                                     unpack_step)
 
 __all__ = [
     "SamplingParams", "Request", "RequestOutput",
@@ -16,5 +17,6 @@ __all__ = [
     "HWTarget", "hw_by_name", "hw_names", "register_hw", "resolve_hw",
     "FCFSScheduler", "PrefillGroup", "PrefillAssignment", "ChunkTask",
     "SchedulerOutput", "StepOutput", "bucket_lengths", "bucket_for",
+    "PackedStep", "pack_bucket", "pack_step", "unpack_step",
     "EngineCore", "LLMEngine", "ServingEngine", "EngineStats",
 ]

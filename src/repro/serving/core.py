@@ -15,6 +15,15 @@ The core owns everything that touches the device, behind one contract:
   ``serve_step_window`` entry point. Steady state compiles exactly two step
   shapes — ``W = chunk_size`` (any chunk scheduled) and ``W = 1`` (pure
   decode) — regardless of the prompt-length mix.
+* **Token-packed step (``packed=True``)** — the scheduler's valid tokens are
+  flattened into ONE dense ``(T,)`` stream (``scheduler.pack_step``; T = a
+  pow-2 bucket) with per-token slot/position vectors, executed by
+  ``serve_step_packed`` against a natural-layout cache (B rows per leaf,
+  per-slot ``pos`` vector; writes are exact scatters, so no window slack is
+  allocated). A decode slot costs 1 token instead of a W-wide padded row —
+  the ``(B, W)`` window's dead decode columns never reach the model.
+  ``StepOutput.n_valid_tokens``/``n_batch_tokens`` record the padding
+  efficiency of every path for the benches and calibration.
 * **Bucketed batched prefill (legacy mode)** — prompts right-padded to the
   scheduler's bucket length prefill as ONE jit'd ``serve_prefill_ragged``
   call over all ``B`` slot rows. The call retraces once per bucket length,
@@ -79,6 +88,22 @@ def _sample_token(logits: jnp.ndarray, temp: jnp.ndarray, top_k: jnp.ndarray,
 _SAMPLE = jax.jit(jax.vmap(_sample_token))
 
 
+def _fused_sample(logits, temps, topks, greedy, keys):
+    """Trace-time tail shared by every fused step fn: all-greedy batches
+    (the default) skip the per-slot full-vocab sort + categorical entirely
+    at runtime; greedy slots never consume their keys, so leaving them
+    unadvanced preserves the per-request determinism contract (one sampling
+    slot forces the mixed branch)."""
+
+    def _all_greedy(_):
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), keys
+
+    def _mixed(_):
+        return jax.vmap(_sample_token)(logits, temps, topks, greedy, keys)
+
+    return jax.lax.cond(jnp.all(greedy), _all_greedy, _mixed, None)
+
+
 @functools.lru_cache(maxsize=16)
 def _decode_step_fn(cfg: ModelConfig):
     """Compiled fused decode+sample step, shared across engine instances
@@ -93,21 +118,28 @@ def _decode_step_fn(cfg: ModelConfig):
             return logits[0], new_cache
 
         logits, new_caches = jax.vmap(one_slot)(caches, tokens)
-
-        # All-greedy batches (the default) skip the per-slot full-vocab
-        # sort + categorical entirely at runtime; greedy slots never consume
-        # their keys, so leaving them unadvanced preserves the per-request
-        # determinism contract (a sampling slot forces the mixed branch).
-        def _all_greedy(_):
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32), keys
-
-        def _mixed(_):
-            return jax.vmap(_sample_token)(logits, temps, topks, greedy, keys)
-
-        toks, nkeys = jax.lax.cond(jnp.all(greedy), _all_greedy, _mixed, None)
+        toks, nkeys = _fused_sample(logits, temps, topks, greedy, keys)
         return toks, new_caches, nkeys
 
     return jax.jit(_batched_step)
+
+
+@functools.lru_cache(maxsize=64)
+def _packed_step_fn(cfg: ModelConfig, Tb: int):
+    """Compiled fused packed step + sampling, shared across engine instances
+    with the same (config, token-bucket) pair. One trace per pow-2 bucket."""
+
+    def _packed(p, caches, tokens, slot_ids, positions, new_pos, emit_idx,
+                temps, topks, greedy, keys):
+        """((Tb,) packed tokens/slot_ids/positions, (B,) new fill levels,
+        (B,) emit indices, (B,) sampling state) ->
+        ((B,) sampled tokens, caches, (B, 2) keys)."""
+        logits, new_caches = R.serve_step_packed(
+            p, cfg, caches, tokens, slot_ids, positions, new_pos, emit_idx)
+        toks, nkeys = _fused_sample(logits, temps, topks, greedy, keys)
+        return toks, new_caches, nkeys
+
+    return jax.jit(_packed)
 
 
 @functools.lru_cache(maxsize=32)
@@ -129,14 +161,7 @@ def _window_step_fn(cfg: ModelConfig, W: int):
             return logits[0], new_cache
 
         logits, new_caches = jax.vmap(one_slot)(caches, tokens, n_tok)
-
-        def _all_greedy(_):
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32), keys
-
-        def _mixed(_):
-            return jax.vmap(_sample_token)(logits, temps, topks, greedy, keys)
-
-        toks, nkeys = jax.lax.cond(jnp.all(greedy), _all_greedy, _mixed, None)
+        toks, nkeys = _fused_sample(logits, temps, topks, greedy, keys)
         return toks, new_caches, nkeys
 
     return jax.jit(_batched_window)
@@ -157,9 +182,13 @@ class StepOutput:
     decode_tokens: dict = dataclasses.field(default_factory=dict)
     prefill_s: float = 0.0      # legacy bucketed/exact prefill wall time
     decode_s: float = 0.0       # pure fused decode wall time
-    mixed_s: float = 0.0        # fused window (chunks + decode) wall time
+    mixed_s: float = 0.0        # fused window/packed (chunks + decode) wall
     n_prompt_tokens: int = 0    # prompt tokens consumed (chunks + prefills)
     n_decode_tokens: int = 0    # decode slots advanced
+    # padding-efficiency raw material (one definition for benches AND
+    # calibration: hwmodel.perf_model.padding_efficiency(valid, batch))
+    n_valid_tokens: int = 0     # tokens that were real work this step
+    n_batch_tokens: int = 0     # tokens the device batch actually carried
 
     @property
     def wall_s(self) -> float:
@@ -184,23 +213,37 @@ class EngineCore:
     """Device-side half of the engine: caches, prefill, decode, sampling."""
 
     def __init__(self, params, cfg: ModelConfig, *, batch_slots: int = 4,
-                 buffer_len: int = 256, window: int = 0):
+                 buffer_len: int = 256, window: int = 0,
+                 packed: bool = False):
         self.params = params
         self.cfg = cfg
         self.B = batch_slots
         self.T = buffer_len
         self.window = window
+        self.packed = packed
         # Logical capacity is buffer_len (admission math unchanged); the
         # allocation carries `window` slack columns so a W-wide ragged write
-        # at pos <= buffer_len - 1 never clamps (see module docstring).
-        self.T_alloc = buffer_len + window
+        # at pos <= buffer_len - 1 never clamps (see module docstring). The
+        # packed path scatters at exact (slot, pos) coordinates — no clamping
+        # is possible, so it needs (and gets) no slack.
+        self.T_alloc = buffer_len if packed else buffer_len + window
         self.prefill_compiles = 0
         self.step_shapes: set = set()   # distinct fused step shapes traced
-        # ONE stacked cache: every per-slot leaf gains a leading B axis.
-        one = R.init_cache(cfg, 1, self.T_alloc)
-        self.caches = jax.tree_util.tree_map(
-            lambda a: jnp.broadcast_to(a[None], (batch_slots,) + a.shape), one)
-        self._axes = _leaf_batch_axes(cfg, self.T_alloc)
+        if packed:
+            # Natural (family) cache layout with B rows per leaf and a
+            # per-slot pos vector: the packed model call scans layers over
+            # it directly — no per-slot vmap, no leading-slot transpose.
+            self.caches = R.init_cache(cfg, batch_slots, self.T_alloc)
+            self.caches["pos"] = jnp.zeros((batch_slots,), jnp.int32)
+            # host mirror of the per-slot fill levels (decode positions)
+            self._host_pos = np.zeros(batch_slots, np.int64)
+        else:
+            # ONE stacked cache: every per-slot leaf gains a leading B axis.
+            one = R.init_cache(cfg, 1, self.T_alloc)
+            self.caches = jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a[None],
+                                           (batch_slots,) + a.shape), one)
+            self._axes = _leaf_batch_axes(cfg, self.T_alloc)
         self._step_fn = _decode_step_fn(cfg)
         # Per-slot sampling state (host-side, scattered at admission).
         self.temps = np.zeros(batch_slots, np.float32)
@@ -336,17 +379,40 @@ class EngineCore:
         previously generated token at its slot index.
         """
         out = StepOutput()
+        if self.packed:
+            if so.prefill_groups:
+                raise ValueError("packed mode serves prompts via chunks "
+                                 "only; a legacy scheduler emitted "
+                                 "prefill_groups")
+            if so.chunks or so.decode_slots:
+                t0 = time.perf_counter()
+                self._packed_step(so, last_tokens, out)
+                dt = time.perf_counter() - t0
+                # A chunk-free packed step IS decode-shaped: book it as
+                # decode_s so the measured-vs-modeled calibration loop
+                # (which consumes pure-decode samples) keeps working.
+                if so.chunks:
+                    out.mixed_s += dt
+                else:
+                    out.decode_s += dt
+                out.n_prompt_tokens += sum(c.length for c in so.chunks)
+            out.n_decode_tokens = len(out.decode_tokens)
+            return out
         for pg in so.prefill_groups:
             t0 = time.perf_counter()
             if pg.exact:
                 for i, req in pg.slot_reqs:
                     out.first_tokens[i] = self.prefill_one(i, req)
+                out.n_batch_tokens += sum(r.prompt_len
+                                          for _i, r in pg.slot_reqs)
             else:
                 toks = self.prefill_group(list(pg.slot_reqs), pg.bucket)
                 for i, req in pg.slot_reqs:
                     out.first_tokens[i] = int(toks[i])
+                out.n_batch_tokens += self.B * min(pg.bucket, self.T)
             out.prefill_s += time.perf_counter() - t0
             out.n_prompt_tokens += sum(r.prompt_len for _i, r in pg.slot_reqs)
+            out.n_valid_tokens += sum(r.prompt_len for _i, r in pg.slot_reqs)
         if so.chunks:
             t0 = time.perf_counter()
             self._window_step(so, last_tokens, out)
@@ -361,6 +427,8 @@ class EngineCore:
             out.decode_s += time.perf_counter() - t0
             for i in so.decode_slots:
                 out.decode_tokens[i] = int(nxt[i])
+            out.n_valid_tokens += len(so.decode_slots)
+            out.n_batch_tokens += self.B
         out.n_decode_tokens = len(out.decode_tokens)
         return out
 
@@ -403,3 +471,40 @@ class EngineCore:
             if c.last:
                 out.first_tokens[c.slot] = int(toks[c.slot])
                 self.keys[c.slot] = nkeys[c.slot]
+        out.n_valid_tokens += int(n_tok.sum())
+        out.n_batch_tokens += self.B * W
+
+    def _packed_step(self, so: SchedulerOutput,
+                     last_tokens: Optional[np.ndarray],
+                     out: StepOutput) -> None:
+        """ONE fused packed call: every valid token of the step — decode
+        slots and prompt chunks alike — rides in a single dense (T,) stream
+        (T = pow-2 bucket), so no slot drags padded columns through the
+        model. See ``models.transformer.serve_step_packed``."""
+        from repro.serving.scheduler import pack_step
+        for c in so.chunks:
+            if c.start == 0:            # new request: seed sampling state
+                self._set_sampling(c.slot, c.req.sampling)
+        ps = pack_step(so, last_tokens, self._host_pos, self.B,
+                       self.window or 1)
+        self.step_shapes.add(("packed", ps.n_batch))
+        fn = _packed_step_fn(self.cfg, ps.n_batch)
+        toks, self.caches, nkeys = fn(
+            self.params, self.caches, jnp.asarray(ps.tokens),
+            jnp.asarray(ps.slot_ids), jnp.asarray(ps.positions),
+            jnp.asarray(ps.new_pos, dtype=jnp.int32),
+            jnp.asarray(ps.emit_idx, dtype=jnp.int32),
+            jnp.asarray(self.temps), jnp.asarray(self.topks),
+            jnp.asarray(self.greedy), jnp.asarray(self.keys))
+        toks, nkeys = np.asarray(toks), np.asarray(nkeys)
+        self._host_pos[:] = ps.new_pos
+        # Same key-commit discipline as the window path: emitting slots only.
+        for i in so.decode_slots:
+            out.decode_tokens[i] = int(toks[i])
+            self.keys[i] = nkeys[i]
+        for c in so.chunks:
+            if c.last:
+                out.first_tokens[c.slot] = int(toks[c.slot])
+                self.keys[c.slot] = nkeys[c.slot]
+        out.n_valid_tokens += ps.n_valid
+        out.n_batch_tokens += ps.n_batch

@@ -13,7 +13,9 @@ contract (vLLM-style):
   ``core.step(SchedulerOutput) -> StepOutput`` — in chunked mode ONE fused
   jit'd call advances decode slots and consumes prompt chunks in the same
   batch, so a long queued prompt no longer stalls inter-token latency for
-  every active slot;
+  every active slot. With ``packed=True`` that call is the token-packed
+  step (only valid tokens reach the model, one dense pow-2-bucketed
+  stream) instead of the padded ``(B, W)`` window;
 * this module tracks slots, prefill progress, finish reasons (``length`` /
   ``eos`` / ``rejected``), streaming callbacks, per-phase wall time, and the
   decompress-weight-cache counters.
@@ -57,8 +59,13 @@ class EngineStats:
     prefill_compiles: int = 0     # actual prefill traces (<= n_buckets when
                                   # bucketing; per distinct length otherwise)
     step_compiles: int = 0        # distinct fused step shapes traced
-                                  # (chunked steady state: <= 2)
+                                  # (chunked steady state: <= 2; packed <= 3)
     chunk_tokens: int = 0         # prompt tokens consumed via chunks
+    # Padding efficiency: valid tokens executed vs tokens the device batches
+    # actually carried. ONE definition shared by the serving bench and the
+    # calibration loop (hwmodel.perf_model.padding_efficiency).
+    packed_tokens: int = 0        # valid (useful) tokens across all steps
+    padded_tokens: int = 0        # batch tokens across all steps (incl. pad)
     completed: int = 0
     rejected: int = 0
     prefill_s: float = 0.0        # per-phase wall time (legacy prefill)
@@ -71,6 +78,11 @@ class EngineStats:
     weight_cache_entries: int = 0
     weight_cache_bytes: int = 0   # resident dense-W footprint (process-wide)
 
+    @property
+    def padding_efficiency(self) -> float:
+        from repro.hwmodel.perf_model import padding_efficiency
+        return padding_efficiency(self.packed_tokens, self.padded_tokens)
+
 
 class LLMEngine:
     """Continuous-batching serving engine over a fixed set of decode slots."""
@@ -81,7 +93,7 @@ class LLMEngine:
                  bucketed_prefill: bool = True, admission: str = "reject",
                  scheduler=None, chunk_size: Optional[int] = None,
                  max_step_tokens: Optional[int] = None,
-                 calibrate: bool = False):
+                 packed: bool = False, calibrate: bool = False):
         self._base_cfg = cfg
         self.hw = hw
         self.hw_label = resolve_hw(hw).name
@@ -90,21 +102,37 @@ class LLMEngine:
         self.B = batch_slots
         self.T = buffer_len
         self.eos = eos_id
+        if packed and chunk_size is None:
+            raise ValueError("packed=True requires chunk_size (the packed "
+                             "step serves prompts via chunk tasks)")
         if chunk_size is not None and cfg.family not in _BUCKETED_FAMILIES:
             warnings.warn(
                 f"chunked prefill requires a KV-cache family (got "
                 f"{cfg.family!r}: recurrent state would run through window "
                 f"padding); falling back to phase-based serving", stacklevel=2)
             chunk_size = None
+            packed = False
         self.chunk = chunk_size
+        self.packed = packed
+        if packed and max_step_tokens is None:
+            # Default packed token budget == the mixed-step bucket, so the
+            # typical chunk-bearing step fills its pow-2 shape exactly
+            # (padding efficiency ~1.0 when prompt tokens are plentiful).
+            from repro.serving.scheduler import pack_bucket
+            max_step_tokens = pack_bucket(0, batch_slots, chunk_size, True)
         self.max_step_tokens = max_step_tokens
         self.core = EngineCore(params, self.cfg, batch_slots=batch_slots,
                                buffer_len=buffer_len,
-                               window=chunk_size or 0)
+                               window=chunk_size or 0, packed=packed)
         self.bucketed = bucketed_prefill and self.core.supports_bucketing
         self.scheduler = scheduler if scheduler is not None else FCFSScheduler(
             buffer_len, admission=admission, bucketing=self.bucketed,
             chunk_size=chunk_size)
+        if self.packed and not hasattr(self.scheduler, "schedule"):
+            raise ValueError(
+                "packed=True requires a step scheduler (schedule method): "
+                "legacy add/next_group schedulers emit whole prefill groups, "
+                "which the packed core cannot execute")
         self.slots: list[Optional[Request]] = [None] * batch_slots
         self.slot_remaining = np.zeros(batch_slots, np.int32)
         # prompt tokens consumed per slot (== prompt_len once decoding)
@@ -252,6 +280,8 @@ class LLMEngine:
         st.prefill_s += out.prefill_s
         st.decode_s += out.decode_s
         st.mixed_s += out.mixed_s
+        st.packed_tokens += out.n_valid_tokens
+        st.padded_tokens += out.n_batch_tokens
         if so.decode_slots or so.chunks:
             st.steps += 1
         st.prefill_batches += sum(

@@ -30,6 +30,9 @@ import dataclasses
 from collections import deque
 from typing import Optional
 
+import numpy as np
+
+from repro.core.ovsf import next_pow2
 from repro.serving.api import FINISH_REJECTED, Request
 
 
@@ -108,6 +111,129 @@ class SchedulerOutput:
     @property
     def empty(self) -> bool:
         return not (self.decode_slots or self.chunks or self.prefill_groups)
+
+
+# ---------------------------------------------------------------------------
+# Token-packed step layout (packed=True engines)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PackedStep:
+    """The flattened token layout of one packed engine step.
+
+    One dense ``(T,)`` stream holds every valid token of the iteration —
+    decode slots contribute 1 token, chunk tasks up to ``chunk_size`` — with
+    per-token ``slot_ids``/``positions`` and ``cu_seqlens``-style segment
+    boundaries (one segment per decode slot / chunk task, in pack order).
+    ``T = tokens.shape[0]`` is the pow-2 bucket; indices ``>= n_valid`` are
+    padding (``slot_id == B``, scatter-dropped by the model).
+    """
+    tokens: np.ndarray        # (T,) int32; padding tail is 0
+    slot_ids: np.ndarray      # (T,) int32; padding tokens carry B
+    positions: np.ndarray     # (T,) int32 cache position of each token
+    new_pos: np.ndarray       # (B,) post-step fill level per slot
+    emit_idx: np.ndarray      # (B,) packed index of slot b's last valid token
+    emit_slots: tuple         # slots whose sampled token is consumed
+    cu_seqlens: np.ndarray    # (n_segments + 1,) segment boundaries
+    seg_slots: tuple          # slot of each segment
+    seg_kinds: tuple          # "decode" | "chunk" per segment
+    n_valid: int              # valid tokens; the rest of T is padding
+
+    @property
+    def n_batch(self) -> int:
+        return int(self.tokens.shape[0])
+
+
+def pack_bucket(n_valid: int, B: int, chunk: int, has_chunks: bool) -> int:
+    """Pow-2 token bucket for a packed step, chosen so the steady state
+    compiles a bounded number of shapes regardless of the length mix:
+
+    * pure decode -> ``next_pow2(B)`` (one shape; n_valid <= B always);
+    * any chunk scheduled -> at least ``next_pow2(B + chunk)`` (the typical
+      mixed step fills it exactly when the engine's default packed token
+      budget is that same bucket), growing pow-2 only in the rare case the
+      scheduler's 1-token partial-prefill floors overflow the budget.
+
+    Worst case that is 3 distinct shapes per run — the CI-gated bound.
+    """
+    if not has_chunks:
+        return max(next_pow2(max(B, 1)), 1)
+    return max(next_pow2(max(n_valid, 1)), next_pow2(B + chunk))
+
+
+def pack_step(so: SchedulerOutput, last_tokens, slot_pos, B: int,
+              chunk: int) -> PackedStep:
+    """Flatten one ``SchedulerOutput`` into the packed token layout.
+
+    ``last_tokens`` carries each decode slot's previously generated token at
+    its slot index; ``slot_pos`` the per-slot cache fill levels (chunk slots
+    re-base implicitly: their positions derive from ``ChunkTask.start``, so a
+    fresh slot's stale fill level is never read). Segments are packed
+    decode-slots-first, then chunks in scheduler order.
+    """
+    toks: list = []
+    sids: list = []
+    poss: list = []
+    cu = [0]
+    seg_slots: list = []
+    seg_kinds: list = []
+    new_pos = np.asarray(slot_pos, dtype=np.int64).copy()
+    emit_idx = np.zeros(B, np.int64)
+    emit_slots: list = []
+    for i in so.decode_slots:
+        p = int(slot_pos[i])
+        toks.append(int(last_tokens[i]))
+        sids.append(i)
+        poss.append(p)
+        emit_idx[i] = len(toks) - 1
+        emit_slots.append(i)
+        new_pos[i] = p + 1
+        cu.append(len(toks))
+        seg_slots.append(i)
+        seg_kinds.append("decode")
+    for c in so.chunks:
+        toks.extend(int(t) for t in c.req.prompt[c.start:c.start + c.length])
+        sids.extend([c.slot] * c.length)
+        poss.extend(range(c.start, c.start + c.length))
+        new_pos[c.slot] = c.start + c.length
+        if c.last:
+            emit_idx[c.slot] = len(toks) - 1
+            emit_slots.append(c.slot)
+        cu.append(len(toks))
+        seg_slots.append(c.slot)
+        seg_kinds.append("chunk")
+    n = len(toks)
+    Tb = pack_bucket(n, B, chunk, bool(so.chunks))
+    tokens = np.zeros(Tb, np.int32)
+    tokens[:n] = toks
+    slot_ids = np.full(Tb, B, np.int32)     # padding rows scatter out of bounds
+    slot_ids[:n] = sids
+    positions = np.zeros(Tb, np.int32)
+    positions[:n] = poss
+    return PackedStep(tokens=tokens, slot_ids=slot_ids, positions=positions,
+                      new_pos=new_pos, emit_idx=emit_idx,
+                      emit_slots=tuple(emit_slots),
+                      cu_seqlens=np.asarray(cu, np.int64),
+                      seg_slots=tuple(seg_slots), seg_kinds=tuple(seg_kinds),
+                      n_valid=n)
+
+
+def unpack_step(ps: PackedStep) -> tuple[tuple, tuple]:
+    """Inverse of ``pack_step``'s layout: recover ``(decode_slots,
+    ((slot, start, length), ...))`` from the segment boundaries. Used by the
+    round-trip property tests — a lossy layout here would silently corrupt
+    cache positions."""
+    decode: list = []
+    chunks: list = []
+    for s in range(len(ps.cu_seqlens) - 1):
+        a, b = int(ps.cu_seqlens[s]), int(ps.cu_seqlens[s + 1])
+        slot = ps.seg_slots[s]
+        if ps.seg_kinds[s] == "decode":
+            assert b - a == 1
+            decode.append(slot)
+        else:
+            chunks.append((slot, int(ps.positions[a]), b - a))
+    return tuple(decode), tuple(chunks)
 
 
 class FCFSScheduler:

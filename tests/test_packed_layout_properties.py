@@ -1,0 +1,86 @@
+"""Hypothesis property tests for the packed-step token layout.
+
+Arbitrary slot/chunk mixes must round-trip ``slot_id``/``pos``/segment
+boundaries exactly through ``pack_step``/``unpack_step`` and never exceed
+the pow-2 token bucket — a lossy layout would silently corrupt cache
+positions in the serving engine's hottest path.
+"""
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (see requirements.txt)")
+import hypothesis.strategies as st  # noqa: E402
+
+import numpy as np  # noqa: E402
+
+from repro.serving import (ChunkTask, Request, SchedulerOutput,  # noqa: E402
+                           pack_bucket, pack_step, unpack_step)
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=60,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("ci")
+
+
+def _mk_so(decode_slots, chunk_specs, vocab=512):
+    """chunk_specs: [(slot, plen, start, length)] against fresh requests."""
+    chunks = []
+    for slot, plen, start, length in chunk_specs:
+        rng = np.random.default_rng(slot)
+        req = Request(slot, rng.integers(0, vocab, plen, dtype=np.int32),
+                      max_new_tokens=4)
+        chunks.append(ChunkTask(slot, req, start, length,
+                                start + length >= plen))
+    n = len(decode_slots) + sum(c.length for c in chunks)
+    return SchedulerOutput(decode_slots=tuple(decode_slots),
+                           chunks=tuple(chunks), n_scheduled_tokens=n)
+
+
+@st.composite
+def _step_mixes(draw):
+    B = draw(st.integers(1, 6))
+    chunk = draw(st.integers(1, 16))
+    slots = list(range(B))
+    n_dec = draw(st.integers(0, B))
+    decode = slots[:n_dec]
+    chunk_slots = (draw(st.lists(st.sampled_from(slots[n_dec:]),
+                                 unique=True, max_size=B - n_dec))
+                   if n_dec < B else [])
+    specs = []
+    for s in chunk_slots:
+        plen = draw(st.integers(1, 40))
+        length = draw(st.integers(1, min(chunk, plen)))
+        start = draw(st.integers(0, plen - length))
+        specs.append((s, plen, start, length))
+    pos = draw(st.lists(st.integers(0, 50), min_size=B, max_size=B))
+    return B, chunk, decode, specs, pos
+
+
+@hypothesis.given(mix=_step_mixes())
+def test_pack_unpack_property_round_trip(mix):
+    B, chunk, decode, specs, slot_pos = mix
+    hypothesis.assume(decode or specs)
+    so = _mk_so(decode, specs)
+    last = np.arange(B, dtype=np.int32)
+    ps = pack_step(so, last, np.asarray(slot_pos, np.int64), B, chunk)
+    # exact round trip of decode slots and chunk (slot, start, length)
+    dec, chunks = unpack_step(ps)
+    assert dec == tuple(decode)
+    assert chunks == tuple((s, st_, ln) for s, _p, st_, ln in specs)
+    # token budget: n_valid never exceeds the bucket, and the bucket is the
+    # minimum admissible pow-2 for this mix
+    assert ps.n_valid <= ps.n_batch
+    assert ps.n_batch == pack_bucket(ps.n_valid, B, chunk, bool(specs))
+    # every valid token's slot/pos is consistent with its segment
+    for s in range(len(ps.cu_seqlens) - 1):
+        a, b = int(ps.cu_seqlens[s]), int(ps.cu_seqlens[s + 1])
+        assert (ps.slot_ids[a:b] == ps.seg_slots[s]).all()
+        assert list(ps.positions[a:b]) == list(
+            range(int(ps.positions[a]), int(ps.positions[a]) + (b - a)))
+    # padding tail scatters out of bounds (slot id == B -> dropped)
+    assert (ps.slot_ids[ps.n_valid:] == B).all()
+    # per-slot fill levels: decodes advance by 1, chunks to start + length
+    for i in decode:
+        assert ps.new_pos[i] == slot_pos[i] + 1
+    for s, _p, st_, ln in specs:
+        assert ps.new_pos[s] == st_ + ln
