@@ -30,6 +30,13 @@ Three comparisons, all written to ``BENCH_serving.json``:
   step shapes (CI gate), and in full mode the bench RAISES unless packed
   achieves >= 1.15x throughput or >= 1.15x better ITL p95 (the serving
   analogue of the kernel bench's int8 II gate).
+* **fault tolerance (chaos)**: the staggered chunked workload re-run under
+  a deterministic ``FaultPlan`` — ~10% of steps stalled 2ms, one injected
+  step crash (watchdog rebuilds the core and recomputes live slots), one
+  NaN-poisoned logits row (fused health check quarantines at most that one
+  request). The bench records degraded vs fault-free throughput and in
+  full mode RAISES if the ratio drops below 0.8x — recovery must cost
+  recompute of in-flight work, not a collapse of the serving rate.
 
 ``--hw`` threads any registered HW target (v5e/v5p/v6e/cpu) into the
 mapper's execution planning (the model still *runs* on the host backend).
@@ -53,7 +60,7 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.models import registry as R
-from repro.serving import LLMEngine, Request
+from repro.serving import FaultPlan, LLMEngine, Request
 
 MAX_STEP_SHAPES = 2      # chunked steady state: (B, chunk) window + (B, 1)
 MAX_PACKED_STEP_SHAPES = 3   # packed: decode bucket + mixed bucket (+1 rare
@@ -61,6 +68,11 @@ MAX_PACKED_STEP_SHAPES = 3   # packed: decode bucket + mixed bucket (+1 rare
                              # token budget)
 PACKED_GATE = 1.15       # packed must beat the padded window by this factor
                          # on throughput OR ITL p95 (full mode; raises)
+FAULT_GATE = 0.8         # chaos throughput floor vs fault-free (full mode):
+                         # recovery = recompute, not collapse
+CHAOS_SPECS = ("delay:p=0.1,s=0.002",   # ~10% of steps stall 2ms
+               "fail:step=5",           # one step crash -> rebuild + replay
+               "nan:step=3,slot=0")     # one poisoned logits row
 
 
 @functools.lru_cache(maxsize=4)
@@ -318,6 +330,48 @@ def run(print_fn=print, smoke: bool = False,
             f"{packed_itl_gain:.2f}x ITL p95 vs the padded window (need "
             f">= {PACKED_GATE}x on one)")
 
+    # -- fault tolerance: chunked staggered workload under injected chaos --
+    # Same workload and mode as the chunked run above, plus a deterministic
+    # FaultPlan: ~10% of steps delayed, one step crash (engine watchdog
+    # rebuilds the core and recomputes live slots), one NaN row (fused
+    # health check quarantines at most one request). The fault-free
+    # baseline is re-timed WARM through the same harness — the earlier
+    # tps_c run pays compiles inside its timed region, which would make
+    # the degradation gate vacuous. Recovery must be recompute-cheap.
+    plan = FaultPlan.parse(CHAOS_SPECS, seed=0)
+
+    def time_chaos(faults):
+        eng = LLMEngine(params, cfg, batch_slots=B, buffer_len=buf, hw=hw,
+                        chunk_size=chunk_size, faults=faults)
+        for r in _staggered_requests(cfg, n_mixed, lo=lo, hi=hi):
+            eng.submit(r)
+        t0 = time.perf_counter()
+        stats = eng.run_until_drained()
+        return eng, stats, time.perf_counter() - t0
+
+    _, stats_w, dt_w = time_chaos(None)        # warm fault-free baseline
+    tps_w = stats_w.tokens_out / dt_w
+    eng_f, stats_f, dt_f = time_chaos(plan)
+    tps_f = stats_f.tokens_out / dt_f
+    chaos_ratio = tps_f / tps_w if tps_w > 0 else 0.0
+    print_fn(f"serving_bench,chaos,B={B},n={n_mixed},{tps_f:.1f}tok/s,"
+             f"recoveries={stats_f.recoveries},errors={stats_f.errors},"
+             f"completed={stats_f.completed}")
+    print_fn(f"serving_bench,chaos_vs_faultfree,{chaos_ratio:.2f}x")
+    if stats_f.recoveries < 1:
+        raise RuntimeError(
+            "chaos bench: the injected step crash produced no recovery — "
+            "the engine watchdog did not fire")
+    if len(eng_f.outputs()) != n_mixed:
+        raise RuntimeError(
+            f"chaos bench lost requests: {len(eng_f.outputs())}/{n_mixed} "
+            f"reached a terminal state")
+    if not smoke and chaos_ratio < FAULT_GATE:
+        raise RuntimeError(
+            f"chaos throughput collapsed: {chaos_ratio:.2f}x the fault-free "
+            f"baseline under ~10% injected step faults (need "
+            f">= {FAULT_GATE}x)")
+
     result = {"bench": "serving", "smoke": smoke, "batch_slots": B,
               "model": cfg.name, "backend": jax.default_backend(), "hw": hw,
               "alpha_dtype": alpha_dtype,
@@ -356,6 +410,15 @@ def run(print_fn=print, smoke: bool = False,
                   "packed_valid_tokens": stats_p.packed_tokens,
                   "packed_batch_tokens": stats_p.padded_tokens,
                   "step_compiles": stats_p.step_compiles},
+              "fault_tolerance": {
+                  "n_requests": n_mixed,
+                  "faults": list(CHAOS_SPECS),
+                  "chaos_tok_s": tps_f, "fault_free_tok_s": tps_w,
+                  "throughput_ratio_vs_fault_free": chaos_ratio,
+                  "recoveries": stats_f.recoveries,
+                  "errors": stats_f.errors,
+                  "stalls": stats_f.stalls,
+                  "completed": stats_f.completed},
               "latency": lat}
     if json_path:
         with open(json_path, "w") as f:

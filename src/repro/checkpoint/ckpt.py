@@ -112,8 +112,12 @@ def restore(directory: str, step: Optional[int] = None, *,
         name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
                         for k in pth)
         arr = by_path[name]
-        assert tuple(arr.shape) == tuple(leaf.shape), \
-            f"{name}: ckpt {arr.shape} != template {leaf.shape}"
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"checkpoint restore: leaf {name!r} shape mismatch — "
+                f"checkpoint has {tuple(arr.shape)}, template expects "
+                f"{tuple(leaf.shape)}; the checkpoint was likely written "
+                f"for a different model config or mesh layout")
         # elastic restore casts float<->float (e.g. f32 -> bf16) freely, but a
         # float<->int cast would silently corrupt quantised leaves (int8/int4
         # alphas must round-trip bit-exactly): refuse with a clear error.

@@ -137,13 +137,13 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, variant: str,
 
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
     n_dev = mesh.devices.size
-    t0 = time.time()
+    t0 = time.perf_counter()
     try:
         lowered = lower_cell(cfg, shape, mesh)
-        t_lower = time.time() - t0
-        t0 = time.time()
+        t_lower = time.perf_counter() - t0
+        t0 = time.perf_counter()
         compiled = lowered.compile()
-        t_compile = time.time() - t0
+        t_compile = time.perf_counter() - t0
         mem = compiled.memory_analysis()
         ca = compiled.cost_analysis() or {}
         hlo = compiled.as_text()

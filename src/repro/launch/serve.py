@@ -14,6 +14,14 @@ padding-efficiency counters are reported. ``--calibrate`` records measured
 step times against the mapper's analytical model and reports which layers a
 calibrated re-plan would re-map (optionally saving the table with
 ``--calibration-out``).
+
+Chaos flags (see ``docs/serving.md`` "Failure semantics"): ``--inject`` adds
+deterministic faults (repeatable; e.g. ``--inject nan:step=3,slot=0
+--inject fail:step=7``), ``--admission preempt`` + per-request priorities
+exercise preemption-and-recompute, ``--max-waiting``/``--deadline`` bound
+the queue and request lifetimes. The launcher exits non-zero if any request
+that was NOT deliberately poisoned fails to complete — the CI chaos smoke
+rides exactly this contract.
 """
 from __future__ import annotations
 
@@ -26,6 +34,7 @@ import numpy as np
 
 from repro.configs import get_config, get_smoke_config
 from repro.models import registry as R
+from repro.runtime.faults import FaultPlan
 from repro.serving import LLMEngine, Request, SamplingParams, hw_names
 
 
@@ -50,7 +59,21 @@ def main(argv=None) -> None:
     ap.add_argument("--no-bucketing", action="store_true",
                     help="prefill each prompt at its native length")
     ap.add_argument("--admission", default="reject",
-                    choices=["reject", "truncate"])
+                    choices=["reject", "truncate", "preempt"])
+    ap.add_argument("--inject", action="append", default=[],
+                    metavar="KIND:KEY=V,...",
+                    help="deterministic fault injection, repeatable: "
+                         "nan:step=3,slot=0 | fail:step=7 | "
+                         "delay:p=0.1,s=0.002 (seed-driven, reproducible)")
+    ap.add_argument("--max-waiting", type=int, default=None,
+                    help="bound the waiting queue; overloads load-shed the "
+                         "least-urgent request (FINISH_SHED)")
+    ap.add_argument("--step-timeout", type=float, default=None,
+                    help="soft per-step watchdog: a slower step counts a "
+                         "stall and triggers a core rebuild + recompute")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request deadline in seconds (FINISH_TIMEOUT "
+                         "past it)")
     ap.add_argument("--chunk-size", type=int, default=None,
                     help="step-based serving: interleave N-token prompt "
                          "chunks with decode (None = phase-based prefill)")
@@ -81,25 +104,42 @@ def main(argv=None) -> None:
 
     if args.packed and args.chunk_size is None:
         raise SystemExit("--packed requires --chunk-size")
+    plan = FaultPlan.parse(args.inject, seed=args.seed)
+    if plan:
+        print(f"[serve] chaos: {len(plan.faults)} injector(s) armed "
+              f"(seed={args.seed}): "
+              + ", ".join(f.kind for f in plan.faults))
     eng = LLMEngine(params, cfg, batch_slots=args.slots,
                     buffer_len=args.buffer, hw=args.hw,
                     bucketed_prefill=not args.no_bucketing,
                     admission=args.admission, chunk_size=args.chunk_size,
-                    packed=args.packed, calibrate=args.calibrate)
+                    packed=args.packed, calibrate=args.calibrate,
+                    max_waiting=args.max_waiting,
+                    step_timeout_s=args.step_timeout,
+                    faults=plan if plan else None)
     rng = np.random.default_rng(args.seed)
     for rid in range(args.requests):
         plen = int(rng.integers(4, args.buffer // 4))
-        eng.submit(Request(
+        admitted, bp = eng.add_request(Request(
             rid, rng.integers(0, cfg.vocab, plen, dtype=np.int32),
             max_new_tokens=args.max_new,
+            deadline_s=args.deadline,
             sampling=SamplingParams(temperature=args.temperature,
                                     top_k=args.top_k, seed=rid)))
+        if not admitted:
+            print(f"[serve] request {rid} not admitted "
+                  f"(backpressure={bp:.2f})")
     t0 = time.perf_counter()
     stats = eng.run_until_drained()
     dt = time.perf_counter() - t0
     print(f"[serve] completed={stats.completed} rejected={stats.rejected} "
           f"steps={stats.steps} tokens={stats.tokens_out} "
           f"({stats.tokens_out/dt:.1f} tok/s)")
+    if plan or stats.preemptions or stats.timeouts or stats.shed:
+        print(f"[serve] faults: errors={stats.errors} "
+              f"recoveries={stats.recoveries} stalls={stats.stalls} "
+              f"preemptions={stats.preemptions} timeouts={stats.timeouts} "
+              f"shed={stats.shed}")
     print(f"[serve] prefill={stats.prefill_s:.2f}s (batches="
           f"{stats.prefill_batches}, compiles={stats.prefill_compiles}) "
           f"decode={stats.decode_s:.2f}s mixed={stats.mixed_s:.2f}s "
@@ -136,6 +176,26 @@ def main(argv=None) -> None:
         if args.calibration_out:
             eng.calibration.save(args.calibration_out)
             print(f"[serve] calibrate: table -> {args.calibration_out}")
+
+    # Exit contract (the CI chaos smoke rides this): every request must be
+    # terminal, and any finish reason other than eos/length must be
+    # attributable to a degradation this invocation deliberately configured
+    # (nan injection -> error, --deadline -> timeout, bounded queue /
+    # preempt admission -> shed/preempted).
+    outs = {o.rid: o for o in eng.outputs()}
+    allowed = {"eos", "length", "rejected"}
+    if any(f.kind == "nan" for f in plan.faults):
+        allowed.add("error")
+    if args.deadline is not None:
+        allowed.add("timeout")
+    if args.max_waiting is not None or args.admission == "preempt":
+        allowed.update(("shed", "preempted"))
+    missing = [r for r in range(args.requests) if r not in outs]
+    bad = [(r, outs[r].finish_reason) for r in outs
+           if outs[r].finish_reason not in allowed]
+    if missing or bad:
+        raise SystemExit(f"[serve] FAILED: unfinished={missing} "
+                         f"unexpected={bad}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,185 @@
+"""Deterministic, seed-driven fault injection for serving AND training.
+
+One :class:`FaultPlan` describes every fault a run should experience, as a
+pure function of the step index — two runs with the same plan see identical
+faults, so chaos tests are reproducible and recovery equivalence ("the
+post-recovery token streams match the fault-free run") is a testable
+property rather than a hope.
+
+Three injector kinds, matching the failure modes the serving engine must
+survive:
+
+* ``nan``   — poison the emitted logits of slot ``slot`` at step ``step``
+              (the engine's fused ``isfinite`` health check must quarantine
+              exactly that request as ``FINISH_ERROR`` and keep serving);
+* ``fail``  — raise :class:`InjectedFault` at the top of step ``step``
+              (simulated device loss / runtime crash; the engine watchdog
+              must rebuild the core and replay live slots via recompute);
+* ``delay`` — sleep ``delay_s`` inside step ``step`` (straggler / stuck
+              step; trips the engine's soft step-timeout watchdog and the
+              training supervisor's straggler detector).
+
+Faults fire either at one deterministic ``step`` (optionally recurring
+``every`` steps after it) or probabilistically with per-step probability
+``p`` drawn from a counter-based RNG seeded by ``(plan.seed, step, index)``
+— still fully deterministic for a fixed plan.
+
+Shared with training: :meth:`FaultPlan.failure_injector` adapts the plan
+onto ``runtime.supervisor.run``'s ``failure_injector(step)`` contract
+(``fail`` raises, ``delay`` sleeps to exercise the straggler watchdog,
+``nan`` is serving-only and ignored there).
+
+CLI syntax (``--inject`` on ``repro.launch.serve``)::
+
+    nan:step=3            poison slot 0's logits at step 3
+    nan:step=3,slot=1     ... slot 1
+    nan:p=0.05            ... slot 0, 5% of steps (seed-driven)
+    fail:step=7           raise at step 7
+    fail:step=7,every=50  ... and every 50 steps after
+    delay:step=5,s=0.2    sleep 200ms inside step 5
+    delay:p=0.1,s=0.002   2ms stall on 10% of steps
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Iterable, Optional
+
+import numpy as np
+
+__all__ = ["Fault", "FaultPlan", "InjectedFault", "parse_fault"]
+
+_KINDS = ("nan", "fail", "delay")
+
+
+class InjectedFault(RuntimeError):
+    """Raised by a ``fail`` injector: a simulated step crash/device loss."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One injector. Exactly one of ``step`` (>= 0) or ``p`` (> 0) arms it."""
+    kind: str                   # "nan" | "fail" | "delay"
+    step: int = -1              # fire at this step index (-1 = probabilistic)
+    every: int = 0              # with step >= 0: recur every N steps after
+    p: float = 0.0              # per-step firing probability (seed-driven)
+    slot: int = 0               # nan: the slot whose logits are poisoned
+    delay_s: float = 0.0        # delay: injected latency
+
+    def __post_init__(self):
+        if self.kind not in _KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r} "
+                             f"(expected one of {_KINDS})")
+        if (self.step < 0) == (self.p <= 0.0):
+            raise ValueError(
+                f"fault {self.kind!r} needs exactly one trigger: "
+                f"step>=0 or p>0 (got step={self.step}, p={self.p})")
+        if self.kind == "delay" and self.delay_s <= 0.0:
+            raise ValueError("delay fault needs s > 0")
+
+    def fires_at(self, step: int, seed: int, index: int) -> bool:
+        """Pure function of (plan seed, fault index, step)."""
+        if self.step >= 0:
+            if step == self.step:
+                return True
+            return (self.every > 0 and step > self.step
+                    and (step - self.step) % self.every == 0)
+        rng = np.random.default_rng(
+            np.random.SeedSequence([seed, index, step]))
+        return bool(rng.random() < self.p)
+
+
+def parse_fault(spec: str) -> Fault:
+    """Parse one ``--inject`` spec: ``kind:key=value,key=value``."""
+    kind, _, rest = spec.partition(":")
+    kw: dict = {}
+    keys = {"step": ("step", int), "every": ("every", int),
+            "p": ("p", float), "slot": ("slot", int),
+            "s": ("delay_s", float)}
+    for part in filter(None, rest.split(",")):
+        k, _, v = part.partition("=")
+        if k not in keys or not v:
+            raise ValueError(f"bad fault spec {spec!r}: token {part!r} "
+                             f"(expected key=value with key in {list(keys)})")
+        field, cast = keys[k]
+        kw[field] = cast(v)
+    try:
+        return Fault(kind=kind, **kw)
+    except (ValueError, TypeError) as e:
+        raise ValueError(f"bad fault spec {spec!r}: {e}") from e
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A deterministic schedule of faults over step indices."""
+    faults: tuple = ()
+    seed: int = 0
+
+    @staticmethod
+    def parse(specs: Iterable[str], seed: int = 0) -> "FaultPlan":
+        return FaultPlan(tuple(parse_fault(s) for s in specs), seed=seed)
+
+    def __bool__(self) -> bool:
+        return bool(self.faults)
+
+    def at(self, step: int) -> tuple:
+        """Every fault firing at ``step`` (deterministic)."""
+        return tuple(f for i, f in enumerate(self.faults)
+                     if f.fires_at(step, self.seed, i))
+
+    # -- serving-side helpers ----------------------------------------------
+
+    def poison_row(self, step: int, n_slots: int) -> Optional[np.ndarray]:
+        """(B,) float32 additive logits poison for ``step``: NaN at each
+        firing ``nan`` fault's slot, else 0. None when nothing fires (the
+        caller keeps a zeros vector around — no per-step allocation)."""
+        rows = [f.slot for f in self.at(step)
+                if f.kind == "nan" and 0 <= f.slot < n_slots]
+        if not rows:
+            return None
+        poison = np.zeros(n_slots, np.float32)
+        poison[rows] = np.nan
+        return poison
+
+    def raise_or_delay(self, step: int) -> None:
+        """Apply ``fail``/``delay`` faults for ``step`` (nan is handled by
+        ``poison_row`` at the logits). ``delay`` sleeps first so a step can
+        be both slow and fatal."""
+        fired = self.at(step)
+        for f in fired:
+            if f.kind == "delay":
+                time.sleep(f.delay_s)
+        for f in fired:
+            if f.kind == "fail":
+                raise InjectedFault(f"injected step failure at step {step}")
+
+    # -- training-side adapter ---------------------------------------------
+
+    def failure_injector(self):
+        """Adapt onto ``runtime.supervisor.run(failure_injector=...)``:
+        a callable(step) that sleeps for ``delay`` faults (straggler
+        watchdog fodder) and raises on ``fail`` faults. ``nan`` faults are
+        serving-only and ignored.
+
+        Unlike the serving side (whose step counter keeps advancing across
+        a recovery), the supervisor RE-VISITS a failed step after
+        restore-and-replay — a pure step-keyed raise would livelock the
+        restore loop. Each (fault, step) therefore fires at most once per
+        injector instance: the node dies once, the replay succeeds. Still
+        deterministic run-to-run for a fixed plan."""
+        fired: set = set()
+
+        def injector(step: int) -> None:
+            live = [(i, f) for i, f in enumerate(self.faults)
+                    if f.kind != "nan" and (i, step) not in fired
+                    and f.fires_at(step, self.seed, i)]
+            for i, f in live:
+                fired.add((i, step))
+                if f.kind == "delay":
+                    time.sleep(f.delay_s)
+            for _i, f in live:
+                if f.kind == "fail":
+                    raise InjectedFault(
+                        f"injected step failure at step {step}")
+
+        return injector

@@ -172,7 +172,12 @@ def classify_gemm(M: int, d_in: int, d_out: int, rho: float, *,
             ii *= calibration.factor(name, path, hw.name)
         if ii < best_ii:
             best_path, best_ii, best_bound = path, ii, bound
-    assert best_path is not None
+    if best_path is None:
+        raise RuntimeError(
+            f"mapper: no viable execution path for layer {name!r} "
+            f"(candidates considered: {list(paths)}) — every candidate "
+            f"produced a non-finite modeled II; check the perf model / "
+            f"calibration factors for hw={hw.name!r}")
 
     # DSE block search over the consumer GEMM of the chosen path. The
     # spectral path contracts over J (= rho * d_in) instead of d_in.

@@ -51,14 +51,21 @@ def run(train_step: Callable, state: Any, batch_at: Callable[[int], Any],
         n_steps: int, cfg: SupervisorConfig, *,
         state_shardings: Any = None,
         failure_injector: Optional[Callable[[int], None]] = None,
+        faults=None,
         on_straggler: Optional[Callable[[int, float], None]] = None,
         log: Callable[[str], None] = print) -> tuple[Any, RunReport]:
     """Run ``n_steps`` of ``train_step`` with checkpoint/restart semantics.
 
     ``train_step(state, batch) -> (state, metrics)``; ``batch_at(step)`` is a
     pure function (deterministic replay). ``failure_injector(step)`` may raise
-    to simulate node failure.
+    to simulate node failure. ``faults`` accepts the serving side's
+    :class:`~repro.runtime.faults.FaultPlan` — ONE chaos schedule drives both
+    stacks (``fail`` raises, ``delay`` feeds the straggler watchdog, ``nan``
+    is serving-only and ignored here); an explicit ``failure_injector``
+    takes precedence.
     """
+    if failure_injector is None and faults is not None:
+        failure_injector = faults.failure_injector()
     saver = ckpt.AsyncSaver()
     report = RunReport()
     state_template = jax.tree_util.tree_map(
@@ -74,9 +81,11 @@ def run(train_step: Callable, state: Any, batch_at: Callable[[int], Any],
 
     while step < n_steps:
         try:
+            # timer starts before the injector so an injected delay lands
+            # inside the measured step wall — straggler-watchdog fodder
+            t0 = time.perf_counter()
             if failure_injector is not None:
                 failure_injector(step)
-            t0 = time.perf_counter()
             batch = batch_at(step)
             state, metrics = train_step(state, batch)
             loss = float(metrics.get("total_loss", metrics.get("loss", 0.0)))

@@ -1,8 +1,10 @@
 """Request-level serving stack (see ``repro.serving.api`` for the surface)."""
-from repro.serving.api import (FINISH_EOS, FINISH_LENGTH, FINISH_REJECTED,
-                               HWTarget, Request, RequestOutput,
-                               SamplingParams, hw_by_name, hw_names,
-                               register_hw, resolve_hw)
+from repro.runtime.faults import Fault, FaultPlan, InjectedFault, parse_fault
+from repro.serving.api import (FINISH_EOS, FINISH_ERROR, FINISH_LENGTH,
+                               FINISH_PREEMPTED, FINISH_REJECTED, FINISH_SHED,
+                               FINISH_TIMEOUT, HWTarget, Request,
+                               RequestOutput, SamplingParams, hw_by_name,
+                               hw_names, register_hw, resolve_hw)
 from repro.serving.core import EngineCore, StepOutput
 from repro.serving.engine import EngineStats, LLMEngine, ServingEngine
 from repro.serving.scheduler import (ChunkTask, FCFSScheduler, PackedStep,
@@ -14,6 +16,8 @@ from repro.serving.scheduler import (ChunkTask, FCFSScheduler, PackedStep,
 __all__ = [
     "SamplingParams", "Request", "RequestOutput",
     "FINISH_LENGTH", "FINISH_EOS", "FINISH_REJECTED",
+    "FINISH_TIMEOUT", "FINISH_SHED", "FINISH_ERROR", "FINISH_PREEMPTED",
+    "Fault", "FaultPlan", "InjectedFault", "parse_fault",
     "HWTarget", "hw_by_name", "hw_names", "register_hw", "resolve_hw",
     "FCFSScheduler", "PrefillGroup", "PrefillAssignment", "ChunkTask",
     "SchedulerOutput", "StepOutput", "bucket_lengths", "bucket_for",

@@ -34,12 +34,20 @@ HWTarget = HW
 __all__ = [
     "SamplingParams", "Request", "RequestOutput",
     "FINISH_LENGTH", "FINISH_EOS", "FINISH_REJECTED",
+    "FINISH_TIMEOUT", "FINISH_SHED", "FINISH_ERROR", "FINISH_PREEMPTED",
     "HWTarget", "HW", "hw_by_name", "hw_names", "register_hw", "resolve_hw",
 ]
 
 FINISH_LENGTH = "length"        # hit max_new_tokens
 FINISH_EOS = "eos"              # sampled the eos token
 FINISH_REJECTED = "rejected"    # failed admission (would overflow the cache)
+FINISH_TIMEOUT = "timeout"      # deadline_s expired (queued or mid-flight)
+FINISH_SHED = "shed"            # load-shed from a full bounded waiting queue
+FINISH_ERROR = "error"          # quarantined: non-finite emitted logits
+FINISH_PREEMPTED = "preempted"  # preempted AND could not be re-admitted
+                                # (bounded queue full of higher-priority
+                                # work); otherwise preemption is transient —
+                                # the request is recomputed, never finished
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,18 +74,45 @@ GREEDY = SamplingParams()
 
 @dataclasses.dataclass
 class Request:
-    """One generation request. Mutable fields track in-flight progress."""
+    """One generation request. Mutable fields track in-flight progress.
+
+    ``priority`` orders the waiting queue (higher first, FCFS within a
+    level) and arms preemption under ``admission="preempt"``: a waiting
+    request with strictly higher priority may evict the lowest-priority
+    running slot (the victim is recomputed, never lost). ``deadline_s`` is
+    a wall-clock budget relative to submission; an expired request —
+    queued or mid-flight — finishes as ``FINISH_TIMEOUT`` with whatever
+    tokens it has. ``on_finish`` fires exactly once with the final
+    :class:`RequestOutput`, for every terminal reason including
+    ``rejected``/``shed``/``timeout``/``error``.
+    """
     rid: int
     prompt: np.ndarray                  # (S,) int32 token ids
     max_new_tokens: int = 16
     sampling: SamplingParams = GREEDY
     # called as stream(rid, token) the moment each token is committed
     stream: Optional[Callable[[int, int], None]] = None
+    priority: int = 0                   # higher = more urgent
+    deadline_s: Optional[float] = None  # seconds after t_submit
+    # called exactly once with the final RequestOutput (any finish reason)
+    on_finish: Optional[Callable[["RequestOutput"], None]] = None
     out_tokens: list = dataclasses.field(default_factory=list)
     finish_reason: Optional[str] = None
     # latency bookkeeping: the engine stamps submission; emit stamps tokens
     t_submit: float = 0.0
     token_times: list = dataclasses.field(default_factory=list)
+    # -- preemption/recompute state (engine-managed) ------------------------
+    preemptions: int = 0                # times this request lost its slot
+    # PRNG key stashed at preemption so a recomputed sampled stream resumes
+    # exactly where the unpreempted run would be (None = seed fresh)
+    resume_key: Optional[np.ndarray] = None
+    # original prompt length; ``prompt`` is rewritten to prompt + generated
+    # tokens on preemption so chunked prefill recomputes the context
+    prompt_len_orig: Optional[int] = None
+    _notified: bool = False             # on_finish fired (exactly-once guard)
+    # scheduler-managed FCFS sequence number; survives requeue so a
+    # preempted request resumes ahead of younger same-priority waiters
+    _sched_seq: Optional[int] = None
 
     @property
     def done(self) -> bool:
@@ -86,6 +121,12 @@ class Request:
     @property
     def prompt_len(self) -> int:
         return int(len(self.prompt))
+
+    @property
+    def expired(self) -> bool:
+        """Deadline elapsed (False when no deadline or not yet submitted)."""
+        return (self.deadline_s is not None and self.t_submit > 0.0
+                and time.perf_counter() - self.t_submit > self.deadline_s)
 
     def emit(self, tok: int) -> None:
         self.token_times.append(time.perf_counter())
@@ -98,10 +139,13 @@ class Request:
                 if self.token_times and self.t_submit else None)
         itls = tuple(b - a for a, b in zip(self.token_times,
                                            self.token_times[1:]))
-        return RequestOutput(rid=self.rid, prompt_len=self.prompt_len,
+        plen = (self.prompt_len_orig if self.prompt_len_orig is not None
+                else self.prompt_len)
+        return RequestOutput(rid=self.rid, prompt_len=plen,
                              tokens=tuple(self.out_tokens),
                              finish_reason=self.finish_reason,
-                             ttft_s=ttft, itls_s=itls)
+                             ttft_s=ttft, itls_s=itls,
+                             preemptions=self.preemptions)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -117,6 +161,7 @@ class RequestOutput:
     # bench's p50/p95 percentiles.
     ttft_s: Optional[float] = None
     itls_s: tuple = ()
+    preemptions: int = 0    # times the request was preempted + recomputed
 
     @property
     def n_tokens(self) -> int:

@@ -44,6 +44,14 @@ overwrites each padded cache position before attending to it). SSM/hybrid
 state would run through the padding, so those families use the exact
 per-request prefill path (``supports_bucketing`` is False and the engine
 falls back automatically).
+
+Health + chaos: every fused step fn takes a ``(B,)`` additive ``poison``
+vector (zeros normally — constant shape, so fault injection never retraces)
+and returns a per-slot ``ok = all(isfinite(logits))`` flag computed INSIDE
+the jit'd call, so the NaN quarantine costs no extra dispatch. A
+:class:`~repro.runtime.faults.FaultPlan` wired at construction drives the
+poison vector plus injected step failures/delays off ``step_idx`` — chaos
+flows through the SAME detection path organic NaNs would take.
 """
 from __future__ import annotations
 
@@ -58,6 +66,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import registry as R
+from repro.runtime.faults import FaultPlan
 from repro.serving.api import Request, SamplingParams
 from repro.serving.scheduler import SchedulerOutput
 
@@ -104,22 +113,33 @@ def _fused_sample(logits, temps, topks, greedy, keys):
     return jax.lax.cond(jnp.all(greedy), _all_greedy, _mixed, None)
 
 
+def _health_and_sample(logits, poison, temps, topks, greedy, keys):
+    """Shared fused tail: apply the (B,) additive poison (zeros when no
+    fault fires — same shape either way, so chaos never retraces), check
+    emitted-logits finiteness per slot INSIDE the jit'd call, sample."""
+    logits = logits + poison[:, None].astype(logits.dtype)
+    ok = jnp.all(jnp.isfinite(logits.astype(jnp.float32)), axis=-1)
+    toks, nkeys = _fused_sample(logits, temps, topks, greedy, keys)
+    return toks, nkeys, ok
+
+
 @functools.lru_cache(maxsize=16)
 def _decode_step_fn(cfg: ModelConfig):
     """Compiled fused decode+sample step, shared across engine instances
     with the same (hashable) config — engine restarts don't recompile."""
 
-    def _batched_step(p, caches, tokens, temps, topks, greedy, keys):
-        """(stacked caches, (B,) last tokens, (B,) sampling state)
-        -> ((B,) next tokens, caches, (B,2) advanced keys)."""
+    def _batched_step(p, caches, tokens, poison, temps, topks, greedy, keys):
+        """(stacked caches, (B,) last tokens, (B,) poison, (B,) sampling
+        state) -> ((B,) next tokens, caches, (B,2) advanced keys, (B,) ok)."""
 
         def one_slot(cache, tok):
             logits, new_cache = R.serve_step(p, cfg, cache, tok[None, None])
             return logits[0], new_cache
 
         logits, new_caches = jax.vmap(one_slot)(caches, tokens)
-        toks, nkeys = _fused_sample(logits, temps, topks, greedy, keys)
-        return toks, new_caches, nkeys
+        toks, nkeys, ok = _health_and_sample(logits, poison, temps, topks,
+                                             greedy, keys)
+        return toks, new_caches, nkeys, ok
 
     return jax.jit(_batched_step)
 
@@ -130,14 +150,15 @@ def _packed_step_fn(cfg: ModelConfig, Tb: int):
     with the same (config, token-bucket) pair. One trace per pow-2 bucket."""
 
     def _packed(p, caches, tokens, slot_ids, positions, new_pos, emit_idx,
-                temps, topks, greedy, keys):
+                poison, temps, topks, greedy, keys):
         """((Tb,) packed tokens/slot_ids/positions, (B,) new fill levels,
-        (B,) emit indices, (B,) sampling state) ->
-        ((B,) sampled tokens, caches, (B, 2) keys)."""
+        (B,) emit indices, (B,) poison, (B,) sampling state) ->
+        ((B,) sampled tokens, caches, (B, 2) keys, (B,) ok)."""
         logits, new_caches = R.serve_step_packed(
             p, cfg, caches, tokens, slot_ids, positions, new_pos, emit_idx)
-        toks, nkeys = _fused_sample(logits, temps, topks, greedy, keys)
-        return toks, new_caches, nkeys
+        toks, nkeys, ok = _health_and_sample(logits, poison, temps, topks,
+                                             greedy, keys)
+        return toks, new_caches, nkeys, ok
 
     return jax.jit(_packed)
 
@@ -147,9 +168,11 @@ def _window_step_fn(cfg: ModelConfig, W: int):
     """Compiled fused window step: per-slot ragged (W-wide) model advance +
     sampling, shared across engine instances with the same (config, width)."""
 
-    def _batched_window(p, caches, tokens, n_tok, temps, topks, greedy, keys):
+    def _batched_window(p, caches, tokens, n_tok, poison, temps, topks,
+                        greedy, keys):
         """(stacked caches, (B, W) token windows, (B,) valid counts,
-        (B,) sampling state) -> ((B,) sampled tokens, caches, (B,2) keys).
+        (B,) poison, (B,) sampling state) -> ((B,) sampled tokens, caches,
+        (B,2) keys, (B,) ok).
 
         Row semantics: n_tok == 1 with the last generated token in column 0
         is a decode slot; 1 < n_tok <= W is a prompt chunk; n_tok == 0 is an
@@ -161,8 +184,9 @@ def _window_step_fn(cfg: ModelConfig, W: int):
             return logits[0], new_cache
 
         logits, new_caches = jax.vmap(one_slot)(caches, tokens, n_tok)
-        toks, nkeys = _fused_sample(logits, temps, topks, greedy, keys)
-        return toks, new_caches, nkeys
+        toks, nkeys, ok = _health_and_sample(logits, poison, temps, topks,
+                                             greedy, keys)
+        return toks, new_caches, nkeys, ok
 
     return jax.jit(_batched_window)
 
@@ -180,6 +204,10 @@ class StepOutput:
     """
     first_tokens: dict = dataclasses.field(default_factory=dict)
     decode_tokens: dict = dataclasses.field(default_factory=dict)
+    # slots whose EMITTED logits were non-finite this step: their sampled
+    # token is withheld (never appears in the dicts above) and the engine
+    # quarantines the request as FINISH_ERROR
+    bad_slots: tuple = ()
     prefill_s: float = 0.0      # legacy bucketed/exact prefill wall time
     decode_s: float = 0.0       # pure fused decode wall time
     mixed_s: float = 0.0        # fused window/packed (chunks + decode) wall
@@ -214,13 +242,20 @@ class EngineCore:
 
     def __init__(self, params, cfg: ModelConfig, *, batch_slots: int = 4,
                  buffer_len: int = 256, window: int = 0,
-                 packed: bool = False):
+                 packed: bool = False,
+                 faults: Optional[FaultPlan] = None):
         self.params = params
         self.cfg = cfg
         self.B = batch_slots
         self.T = buffer_len
         self.window = window
         self.packed = packed
+        self.faults = faults
+        # monotone fused-step counter driving the fault plan; the engine
+        # carries it across a watchdog core rebuild so a step-pinned fault
+        # fires exactly once per run, not once per core instance
+        self.step_idx = 0
+        self._zero_poison = np.zeros(batch_slots, np.float32)
         # Logical capacity is buffer_len (admission math unchanged); the
         # allocation carries `window` slack columns so a W-wide ragged write
         # at pos <= buffer_len - 1 never clamps (see module docstring). The
@@ -275,11 +310,17 @@ class EngineCore:
 
     # -- sampling state ----------------------------------------------------
 
-    def _set_sampling(self, i: int, sp: SamplingParams) -> None:
+    def _set_sampling(self, i: int, sp: SamplingParams,
+                      resume_key: Optional[np.ndarray] = None) -> None:
         self.temps[i] = max(sp.temperature, 0.0)
         self.topks[i] = sp.top_k
         self.greedy[i] = sp.greedy
-        self.keys[i] = np.asarray(jax.random.PRNGKey(sp.seed))
+        # a recomputed (preempted/recovered) request resumes from its
+        # stashed key, not a fresh seed: the key advanced once per emitted
+        # token before eviction, so the resumed sampled stream continues
+        # exactly where the unpreempted run would be
+        self.keys[i] = (np.asarray(resume_key) if resume_key is not None
+                        else np.asarray(jax.random.PRNGKey(sp.seed)))
 
     def clear_sampling(self, i: int) -> None:
         """Reset a freed slot to greedy defaults (the next request re-seeds
@@ -300,13 +341,14 @@ class EngineCore:
 
     # -- prefill -----------------------------------------------------------
 
-    def prefill_group(self, slot_reqs: list, bucket: int) -> np.ndarray:
+    def prefill_group(self, slot_reqs: list, bucket: int):
         """Prefill same-bucket requests in ONE jit'd batched call.
 
         ``slot_reqs`` is [(slot, Request)]; request rows ride at their slot
         index inside a full (B, bucket) token batch (idle rows are dummies),
-        so one compile per bucket serves every slot subset. Returns (B,)
-        first sampled tokens (rows outside ``slot_reqs`` are meaningless).
+        so one compile per bucket serves every slot subset. Returns ((B,)
+        first sampled tokens, (B,) per-slot finite-logits flags); rows
+        outside ``slot_reqs`` are meaningless.
         """
         Lb = min(bucket, self.T)
         tokens = np.zeros((self.B, Lb), np.int32)
@@ -315,28 +357,34 @@ class EngineCore:
             plen = req.prompt_len
             tokens[i, :plen] = req.prompt
             lengths[i] = plen
-            self._set_sampling(i, req.sampling)
+            self._set_sampling(i, req.sampling, req.resume_key)
         logits, group_cache = self._prefill(self.params, jnp.asarray(tokens),
                                             jnp.asarray(lengths))
         for i, req in slot_reqs:
             self._adopt_row(i, group_cache, int(lengths[i]))
+        # legacy-path health check rides host-side (the prefill call is not
+        # one of the fused step fns); fault injection targets fused steps
+        ok = np.asarray(jnp.all(jnp.isfinite(logits.astype(jnp.float32)),
+                                axis=-1))
         toks, nkeys = self._sample(logits)
         for i, _req in slot_reqs:
             self.keys[i] = nkeys[i]
-        return toks
+        return toks, ok
 
-    def prefill_one(self, slot: int, req: Request) -> int:
+    def prefill_one(self, slot: int, req: Request) -> tuple:
         """Exact per-request prefill at native prompt length (fallback for
-        recurrent-state families and the unbucketed baseline)."""
-        self._set_sampling(slot, req.sampling)
+        recurrent-state families and the unbucketed baseline). Returns
+        (first token, logits-finite flag)."""
+        self._set_sampling(slot, req.sampling, req.resume_key)
         prompt = jnp.asarray(req.prompt[None, :], jnp.int32)
         logits, cache = self._prefill_exact(self.params, prompt)
         self.caches = jax.tree_util.tree_map(
             lambda big, small: big.at[slot].set(small), self.caches, cache)
+        ok = bool(np.all(np.isfinite(np.asarray(logits, np.float32))))
         toks, nkeys = self._sample(
             jnp.broadcast_to(logits, (self.B,) + logits.shape[1:]))
         self.keys[slot] = nkeys[slot]
-        return int(toks[slot])
+        return int(toks[slot]), ok
 
     def _adopt_row(self, i: int, group_cache, plen: int) -> None:
         """Scatter row i of a B-row prefill cache into slot i, re-basing the
@@ -355,15 +403,18 @@ class EngineCore:
 
     # -- decode ------------------------------------------------------------
 
-    def decode(self, last_tokens: np.ndarray) -> np.ndarray:
-        """Advance ALL slots one token with ONE fused decode+sample call."""
+    def decode(self, last_tokens: np.ndarray,
+               poison: Optional[np.ndarray] = None) -> tuple:
+        """Advance ALL slots one token with ONE fused decode+sample call.
+        Returns ((B,) next tokens, (B,) finite-logits flags)."""
         self.step_shapes.add(("decode", 1))
-        next_toks, self.caches, nkeys = self._step_fn(
+        next_toks, self.caches, nkeys, ok = self._step_fn(
             self.params, self.caches, jnp.asarray(last_tokens),
+            jnp.asarray(poison if poison is not None else self._zero_poison),
             jnp.asarray(self.temps), jnp.asarray(self.topks),
             jnp.asarray(self.greedy), jnp.asarray(self.keys))
         self.keys = np.array(nkeys)                  # writable host copy
-        return np.asarray(next_toks)                 # single host sync
+        return np.asarray(next_toks), np.asarray(ok)   # single host sync
 
     # -- unified step ------------------------------------------------------
 
@@ -377,8 +428,21 @@ class EngineCore:
         (or exact) prefill calls per group, then the fused ``(B, 1)`` decode
         for the running slots. ``last_tokens`` carries each decode slot's
         previously generated token at its slot index.
+
+        A wired :class:`FaultPlan` fires here, keyed on ``step_idx``:
+        ``fail``/``delay`` faults raise/sleep at the top of the step (the
+        engine watchdog's territory); ``nan`` faults poison the fused call's
+        logits so quarantine exercises the real detection path. ``step_idx``
+        advances BEFORE the fault applies — after a watchdog core rebuild a
+        step-pinned fault does not re-fire forever.
         """
         out = StepOutput()
+        idx = self.step_idx
+        self.step_idx += 1
+        poison = None
+        if self.faults:
+            self.faults.raise_or_delay(idx)
+            poison = self.faults.poison_row(idx, self.B)
         if self.packed:
             if so.prefill_groups:
                 raise ValueError("packed mode serves prompts via chunks "
@@ -386,7 +450,7 @@ class EngineCore:
                                  "prefill_groups")
             if so.chunks or so.decode_slots:
                 t0 = time.perf_counter()
-                self._packed_step(so, last_tokens, out)
+                self._packed_step(so, last_tokens, out, poison)
                 dt = time.perf_counter() - t0
                 # A chunk-free packed step IS decode-shaped: book it as
                 # decode_s so the measured-vs-modeled calibration loop
@@ -398,24 +462,32 @@ class EngineCore:
                 out.n_prompt_tokens += sum(c.length for c in so.chunks)
             out.n_decode_tokens = len(out.decode_tokens)
             return out
+        bad: list = []
         for pg in so.prefill_groups:
             t0 = time.perf_counter()
             if pg.exact:
                 for i, req in pg.slot_reqs:
-                    out.first_tokens[i] = self.prefill_one(i, req)
+                    tok, fin = self.prefill_one(i, req)
+                    if fin:
+                        out.first_tokens[i] = tok
+                    else:
+                        bad.append(i)
                 out.n_batch_tokens += sum(r.prompt_len
                                           for _i, r in pg.slot_reqs)
             else:
-                toks = self.prefill_group(list(pg.slot_reqs), pg.bucket)
+                toks, fin = self.prefill_group(list(pg.slot_reqs), pg.bucket)
                 for i, req in pg.slot_reqs:
-                    out.first_tokens[i] = int(toks[i])
+                    if fin[i]:
+                        out.first_tokens[i] = int(toks[i])
+                    else:
+                        bad.append(i)
                 out.n_batch_tokens += self.B * min(pg.bucket, self.T)
             out.prefill_s += time.perf_counter() - t0
             out.n_prompt_tokens += sum(r.prompt_len for _i, r in pg.slot_reqs)
             out.n_valid_tokens += sum(r.prompt_len for _i, r in pg.slot_reqs)
         if so.chunks:
             t0 = time.perf_counter()
-            self._window_step(so, last_tokens, out)
+            self._window_step(so, last_tokens, out, poison)
             out.mixed_s += time.perf_counter() - t0
             out.n_prompt_tokens += sum(c.length for c in so.chunks)
         elif so.decode_slots:
@@ -423,18 +495,23 @@ class EngineCore:
             for i in so.decode_slots:
                 last[i] = last_tokens[i]
             t0 = time.perf_counter()
-            nxt = self.decode(last)
+            nxt, ok = self.decode(last, poison)
             out.decode_s += time.perf_counter() - t0
             for i in so.decode_slots:
-                out.decode_tokens[i] = int(nxt[i])
+                if ok[i]:
+                    out.decode_tokens[i] = int(nxt[i])
+                else:
+                    bad.append(i)
             out.n_valid_tokens += len(so.decode_slots)
             out.n_batch_tokens += self.B
+        out.bad_slots = out.bad_slots + tuple(bad)
         out.n_decode_tokens = len(out.decode_tokens)
         return out
 
     def _window_step(self, so: SchedulerOutput,
                      last_tokens: Optional[np.ndarray],
-                     out: StepOutput) -> None:
+                     out: StepOutput,
+                     poison: Optional[np.ndarray] = None) -> None:
         """ONE fused ragged window call: decode slots ride at width 1, chunk
         slots at their slice length, idle slots at 0 — all inside a single
         (B, W) batch so prefill never stalls inter-token latency."""
@@ -449,34 +526,47 @@ class EngineCore:
             tokens[c.slot, :c.length] = c.req.prompt[c.start:c.start + c.length]
             n_tok[c.slot] = c.length
             if c.start == 0:            # new request: re-base pos, seed keys
-                self._set_sampling(c.slot, c.req.sampling)
+                self._set_sampling(c.slot, c.req.sampling, c.req.resume_key)
                 fresh.append(c.slot)
         if fresh:
             self.caches["pos"] = self.caches["pos"].at[
                 jnp.asarray(fresh)].set(0)
         self.step_shapes.add(("window", W))
         fn = _window_step_fn(self.cfg, W)
-        toks, self.caches, nkeys = fn(
+        toks, self.caches, nkeys, ok = fn(
             self.params, self.caches, jnp.asarray(tokens),
-            jnp.asarray(n_tok), jnp.asarray(self.temps),
+            jnp.asarray(n_tok),
+            jnp.asarray(poison if poison is not None else self._zero_poison),
+            jnp.asarray(self.temps),
             jnp.asarray(self.topks), jnp.asarray(self.greedy),
             jnp.asarray(self.keys))
-        toks, nkeys = np.asarray(toks), np.asarray(nkeys)
+        toks, nkeys, ok = np.asarray(toks), np.asarray(nkeys), np.asarray(ok)
         # Commit keys ONLY for emitting slots: a mid-prompt chunk consumes no
         # randomness, keeping sampled streams identical to the unchunked path.
+        # A slot whose emitted logits went non-finite commits nothing — its
+        # token is garbage and its request is quarantined by the engine.
+        bad: list = []
         for i in so.decode_slots:
+            if not ok[i]:
+                bad.append(i)
+                continue
             out.decode_tokens[i] = int(toks[i])
             self.keys[i] = nkeys[i]
         for c in so.chunks:
             if c.last:
+                if not ok[c.slot]:
+                    bad.append(c.slot)
+                    continue
                 out.first_tokens[c.slot] = int(toks[c.slot])
                 self.keys[c.slot] = nkeys[c.slot]
+        out.bad_slots = out.bad_slots + tuple(bad)
         out.n_valid_tokens += int(n_tok.sum())
         out.n_batch_tokens += self.B * W
 
     def _packed_step(self, so: SchedulerOutput,
                      last_tokens: Optional[np.ndarray],
-                     out: StepOutput) -> None:
+                     out: StepOutput,
+                     poison: Optional[np.ndarray] = None) -> None:
         """ONE fused packed call: every valid token of the step — decode
         slots and prompt chunks alike — rides in a single dense (T,) stream
         (T = pow-2 bucket), so no slot drags padded columns through the
@@ -484,27 +574,37 @@ class EngineCore:
         from repro.serving.scheduler import pack_step
         for c in so.chunks:
             if c.start == 0:            # new request: seed sampling state
-                self._set_sampling(c.slot, c.req.sampling)
+                self._set_sampling(c.slot, c.req.sampling, c.req.resume_key)
         ps = pack_step(so, last_tokens, self._host_pos, self.B,
                        self.window or 1)
         self.step_shapes.add(("packed", ps.n_batch))
         fn = _packed_step_fn(self.cfg, ps.n_batch)
-        toks, self.caches, nkeys = fn(
+        toks, self.caches, nkeys, ok = fn(
             self.params, self.caches, jnp.asarray(ps.tokens),
             jnp.asarray(ps.slot_ids), jnp.asarray(ps.positions),
             jnp.asarray(ps.new_pos, dtype=jnp.int32),
             jnp.asarray(ps.emit_idx, dtype=jnp.int32),
+            jnp.asarray(poison if poison is not None else self._zero_poison),
             jnp.asarray(self.temps), jnp.asarray(self.topks),
             jnp.asarray(self.greedy), jnp.asarray(self.keys))
-        toks, nkeys = np.asarray(toks), np.asarray(nkeys)
+        toks, nkeys, ok = np.asarray(toks), np.asarray(nkeys), np.asarray(ok)
         self._host_pos[:] = ps.new_pos
-        # Same key-commit discipline as the window path: emitting slots only.
+        # Same key-commit discipline as the window path: emitting slots only;
+        # non-finite emitted logits commit nothing (quarantine).
+        bad: list = []
         for i in so.decode_slots:
+            if not ok[i]:
+                bad.append(i)
+                continue
             out.decode_tokens[i] = int(toks[i])
             self.keys[i] = nkeys[i]
         for c in so.chunks:
             if c.last:
+                if not ok[c.slot]:
+                    bad.append(c.slot)
+                    continue
                 out.first_tokens[c.slot] = int(toks[c.slot])
                 self.keys[c.slot] = nkeys[c.slot]
+        out.bad_slots = out.bad_slots + tuple(bad)
         out.n_valid_tokens += ps.n_valid
         out.n_batch_tokens += ps.n_batch

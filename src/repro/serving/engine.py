@@ -17,8 +17,32 @@ contract (vLLM-style):
   step (only valid tokens reach the model, one dense pow-2-bucketed
   stream) instead of the padded ``(B, W)`` window;
 * this module tracks slots, prefill progress, finish reasons (``length`` /
-  ``eos`` / ``rejected``), streaming callbacks, per-phase wall time, and the
+  ``eos`` / ``rejected`` / ``timeout`` / ``shed`` / ``error`` /
+  ``preempted``), streaming callbacks, per-phase wall time, and the
   decompress-weight-cache counters.
+
+Fault tolerance (see ``docs/serving.md`` "Failure semantics"):
+
+* **Preemption-and-recompute** (``admission="preempt"``) — when the
+  scheduler evicts a running slot for a higher-priority waiter, the engine
+  stashes the slot's PRNG key, rewrites the request's prompt to
+  ``original + generated_tokens``, and re-enqueues it; chunked prefill
+  recomputes the context and the resumed stream is token-identical to the
+  unpreempted run (greedy AND sampled — the restored key advances exactly
+  where the uninterrupted one would).
+* **NaN quarantine** — the fused step's per-slot ``isfinite`` flag demotes
+  exactly the poisoned request to ``FINISH_ERROR``; every other slot keeps
+  serving.
+* **Watchdog recovery** — a step exception (or a step exceeding
+  ``step_timeout_s``, measured around the core call so injected stalls are
+  seen) requeues every live slot recompute-style, rebuilds
+  :class:`EngineCore` (fused step fns are lru-cached per config — no
+  recompile), and carries the fault-plan step index forward. No in-flight
+  request is lost, only delayed.
+* **Deadlines + load shedding** — ``Request.deadline_s`` expires queued and
+  running requests as ``FINISH_TIMEOUT``; a bounded waiting queue
+  (``max_waiting``) sheds the least-urgent request as ``FINISH_SHED``, and
+  ``add_request`` returns the queue-fill backpressure signal.
 
 When the model has OVSF layers and no explicit plan is set, the engine asks
 the hardware-aware layer mapper (``runtime.mapper``) for a decode-shaped
@@ -40,7 +64,10 @@ from typing import Optional
 import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.serving.api import (FINISH_EOS, FINISH_LENGTH, Request,
+from repro.runtime.faults import FaultPlan
+from repro.serving.api import (FINISH_EOS, FINISH_ERROR, FINISH_LENGTH,
+                               FINISH_PREEMPTED, FINISH_REJECTED,
+                               FINISH_SHED, FINISH_TIMEOUT, Request,
                                RequestOutput, SamplingParams, resolve_hw)
 from repro.serving.core import _BUCKETED_FAMILIES, EngineCore, StepOutput
 from repro.serving.scheduler import (FCFSScheduler, SchedulerOutput,
@@ -66,8 +93,16 @@ class EngineStats:
     # calibration loop (hwmodel.perf_model.padding_efficiency).
     packed_tokens: int = 0        # valid (useful) tokens across all steps
     padded_tokens: int = 0        # batch tokens across all steps (incl. pad)
-    completed: int = 0
+    completed: int = 0            # finished naturally (eos / length)
     rejected: int = 0
+    # fault-tolerance counters (see docs/serving.md "Failure semantics")
+    preemptions: int = 0          # slot evictions for recompute (transient)
+    recoveries: int = 0           # watchdog core rebuilds (exception/stall)
+    stalls: int = 0               # steps exceeding step_timeout_s
+    timeouts: int = 0             # requests expired (FINISH_TIMEOUT)
+    shed: int = 0                 # load-shed + dropped-preempt (FINISH_SHED
+                                  # / FINISH_PREEMPTED)
+    errors: int = 0               # quarantined non-finite-logits requests
     prefill_s: float = 0.0        # per-phase wall time (legacy prefill)
     decode_s: float = 0.0         # pure fused decode steps
     mixed_s: float = 0.0          # fused window steps (chunks + decode)
@@ -93,7 +128,10 @@ class LLMEngine:
                  bucketed_prefill: bool = True, admission: str = "reject",
                  scheduler=None, chunk_size: Optional[int] = None,
                  max_step_tokens: Optional[int] = None,
-                 packed: bool = False, calibrate: bool = False):
+                 packed: bool = False, calibrate: bool = False,
+                 max_waiting: Optional[int] = None,
+                 step_timeout_s: Optional[float] = None,
+                 faults: Optional[FaultPlan] = None):
         self._base_cfg = cfg
         self.hw = hw
         self.hw_label = resolve_hw(hw).name
@@ -121,13 +159,16 @@ class LLMEngine:
             from repro.serving.scheduler import pack_bucket
             max_step_tokens = pack_bucket(0, batch_slots, chunk_size, True)
         self.max_step_tokens = max_step_tokens
+        self.faults = faults
+        self.step_timeout_s = step_timeout_s
         self.core = EngineCore(params, self.cfg, batch_slots=batch_slots,
                                buffer_len=buffer_len,
-                               window=chunk_size or 0, packed=packed)
+                               window=chunk_size or 0, packed=packed,
+                               faults=faults)
         self.bucketed = bucketed_prefill and self.core.supports_bucketing
         self.scheduler = scheduler if scheduler is not None else FCFSScheduler(
             buffer_len, admission=admission, bucketing=self.bucketed,
-            chunk_size=chunk_size)
+            chunk_size=chunk_size, max_waiting=max_waiting)
         if self.packed and not hasattr(self.scheduler, "schedule"):
             raise ValueError(
                 "packed=True requires a step scheduler (schedule method): "
@@ -171,14 +212,27 @@ class LLMEngine:
     # -- request intake ----------------------------------------------------
 
     def submit(self, req: Request) -> bool:
-        """Admit a request (False + a ``rejected`` RequestOutput if it would
-        overflow the cache buffer under the scheduler's admission policy)."""
+        """Admit a request (False + a ``rejected``/``shed`` RequestOutput if
+        it would overflow the cache buffer under the scheduler's admission
+        policy, or was load-shed from a full bounded queue)."""
         req.t_submit = time.perf_counter()
-        if self.scheduler.add(req):
-            return True
-        self.stats.rejected += 1
-        self._finished.append(req.output())
-        return False
+        admitted = self.scheduler.add(req)
+        if not admitted:
+            self._finalize(req)
+        self._drain_shed()      # the bounded queue may have evicted a waiter
+        return admitted
+
+    def add_request(self, req: Request) -> tuple:
+        """``submit`` plus the backpressure signal: returns ``(admitted,
+        backpressure)`` where backpressure is the waiting-queue fill
+        fraction in [0, 1] (0.0 when the queue is unbounded). Callers use
+        it to slow their offered load before shedding starts."""
+        admitted = self.submit(req)
+        return admitted, self.backpressure
+
+    @property
+    def backpressure(self) -> float:
+        return float(getattr(self.scheduler, "backpressure", 0.0))
 
     def outputs(self) -> list[RequestOutput]:
         """Finished (completed + rejected) requests, in finish order."""
@@ -210,7 +264,10 @@ class LLMEngine:
         req.emit(tok)
         self.slots[i] = req
         self._prefill_done[i] = req.prompt_len
-        self.slot_remaining[i] = req.max_new_tokens - 1
+        # out_tokens already includes this emission; for a recomputed
+        # request it also includes everything generated pre-preemption, so
+        # the remaining budget resumes exactly where the eviction cut it
+        self.slot_remaining[i] = req.max_new_tokens - len(req.out_tokens)
         self.stats.prefills += 1
         self.stats.tokens_out += 1
         # eos outranks length (same priority as the decode path): a request
@@ -223,13 +280,42 @@ class LLMEngine:
     def _finish(self, i: int, reason: str) -> None:
         req = self.slots[i]
         req.finish_reason = reason
-        self._finished.append(req.output())
         self.slots[i] = None
         # re-arm the freed slot as greedy so one finished sampling request
         # doesn't pin every later fused step on the slow mixed-sampling
         # branch (the all-greedy fast path tests ALL B rows)
         self.core.clear_sampling(i)
-        self.stats.completed += 1
+        self._finalize(req)
+
+    def _finalize(self, req: Request) -> None:
+        """Book a terminal request: output record, per-reason counter, and
+        the exactly-once ``on_finish`` notification."""
+        out = req.output()
+        self._finished.append(out)
+        r = req.finish_reason
+        st = self.stats
+        if r in (FINISH_EOS, FINISH_LENGTH):
+            st.completed += 1
+        elif r == FINISH_REJECTED:
+            st.rejected += 1
+        elif r == FINISH_TIMEOUT:
+            st.timeouts += 1
+        elif r in (FINISH_SHED, FINISH_PREEMPTED):
+            st.shed += 1
+        elif r == FINISH_ERROR:
+            st.errors += 1
+        if req.on_finish is not None and not req._notified:
+            req._notified = True
+            req.on_finish(out)
+
+    def _drain_shed(self) -> None:
+        """Finalize load-shed victims the scheduler evicted from its
+        bounded queue (they were already marked SHED/PREEMPTED)."""
+        shed = getattr(self.scheduler, "shed", None)
+        if shed:
+            for req in shed:
+                self._finalize(req)
+            shed.clear()
 
     # -- the step loop -----------------------------------------------------
 
@@ -238,8 +324,18 @@ class LLMEngine:
         one ``EngineCore.step``, commit the results. Returns the remaining
         work — occupied slots after the step plus queued waiting requests —
         so ``while eng.step(): ...`` drains fully even when every occupied
-        slot finishes in the same iteration (0 = engine fully idle)."""
+        slot finishes in the same iteration (0 = engine fully idle).
+
+        Failure is a first-class outcome here: expired deadlines finish
+        FINISH_TIMEOUT before scheduling; scheduler-decided preemptions are
+        executed (evict + recompute-requeue) before the device call; a step
+        exception triggers watchdog recovery instead of propagating."""
+        self._expire_deadlines()
+        self._drain_shed()
         so = self._schedule()
+        for i in so.preempt_slots:      # evict + recompute-requeue
+            self._requeue_slot(i, preempt=True)
+        self._drain_shed()              # requeue into a full queue sheds
         if so.empty:
             return self._remaining()
         last = np.zeros(self.B, np.int32)
@@ -253,9 +349,83 @@ class LLMEngine:
             for i, req in pg.slot_reqs:
                 self.slots[i] = req
                 self._prefill_done[i] = 0
-        out = self.core.step(so, last)
+        t0 = time.perf_counter()
+        try:
+            out = self.core.step(so, last)
+        except Exception:               # watchdog: step crashed — recover
+            self._recover()
+            return self._remaining()
+        # Stall watchdog: measure around the core call (injected/organic
+        # stalls may fall outside the core's phase timers). The step's
+        # output is valid — commit it first, then rebuild so the next step
+        # runs on a fresh core; recompute keeps streams identical.
+        stalled = (self.step_timeout_s is not None
+                   and time.perf_counter() - t0 > self.step_timeout_s)
         self._commit(so, out)
+        if stalled:
+            self.stats.stalls += 1
+            self._recover()
         return self._remaining()
+
+    def _expire_deadlines(self) -> None:
+        """Finish expired requests as FINISH_TIMEOUT — queued requests via
+        the scheduler, running ones straight out of their slot."""
+        now = time.perf_counter()
+        if hasattr(self.scheduler, "pop_expired"):
+            for req in self.scheduler.pop_expired(now):
+                self._finalize(req)
+        for i in range(self.B):
+            req = self.slots[i]
+            if req is not None and req.expired:
+                self._finish(i, FINISH_TIMEOUT)
+
+    def _requeue_slot(self, i: int, *, preempt: bool) -> None:
+        """Evict slot ``i`` and re-enqueue its request for recompute: stash
+        the PRNG key (sampled streams resume exactly), rewrite the prompt to
+        original + generated tokens (chunked prefill rebuilds the context),
+        reset prefill progress. ``preempt=True`` books it as a preemption;
+        recovery requeues are not preemptions."""
+        req = self.slots[i]
+        self.slots[i] = None
+        self.core.clear_sampling(i)
+        self._prefill_done[i] = 0
+        self.slot_remaining[i] = 0
+        if req.prompt_len_orig is None:
+            req.prompt_len_orig = req.prompt_len
+        # tokens generated since the LAST rewrite (the prompt already holds
+        # everything generated before an earlier preemption)
+        new_tail = req.out_tokens[req.prompt_len - req.prompt_len_orig:]
+        if new_tail:
+            req.prompt = np.concatenate(
+                [np.asarray(req.prompt, np.int32),
+                 np.asarray(new_tail, np.int32)])
+        req.resume_key = np.array(self.core.keys[i])
+        if preempt:
+            req.preemptions += 1
+            self.stats.preemptions += 1
+        if hasattr(self.scheduler, "requeue"):
+            self.scheduler.requeue(req)
+        else:                           # legacy scheduler: re-admit FCFS
+            self.scheduler.add(req)
+
+    def _recover(self) -> None:
+        """Watchdog recovery: requeue every live slot recompute-style, then
+        rebuild the core. Compile state carries over — the fused step fns
+        are lru-cached per config, so the rebuilt core re-uses their traces;
+        the fault-plan step index carries forward so a step-pinned fault
+        fires once per run, not once per core."""
+        for i in range(self.B):
+            if self.slots[i] is not None:
+                self._requeue_slot(i, preempt=False)
+        self._drain_shed()
+        old = self.core
+        self.core = EngineCore(self.params, self.cfg, batch_slots=self.B,
+                               buffer_len=self.T, window=self.chunk or 0,
+                               packed=self.packed, faults=self.faults)
+        self.core.step_idx = old.step_idx
+        self.core.prefill_compiles = old.prefill_compiles
+        self.core.step_shapes = old.step_shapes
+        self.stats.recoveries += 1
 
     def _remaining(self) -> int:
         return (sum(s is not None for s in self.slots)
@@ -265,6 +435,10 @@ class LLMEngine:
         for c in so.chunks:
             self._prefill_done[c.slot] += c.length
         self.stats.chunk_tokens += sum(c.length for c in so.chunks)
+        # NaN quarantine: a slot whose emitted logits went non-finite got no
+        # token this step; its request is terminal, the engine keeps serving
+        for i in out.bad_slots:
+            self._finish(i, FINISH_ERROR)
         for i, tok in out.first_tokens.items():
             self._commit_first_token(i, self.slots[i], tok)
         for i, tok in out.decode_tokens.items():

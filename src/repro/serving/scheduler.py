@@ -27,13 +27,13 @@ adapts) and are passed to ``LLMEngine``.
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
 from typing import Optional
 
 import numpy as np
 
 from repro.core.ovsf import next_pow2
-from repro.serving.api import FINISH_REJECTED, Request
+from repro.serving.api import (FINISH_PREEMPTED, FINISH_REJECTED,
+                               FINISH_SHED, FINISH_TIMEOUT, Request)
 
 
 def bucket_lengths(buffer_len: int, *, min_bucket: int = 8,
@@ -102,15 +102,21 @@ class SchedulerOutput:
     Chunked mode fills ``decode_slots`` + ``chunks`` (executed together in
     one fused window call); legacy mode fills ``decode_slots`` +
     ``prefill_groups`` (groups first, then the fused decode call).
+    ``preempt_slots`` (``admission="preempt"``) are running slots the engine
+    must evict *before* executing the step — they are excluded from
+    ``decode_slots``/``chunks``, their requests are re-enqueued for
+    recompute, and the freed slots become schedulable next iteration.
     """
     decode_slots: tuple = ()        # slots advancing one generated token
     chunks: tuple = ()              # ChunkTask prompt slices this step
     prefill_groups: tuple = ()      # PrefillAssignment (legacy mode)
+    preempt_slots: tuple = ()       # slots to evict + recompute-requeue
     n_scheduled_tokens: int = 0
 
     @property
     def empty(self) -> bool:
-        return not (self.decode_slots or self.chunks or self.prefill_groups)
+        return not (self.decode_slots or self.chunks or self.prefill_groups
+                    or self.preempt_slots)
 
 
 # ---------------------------------------------------------------------------
@@ -242,7 +248,19 @@ class FCFSScheduler:
     ``admission``: ``"reject"`` marks overflowing requests FINISH_REJECTED at
     ``add`` time; ``"truncate"`` clamps ``max_new_tokens`` to the remaining
     buffer (prompts longer than ``buffer_len - 1`` are rejected either way —
-    there is no principled way to truncate a prompt on the engine's behalf).
+    there is no principled way to truncate a prompt on the engine's behalf);
+    ``"preempt"`` admits like ``"reject"`` but additionally evicts the
+    lowest-priority running slot when a strictly-higher-priority request is
+    waiting and no slot is free (``SchedulerOutput.preempt_slots``) — the
+    victim is recomputed, not lost. Requires ``chunk_size`` (recompute rides
+    the chunked-prefill path).
+
+    The waiting queue is priority-ordered: higher ``Request.priority``
+    first, FCFS (submission order) within a level. With ``max_waiting`` set
+    the queue is bounded and overloads **load-shed**: the least-urgent
+    request (the new one, or a queued lower-priority victim) finishes as
+    FINISH_SHED — shed victims surface in ``self.shed`` for the engine to
+    finalize.
 
     ``chunk_size``: when set, ``schedule`` interleaves fixed-size prompt
     chunks with decode (one unified step per iteration — long queued prompts
@@ -252,33 +270,125 @@ class FCFSScheduler:
 
     def __init__(self, buffer_len: int, *, admission: str = "reject",
                  min_bucket: int = 8, bucketing: bool = True,
-                 chunk_size: Optional[int] = None):
-        if admission not in ("reject", "truncate"):
+                 chunk_size: Optional[int] = None,
+                 max_waiting: Optional[int] = None):
+        if admission not in ("reject", "truncate", "preempt"):
             raise ValueError(f"admission policy {admission!r}")
+        if admission == "preempt" and chunk_size is None:
+            raise ValueError(
+                "admission='preempt' requires chunk_size: preempted "
+                "requests are recomputed via chunked prefill")
         if chunk_size is not None and chunk_size < 1:
             raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+        if max_waiting is not None and max_waiting < 1:
+            raise ValueError(f"max_waiting must be >= 1, got {max_waiting}")
         self.buffer_len = buffer_len
         self.admission = admission
         self.bucketing = bucketing
         self.chunk_size = chunk_size
+        self.max_waiting = max_waiting
         self.buckets = bucket_lengths(buffer_len, min_bucket=min_bucket)
-        self.waiting: deque[Request] = deque()
+        self.waiting: list[Request] = []
+        self.shed: list[Request] = []   # load-shed victims awaiting finalize
+        self._seq = 0
 
     def __len__(self) -> int:
         return len(self.waiting)
 
+    @property
+    def backpressure(self) -> float:
+        """Queue fill fraction in [0, 1]; 0.0 when unbounded."""
+        if not self.max_waiting:
+            return 0.0
+        return min(len(self.waiting) / self.max_waiting, 1.0)
+
+    # -- priority-FCFS queue order ------------------------------------------
+
+    def _key(self, req: Request):
+        # higher priority first; FCFS (admission seq) within a level — a
+        # requeued preempted request keeps its original seq, so it resumes
+        # ahead of younger same-priority waiters
+        return (-req.priority, req._sched_seq)
+
+    def _sorted_idx(self) -> list[int]:
+        return sorted(range(len(self.waiting)),
+                      key=lambda i: self._key(self.waiting[i]))
+
+    def _peek(self) -> Optional[Request]:
+        if not self.waiting:
+            return None
+        return min(self.waiting, key=self._key)
+
+    def _pop_next(self) -> Request:
+        i = min(range(len(self.waiting)),
+                key=lambda i: self._key(self.waiting[i]))
+        return self.waiting.pop(i)
+
+    def _shed_victim_idx(self) -> int:
+        """Least-urgent queued request: lowest priority, youngest within."""
+        return max(range(len(self.waiting)),
+                   key=lambda i: (-self.waiting[i].priority,
+                                  self.waiting[i]._sched_seq))
+
     def add(self, req: Request) -> bool:
-        """Admit or reject. Rejected requests get FINISH_REJECTED set."""
+        """Admit, reject, or load-shed. Rejected requests get
+        FINISH_REJECTED; shed requests FINISH_SHED (victims evicted from a
+        full bounded queue land in ``self.shed``)."""
         plen = req.prompt_len
         overflow = plen + req.max_new_tokens > self.buffer_len
         if plen < 1 or plen > self.buffer_len - 1 or (
-                overflow and self.admission == "reject"):
+                overflow and self.admission != "truncate"):
             req.finish_reason = FINISH_REJECTED
             return False
         if overflow:  # admission == "truncate"
             req.max_new_tokens = self.buffer_len - plen
+        if req._sched_seq is None:
+            req._sched_seq = self._seq
+            self._seq += 1
+        if self.max_waiting and len(self.waiting) >= self.max_waiting:
+            vi = self._shed_victim_idx()
+            if self.waiting[vi].priority < req.priority:
+                victim = self.waiting.pop(vi)   # evict a less urgent waiter
+                victim.finish_reason = FINISH_SHED
+                self.shed.append(victim)
+            else:
+                req.finish_reason = FINISH_SHED
+                return False
         self.waiting.append(req)
         return True
+
+    def requeue(self, req: Request) -> bool:
+        """Re-enqueue a preempted request for recompute. Bypasses admission
+        (it was already admitted; its total cache need is unchanged) but
+        respects the queue bound: into a full queue it displaces a
+        less-urgent waiter, or — when every waiter is at least as urgent —
+        is dropped as FINISH_PREEMPTED (the one case preemption is lossy)."""
+        if self.max_waiting and len(self.waiting) >= self.max_waiting:
+            vi = self._shed_victim_idx()
+            victim = self.waiting[vi]
+            if (victim.priority, -victim._sched_seq) < (req.priority,
+                                                        -req._sched_seq):
+                self.waiting.pop(vi)
+                victim.finish_reason = FINISH_SHED
+                self.shed.append(victim)
+            else:
+                req.finish_reason = FINISH_PREEMPTED
+                self.shed.append(req)
+                return False
+        self.waiting.append(req)
+        return True
+
+    def pop_expired(self, now: float) -> list[Request]:
+        """Remove and return waiting requests whose deadline has passed
+        (marked FINISH_TIMEOUT; the engine finalizes their outputs)."""
+        expired = [r for r in self.waiting
+                   if r.deadline_s is not None and r.t_submit > 0.0
+                   and now - r.t_submit > r.deadline_s]
+        if expired:
+            self.waiting = [r for r in self.waiting if r not in expired]
+            for r in expired:
+                r.finish_reason = FINISH_TIMEOUT
+        return expired
 
     def bucket_of(self, req: Request) -> int:
         if not self.bucketing:
@@ -286,22 +396,19 @@ class FCFSScheduler:
         return bucket_for(req.prompt_len, self.buckets)
 
     def next_group(self, max_size: int) -> Optional[PrefillGroup]:
-        """Pop the next prefill group: the head-of-queue request plus up to
-        ``max_size - 1`` younger same-bucket requests (queue order kept)."""
+        """Pop the next prefill group: the head-of-queue request (highest
+        priority, oldest within) plus up to ``max_size - 1`` younger
+        same-bucket requests (queue order kept)."""
         if not self.waiting or max_size < 1:
             return None
-        head = self.waiting[0]
-        bucket = self.bucket_of(head)
-        picked = []
-        rest = deque()
-        while self.waiting and len(picked) < max_size:
-            r = self.waiting.popleft()
-            if self.bucket_of(r) == bucket:
-                picked.append(r)
-            else:
-                rest.append(r)
-        rest.extend(self.waiting)
-        self.waiting = rest
+        order = self._sorted_idx()
+        bucket = self.bucket_of(self.waiting[order[0]])
+        picked_idx = [i for i in order
+                      if self.bucket_of(self.waiting[i]) == bucket][:max_size]
+        picked = [self.waiting[i] for i in picked_idx]
+        taken = set(picked_idx)
+        self.waiting = [r for i, r in enumerate(self.waiting)
+                        if i not in taken]
         return PrefillGroup(bucket, picked)
 
     # -- per-iteration step scheduling --------------------------------------
@@ -315,17 +422,33 @@ class FCFSScheduler:
         prefill_done)]`` for occupied slots (``prefill_done == prompt_len``
         means the slot is decoding); ``free_slots`` are unoccupied slot ids.
 
-        Chunked mode: decode slots are scheduled first and never preempted
-        (partially decoding a fused batch would desynchronise slot caches);
-        the remaining ``token_budget`` is split FCFS across prompt chunks —
-        continuing partial prefills before new admissions, each capped at
-        ``chunk_size`` tokens. Legacy mode: all running slots decode, and
-        free slots are filled with whole bucketed prefill groups
-        (``exact_prefill`` forces per-request native-length prefill).
+        Chunked mode: decode slots are scheduled first and never silently
+        dropped (partially decoding a fused batch would desynchronise slot
+        caches); the remaining ``token_budget`` is split across prompt
+        chunks — highest priority first, FCFS within a level, continuing
+        partial prefills before new admissions, each capped at
+        ``chunk_size`` tokens. Under ``admission="preempt"``, when no slot
+        is free and the waiting head has strictly higher priority than the
+        least-urgent running slot, that slot is listed in ``preempt_slots``
+        (at most one per step) and excluded from this step's work — the
+        engine evicts it and re-enqueues its request for recompute. Legacy
+        mode: all running slots decode, and free slots are filled with
+        whole bucketed prefill groups (``exact_prefill`` forces per-request
+        native-length prefill).
         """
         if self.chunk_size is None:
             return self._schedule_legacy(running, free_slots, exact_prefill)
         chunk = self.chunk_size
+        preempt: tuple = ()
+        if self.admission == "preempt" and running and not free_slots:
+            head = self._peek()
+            # victim: lowest priority, youngest within (max _sched_seq)
+            vslot, vreq, _vd = min(
+                running, key=lambda t: (t[1].priority, -(t[1]._sched_seq
+                                                         or 0)))
+            if head is not None and head.priority > vreq.priority:
+                preempt = (vslot,)
+                running = [t for t in running if t[0] != vslot]
         decodes = [s for s, req, done in running if done >= req.prompt_len]
         budget = (token_budget if token_budget is not None
                   else len(decodes) + chunk * max(len(running)
@@ -348,7 +471,9 @@ class FCFSScheduler:
         for slot in free_slots:
             if not self.waiting or budget <= 0:
                 break
-            req = self.waiting.popleft()
+            req = self._pop_next()
+            # a recomputed request prefills its full rewritten prompt
+            # (original + already-generated tokens) from position 0
             take = min(chunk, req.prompt_len, budget)
             chunks.append(ChunkTask(slot, req, 0, take,
                                     take >= req.prompt_len))
@@ -356,6 +481,7 @@ class FCFSScheduler:
         n_tok = len(decodes) + sum(c.length for c in chunks)
         return SchedulerOutput(decode_slots=tuple(decodes),
                                chunks=tuple(chunks),
+                               preempt_slots=preempt,
                                n_scheduled_tokens=n_tok)
 
     def _schedule_legacy(self, running, free_slots,

@@ -79,5 +79,5 @@ def test_restore_shape_mismatch_raises(tmp_path):
     tree = {"w": jnp.zeros((2, 2))}
     ckpt.save(tree, str(tmp_path), 1)
     bad = {"w": jax.ShapeDtypeStruct((3, 3), jnp.float32)}
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError, match=r"leaf 'w'.*\(2, 2\).*\(3, 3\)"):
         ckpt.restore(str(tmp_path), template=bad)

@@ -114,6 +114,34 @@ def test_engine_rejected_request_surfaces_as_output(tiny):
     assert out.n_tokens == 0
 
 
+def test_admission_truncate_exact_fit_is_untouched():
+    # Edge: plen + max_new == buffer_len fills the cache exactly — truncate
+    # must admit it without clamping (clamping would silently shorten a
+    # request that was never oversubscribed).
+    s = FCFSScheduler(32, admission="truncate")
+    r = _req(0, 10, max_new=22)                       # 10 + 22 == 32 exactly
+    assert s.add(r)
+    assert r.max_new_tokens == 22                     # untouched
+    over = _req(1, 10, max_new=23)                    # one past the edge
+    assert s.add(over)
+    assert over.max_new_tokens == 22                  # clamped to the fit
+
+
+def test_rejected_request_fires_on_finish_exactly_once(tiny):
+    cfg, params = tiny
+    eng = LLMEngine(params, cfg, batch_slots=2, buffer_len=32)
+    calls = []
+    req = _req(3, 30, max_new=10, vocab=cfg.vocab,
+               on_finish=lambda out: calls.append(out))
+    assert not eng.submit(req)
+    assert len(calls) == 1                            # exactly once
+    assert calls[0].finish_reason == FINISH_REJECTED
+    assert calls[0].rid == 3 and calls[0].n_tokens == 0
+    # draining the engine must not re-notify the dead request
+    eng.run_until_drained()
+    assert len(calls) == 1
+
+
 # ---------------------------------------------------------------------------
 # Bucketed batched prefill: compile bound + exactness already covered in
 # test_data_serving; here the trace-count contract.
