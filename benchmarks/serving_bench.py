@@ -37,6 +37,11 @@ Three comparisons, all written to ``BENCH_serving.json``:
   request). The bench records degraded vs fault-free throughput and in
   full mode RAISES if the ratio drops below 0.8x — recovery must cost
   recompute of in-flight work, not a collapse of the serving rate.
+* **paged KV capacity**: a contiguous engine pins ``buffer_len`` tokens of
+  KV per slot no matter how short the request; the paged engine spends the
+  same HBM budget as a shared page pool, so short requests pin only the
+  pages they touch. Peak concurrent requests at a fixed budget, paged vs
+  contiguous — deterministic slot accounting, RAISES below 2x (smoke too).
 
 ``--hw`` threads any registered HW target (v5e/v5p/v6e/cpu) into the
 mapper's execution planning (the model still *runs* on the host backend).
@@ -70,6 +75,11 @@ PACKED_GATE = 1.15       # packed must beat the padded window by this factor
                          # on throughput OR ITL p95 (full mode; raises)
 FAULT_GATE = 0.8         # chaos throughput floor vs fault-free (full mode):
                          # recovery = recompute, not collapse
+PAGED_CAPACITY_GATE = 2.0    # paged KV must hold >= 2x the concurrent
+                             # requests of contiguous slots at the same HBM
+                             # budget (deterministic slot accounting — the
+                             # gate applies in smoke mode too)
+PAGE_SIZE = 16           # paged-capacity bench page size (tokens/page)
 CHAOS_SPECS = ("delay:p=0.1,s=0.002",   # ~10% of steps stall 2ms
                "fail:step=5",           # one step crash -> rebuild + replay
                "nan:step=3,slot=0")     # one poisoned logits row
@@ -372,6 +382,58 @@ def run(print_fn=print, smoke: bool = False,
             f"baseline under ~10% injected step faults (need "
             f">= {FAULT_GATE}x)")
 
+    # -- paged KV capacity: concurrency at a fixed HBM budget ---------------
+    # A contiguous engine pins buffer_len tokens of KV per slot no matter
+    # how short the request, so a kv-budget of B*buf tokens caps concurrency
+    # at B. The paged engine spends the SAME budget as a shared page pool:
+    # short requests pin only the pages they touch, so many more of them
+    # decode concurrently. Short-request workload (1 page per request
+    # lifetime) on 4x the slots; peak simultaneously-occupied slots is the
+    # measured capacity. Deterministic, so the >= 2x gate raises in smoke
+    # mode too.
+    kv_budget_tokens = B * buf
+    paged_slots = 4 * B
+
+    def paged_capacity():
+        eng = LLMEngine(params, cfg, batch_slots=paged_slots, buffer_len=buf,
+                        hw=hw, chunk_size=chunk_size, paged=True,
+                        page_size=PAGE_SIZE,
+                        kv_pages=kv_budget_tokens // PAGE_SIZE)
+        rng = np.random.default_rng(3)
+        for rid in range(paged_slots):
+            # 4 prompt + 12 generated = 16 tokens: one PAGE_SIZE page each
+            eng.submit(Request(rid,
+                               rng.integers(0, cfg.vocab, 4, dtype=np.int32),
+                               max_new_tokens=12))
+        peak = 0
+        while True:
+            remaining = eng.step()
+            peak = max(peak, sum(s is not None for s in eng.slots))
+            if remaining == 0:
+                break
+        return eng, eng.stats, peak
+
+    eng_pc, stats_pc, paged_peak = paged_capacity()
+    contiguous_cap = kv_budget_tokens // buf    # == B by construction
+    capacity_ratio = paged_peak / contiguous_cap
+    print_fn(f"serving_bench,paged_capacity,budget={kv_budget_tokens}tok,"
+             f"contiguous={contiguous_cap},paged_peak={paged_peak},"
+             f"ratio={capacity_ratio:.2f}x,"
+             f"kv_util={stats_pc.kv_utilization:.2f}")
+    if stats_pc.completed != paged_slots:
+        raise RuntimeError(
+            f"paged capacity bench: {stats_pc.completed}/{paged_slots} "
+            f"requests completed")
+    if eng_pc.core.pager.used_pages != 0:
+        raise RuntimeError("paged capacity bench leaked pages: "
+                           f"{eng_pc.core.pager.used_pages} still granted "
+                           f"after drain")
+    if capacity_ratio < PAGED_CAPACITY_GATE:
+        raise RuntimeError(
+            f"paged KV capacity regressed: {capacity_ratio:.2f}x the "
+            f"contiguous concurrency at a {kv_budget_tokens}-token budget "
+            f"(need >= {PAGED_CAPACITY_GATE}x)")
+
     result = {"bench": "serving", "smoke": smoke, "batch_slots": B,
               "model": cfg.name, "backend": jax.default_backend(), "hw": hw,
               "alpha_dtype": alpha_dtype,
@@ -419,6 +481,17 @@ def run(print_fn=print, smoke: bool = False,
                   "errors": stats_f.errors,
                   "stalls": stats_f.stalls,
                   "completed": stats_f.completed},
+              "paged_capacity": {
+                  "kv_budget_tokens": kv_budget_tokens,
+                  "page_size": PAGE_SIZE,
+                  "paged_slots": paged_slots,
+                  "contiguous_concurrency": contiguous_cap,
+                  "paged_peak_concurrency": paged_peak,
+                  "capacity_ratio": capacity_ratio,
+                  "kv_pages_total": stats_pc.kv_pages_total,
+                  "kv_pages_peak": stats_pc.kv_pages_used,
+                  "kv_utilization": stats_pc.kv_utilization,
+                  "completed": stats_pc.completed},
               "latency": lat}
     if json_path:
         with open(json_path, "w") as f:

@@ -145,6 +145,15 @@ class GemmLayer:
     # traffic the fused path has left, raising the roofline of IFM-bound
     # rows (unzipFPGA / Petrica et al.).
     alpha_dtype: str = ""
+    # KV-cache bytes this layer streams from HBM per step (attention score/
+    # value reads against the cached context: 2 * M * kv_len * kv_width *
+    # dtype_bytes, attached to the attn_o GEMM as the attention block's
+    # memory stage). Per-token traffic — scales with valid rows like the
+    # activations do, unlike the weight-side terms. A decode step at long
+    # context is IFM-bound on exactly this term: the memory-wall analogue
+    # of the paper's weight traffic, and what paging keeps dense (no dead
+    # buffer tail is ever read — pages hold only live tokens).
+    kv_bytes: float = 0.0
     # Valid rows out of M (0 = all M rows are real work). A padded serving
     # step carries dead rows — a decode slot inside a (B, W) window drags
     # W-1 padding columns through every GEMM — and the wasted-token term
@@ -234,7 +243,7 @@ class LayerTiming:
 def layer_timing(layer: GemmLayer, hw: HW = V5E) -> LayerTiming:
     M, di, do = layer.M, layer.d_in, layer.d_out
     by = layer.dtype_bytes
-    t_in = M * di * by / hw.hbm_bw
+    t_in = (M * di * by + layer.kv_bytes) / hw.hbm_bw
     t_out = M * do * by / hw.hbm_bw
     t_eng = 2.0 * M * di * do / hw.peak_flops
     t_w = 0.0
@@ -265,21 +274,29 @@ def layer_timing(layer: GemmLayer, hw: HW = V5E) -> LayerTiming:
             t_w += 2.0 * di * do * by / hw.hbm_bw
     t = LayerTiming(t_in, t_w, t_out, t_gen, t_eng, pipelined)
     if layer.m_valid and layer.valid_rows < M:
+        # kv_bytes is per-token traffic: the ideal step at valid rows reads
+        # proportionally less cached context, like the activations
         ideal = layer_timing(
-            dataclasses.replace(layer, M=layer.valid_rows, m_valid=0), hw)
+            dataclasses.replace(layer, M=layer.valid_rows, m_valid=0,
+                                kv_bytes=layer.kv_bytes * layer.valid_rows
+                                / M), hw)
         t.t_wasted = max(t.ii - ideal.ii, 0.0)
     return t
 
 
 def model_layers(cfg, shape, *, n_devices: int = 256, tp: int = 16,
-                 m_valid: int = 0) -> list[GemmLayer]:
+                 m_valid: int = 0, kv_len: int = 0) -> list[GemmLayer]:
     """Expand a ModelConfig x ShapeConfig into per-device GEMM workloads.
 
     Decode: M = batch/dp tokens; train/prefill: M = batch*seq/dp. TP divides
     d_out (column-parallel) or d_in (row-parallel) per Megatron convention.
     ``m_valid`` marks how many of the M token rows are real work (0 = all):
     a padded serving step models as M = batch tokens with m_valid = valid
-    tokens, pricing the dead rows (``LayerTiming.t_wasted``).
+    tokens, pricing the dead rows (``LayerTiming.t_wasted``). ``kv_len``
+    is the mean cached context length each token row attends over; it
+    attaches the per-step KV-read bytes to each attention block's output
+    GEMM (``GemmLayer.kv_bytes``), growing the modeled II as the context
+    grows — the serving memory wall the perf model must price.
     """
     dp = max(n_devices // tp, 1)
     if shape.kind == "decode":
@@ -304,6 +321,11 @@ def model_layers(cfg, shape, *, n_devices: int = 256, tp: int = 16,
                          m_valid=mv)
 
     d, hd = cfg.d_model, cfg.hd
+    # KV bytes per attention block per step: each of the M rows reads the
+    # cached K AND V (hence 2x) across kv_len positions at the per-device
+    # KV width. Attached to attn_o — the GEMM the attention outputs feed.
+    kv_by = (2.0 * M * kv_len * max(cfg.n_kv_heads * hd // tp, hd) * 2
+             if kv_len else 0.0)
     layers: list[GemmLayer] = []
     for i in range(cfg.n_layers):
         if cfg.n_heads:
@@ -311,7 +333,9 @@ def model_layers(cfg, shape, *, n_devices: int = 256, tp: int = 16,
                 mk(f"L{i}/attn_q", d, cfg.n_heads * hd // tp, "attn"),
                 mk(f"L{i}/attn_k", d, max(cfg.n_kv_heads * hd // tp, hd), "attn"),
                 mk(f"L{i}/attn_v", d, max(cfg.n_kv_heads * hd // tp, hd), "attn"),
-                mk(f"L{i}/attn_o", cfg.n_heads * hd // tp, d, "attn"),
+                dataclasses.replace(
+                    mk(f"L{i}/attn_o", cfg.n_heads * hd // tp, d, "attn"),
+                    kv_bytes=kv_by),
             ]
         if cfg.n_experts:
             # routed experts: per token top_k experts touched; per device the
@@ -371,17 +395,18 @@ def model_timing(layers: list[GemmLayer], hw: HW = V5E) -> ModelTiming:
 
 
 def serve_step_timing(cfg, *, valid_tokens: int, batch_tokens: int,
-                      hw: HW = V5E, n_devices: int = 1, tp: int = 1
-                      ) -> ModelTiming:
+                      hw: HW = V5E, n_devices: int = 1, tp: int = 1,
+                      kv_len: int = 0) -> ModelTiming:
     """Model one serving step that batches ``batch_tokens`` rows of which
     ``valid_tokens`` are real work — the padded (B, W) window step vs its
     token-packed replacement, priced on the same analytical model the
     mapper/calibration loop uses. ``ShapeConfig`` is decode-kind with the
-    batch-token count as the per-step row dimension."""
+    batch-token count as the per-step row dimension. ``kv_len`` adds the
+    KV-cache read bytes each row streams against its cached context."""
     from repro.configs.base import ShapeConfig
     shape = ShapeConfig("serve_step", 1, batch_tokens, "decode")
     layers = model_layers(cfg, shape, n_devices=n_devices, tp=tp,
-                          m_valid=valid_tokens)
+                          m_valid=valid_tokens, kv_len=kv_len)
     return model_timing(layers, hw)
 
 

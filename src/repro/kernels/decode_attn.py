@@ -97,13 +97,113 @@ def flash_decode_attn(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
 
 def flash_decode_attn_ref(q, k, v, pos):
     """jnp oracle (same math as models.attention.sdpa at S=1)."""
-    B, H, hd = q.shape
-    T, Hkv = k.shape[1], k.shape[2]
+    from repro.kernels.ref import decode_attn_ref
+    return decode_attn_ref(q, k, v, pos)
+
+
+# -- paged flash decode -------------------------------------------------------
+#
+# Segment-aware variant for the paged KV cache (serving/kvcache.py): queries
+# arrive token-packed (T,) — the pack_step stream, whose cu_seqlens carry the
+# per-slot segment boundaries — and K/V live in (P, page_size, Hkv, hd) pools
+# indexed by a (n_slots + 1, max_pages) page table. The grid walks each
+# token's page list directly: the page-table lookup happens inside the k/v
+# BlockSpec index_map (scalar-prefetch), so only that slot's granted pages
+# ever stream HBM->VMEM — the dense worst-case (T, Tbuf) gather view of
+# attn_apply_packed is never materialised. Masking is position-bounded and
+# inclusive (virtual column <= positions[t]), exactly attn_apply_packed's
+# causal rule, so padding tokens (slot_id == n_slots, position 0) read the
+# sentinel row's clamped page and are fully discarded by the caller.
+
+
+def _paged_kernel(pt_ref, sid_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, ps: int, npg: int, scale: float):
+    t = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[t]
+
+    @pl.when(j * ps <= pos)       # pages wholly past the position contribute
+    def _accum():                 # nothing — skip their compute entirely
+        q = q_ref[0, 0].astype(jnp.float32) * scale   # (G, hd)
+        k = k_ref[0, :, 0].astype(jnp.float32)        # (ps, hd)
+        v = v_ref[0, :, 0].astype(jnp.float32)        # (ps, hd)
+
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (G, ps)
+        col = j * ps + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(col <= pos, s, -1e30)
+
+        m_prev = m_ref[...]                            # (G, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == npg - 1)
+    def _flush():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_flash_decode(q: jnp.ndarray, k_pool: jnp.ndarray,
+                       v_pool: jnp.ndarray, page_table: jnp.ndarray,
+                       slot_ids: jnp.ndarray, positions: jnp.ndarray, *,
+                       interpret: bool = False) -> jnp.ndarray:
+    """Packed-token GQA attention over paged K/V pools.
+
+    q:           (T, H, hd)   packed token stream (GQA: H = G * Hkv)
+    k/v_pool:    (P, ps, Hkv, hd)  one layer's page pools
+    page_table:  (n_slots + 1, max_pages) int32; sentinel entries carry P
+    slot_ids:    (T,)  owning slot per token (n_slots = padding)
+    positions:   (T,)  cache position per token (mask: col <= position)
+
+    Oracle: ``kernels.ref.paged_decode_attn_ref``.
+    """
+    T, H, hd = q.shape
+    P, ps, Hkv, _ = k_pool.shape
     G = H // Hkv
-    qf = q.reshape(B, Hkv, G, hd).astype(jnp.float32) / float(hd) ** 0.5
-    s = jnp.einsum("bngd,btnd->bngt", qf, k.astype(jnp.float32))
-    mask = jnp.arange(T)[None, None, None, :] < jnp.asarray(pos).reshape(-1, 1, 1, 1)
-    s = jnp.where(mask, s, -1e30)
-    p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bngt,btnd->bngd", p, v.astype(jnp.float32))
-    return o.reshape(B, H, hd).astype(q.dtype)
+    npg = page_table.shape[1]
+    scale = 1.0 / float(hd) ** 0.5
+    qg = q.reshape(T, Hkv, G, hd)
+    # clamp sentinel entries host-side: the index_map stays a pure lookup
+    # and the clamped page matches the oracle (the mask discards it anyway)
+    pt = jnp.clip(page_table.astype(jnp.int32), 0, P - 1)
+    sid = slot_ids.astype(jnp.int32)
+    pos = positions.astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(T, Hkv, npg),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd),
+                         lambda t, h, j, pt, sid, pos: (t, h, 0, 0)),
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda t, h, j, pt, sid, pos: (pt[sid[t], j], 0, h, 0)),
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda t, h, j, pt, sid, pos: (pt[sid[t], j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda t, h, j, pt, sid, pos: (t, h, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((G, 1), jnp.float32),
+                        pltpu.VMEM((G, 1), jnp.float32),
+                        pltpu.VMEM((G, hd), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, ps=ps, npg=npg, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, Hkv, G, hd), q.dtype),
+        interpret=interpret,
+    )(pt, sid, pos, qg, k_pool, v_pool)
+    return out.reshape(T, H, hd)

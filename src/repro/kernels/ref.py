@@ -5,6 +5,7 @@ and by CPU execution paths. They must stay boring and obviously correct.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -68,6 +69,62 @@ def fwht_decompress_ref(alphas: jnp.ndarray, idx: jnp.ndarray, d_in: int
     full = jnp.zeros((d_out, L), alphas.dtype).at[:, idx].set(alphas.T)
     w = ovsf.fwht(full, axis=-1)[:, :d_in]  # (d_out, d_in)
     return w.T
+
+
+def decode_attn_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    pos) -> jnp.ndarray:
+    """Oracle for ``decode_attn.flash_decode_attn``: single-token GQA
+    attention over a contiguous cache buffer.
+
+    q: (B, H, hd); k/v: (B, T, Hkv, hd); pos is the fill level (scalar or
+    (B,)) — cache columns ``>= pos`` are masked (exclusive: the new token's
+    K/V has not been written yet on this path). f32 throughout, same math
+    as ``models.attention.sdpa`` at S=1.
+    """
+    B, H, hd = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    qf = q.reshape(B, Hkv, G, hd).astype(jnp.float32) / float(hd) ** 0.5
+    s = jnp.einsum("bngd,btnd->bngt", qf, k.astype(jnp.float32))
+    mask = (jnp.arange(T)[None, None, None, :]
+            < jnp.asarray(pos).reshape(-1, 1, 1, 1))
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bngt,btnd->bngd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, hd).astype(q.dtype)
+
+
+def paged_decode_attn_ref(q: jnp.ndarray, k_pool: jnp.ndarray,
+                          v_pool: jnp.ndarray, page_table: jnp.ndarray,
+                          slot_ids: jnp.ndarray, positions: jnp.ndarray
+                          ) -> jnp.ndarray:
+    """Oracle for ``decode_attn.paged_flash_decode``: packed-token GQA
+    attention over paged K/V pools.
+
+    q: (T, H, hd) packed tokens; k_pool/v_pool: (P, page_size, Hkv, hd);
+    page_table: (n_slots + 1, max_pages) int32 (sentinel entries carry P);
+    slot_ids/positions: (T,). Each token gathers its slot's page list —
+    page j holds cache positions ``j*ps .. j*ps+ps-1``, so the list in
+    order is the virtual contiguous buffer — and masks virtual columns
+    ``> positions[t]`` (inclusive: the token's own K/V is already
+    scattered, matching ``attn_apply_packed``). Sentinel page ids clamp
+    to P-1; the position mask excludes everything they could contribute.
+    """
+    T, H, hd = q.shape
+    P, ps, Hkv, _ = k_pool.shape
+    G = H // Hkv
+    npg = page_table.shape[1]
+    pages = jnp.clip(page_table[slot_ids], 0, P - 1)        # (T, npg)
+    kt = k_pool[pages].reshape(T, npg * ps, Hkv, hd)
+    vt = v_pool[pages].reshape(T, npg * ps, Hkv, hd)
+    qf = q.reshape(T, Hkv, G, hd).astype(jnp.float32) / float(hd) ** 0.5
+    s = jnp.einsum("tngd,tcnd->tngc", qf, kt.astype(jnp.float32))
+    mask = (jnp.arange(npg * ps)[None, None, None, :]
+            <= positions.reshape(-1, 1, 1, 1))
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("tngc,tcnd->tngd", p, vt.astype(jnp.float32))
+    return o.reshape(T, H, hd).astype(q.dtype)
 
 
 def np_hadamard(L: int) -> np.ndarray:

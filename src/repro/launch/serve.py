@@ -10,7 +10,10 @@ switches to step-based serving: queued prompts feed through the decode-shaped
 path in N-token chunks, interleaved with decode in one fused call per step.
 ``--packed`` (with ``--chunk-size``) replaces the padded (B, W) window step
 with the token-packed step: only valid tokens reach the model, and the
-padding-efficiency counters are reported. ``--calibrate`` records measured
+padding-efficiency counters are reported. ``--paged`` (with
+``--chunk-size``; composes with ``--packed``) swaps the per-slot contiguous
+KV buffers for a paged pool (``--page-size`` tokens per page, ``--kv-pages``
+pool size) and reports the page-pool utilization counters. ``--calibrate`` records measured
 step times against the mapper's analytical model and reports which layers a
 calibrated re-plan would re-map (optionally saving the table with
 ``--calibration-out``).
@@ -81,6 +84,16 @@ def main(argv=None) -> None:
                     help="token-packed step: flatten the step's valid "
                          "tokens into one dense stream instead of the "
                          "padded (B, W) window (requires --chunk-size)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache: per-slot page tables over a "
+                         "shared page pool instead of per-slot contiguous "
+                         "buffers (requires --chunk-size; composes with "
+                         "--packed)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (--paged; must divide --buffer)")
+    ap.add_argument("--kv-pages", type=int, default=None,
+                    help="page-pool size (--paged; default slots*buffer/"
+                         "page_size — enough for every slot at full length)")
     ap.add_argument("--calibrate", action="store_true",
                     help="record measured-vs-modeled step times and report "
                          "the calibrated re-plan")
@@ -104,6 +117,8 @@ def main(argv=None) -> None:
 
     if args.packed and args.chunk_size is None:
         raise SystemExit("--packed requires --chunk-size")
+    if args.paged and args.chunk_size is None:
+        raise SystemExit("--paged requires --chunk-size")
     plan = FaultPlan.parse(args.inject, seed=args.seed)
     if plan:
         print(f"[serve] chaos: {len(plan.faults)} injector(s) armed "
@@ -113,7 +128,9 @@ def main(argv=None) -> None:
                     buffer_len=args.buffer, hw=args.hw,
                     bucketed_prefill=not args.no_bucketing,
                     admission=args.admission, chunk_size=args.chunk_size,
-                    packed=args.packed, calibrate=args.calibrate,
+                    packed=args.packed, paged=args.paged,
+                    page_size=args.page_size, kv_pages=args.kv_pages,
+                    calibrate=args.calibrate,
                     max_waiting=args.max_waiting,
                     step_timeout_s=args.step_timeout,
                     faults=plan if plan else None)
@@ -148,6 +165,11 @@ def main(argv=None) -> None:
           f"batch={stats.padded_tokens} "
           f"efficiency={stats.padding_efficiency:.2f}"
           + (" (packed)" if args.packed else ""))
+    if args.paged:
+        print(f"[serve] kv_pages: total={stats.kv_pages_total} "
+              f"peak_used={stats.kv_pages_used} "
+              f"peak_bytes={stats.kv_bytes_used} "
+              f"utilization={stats.kv_utilization:.2f}")
     print(f"[serve] weight_cache: hits={stats.weight_cache_hits} "
           f"misses={stats.weight_cache_misses} "
           f"entries={stats.weight_cache_entries} "

@@ -157,6 +157,59 @@ def attn_apply_packed(p: dict, cfg: ModelConfig, x: jnp.ndarray, *,
     return y, {"k": ck, "v": cv}
 
 
+def attn_apply_paged(p: dict, cfg: ModelConfig, x: jnp.ndarray, *,
+                     positions: jnp.ndarray, slot_ids: jnp.ndarray,
+                     page_table: jnp.ndarray,
+                     cache: dict) -> tuple[jnp.ndarray, dict]:
+    """Packed-query attention over *paged* K/V pools (serving/kvcache.py).
+
+    Same contract as ``attn_apply_packed`` except the cache is a shared
+    page pool instead of per-slot worst-case buffers: ``cache["k"]/["v"]``
+    are (P, page_size, Hkv, hd) and ``page_table`` is (n_slots + 1,
+    max_pages) int32 mapping (slot, page-index) -> physical page. Position
+    ``pos`` of a slot lives at ``(page_table[slot, pos // ps], pos % ps)``,
+    so a slot's pages in list order ARE its contiguous buffer virtually —
+    with ``max_pages * ps == Tbuf`` the gathered view, the position mask
+    and therefore the outputs are bit-identical to the contiguous path.
+
+    Sentinel entries (ungranted pages, and the whole padding row
+    ``n_slots``) carry P: scatters through them go out of bounds and drop
+    (``mode="drop"``), gathers clamp to page P-1 — reachable only at
+    virtual positions the ``<= positions[t]`` mask already excludes (the
+    engine grants pages covering every position written this step before
+    calling in). The segment-aware Pallas form of this gather-free walk is
+    ``kernels.decode_attn.paged_flash_decode``; this jnp path is the
+    oracle-equivalent used on hosts without a TPU lowering.
+    """
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    T = x.shape[1]
+    P, ps = cache["k"].shape[0], cache["k"].shape[1]
+    n_slots = page_table.shape[0] - 1
+    npg = page_table.shape[1]
+    q = _split_heads(L.linear_apply(p["q"], x, cfg, "attn_q"), H, hd)
+    k = _split_heads(L.linear_apply(p["k"], x, cfg, "attn_k"), Hkv, hd)
+    v = _split_heads(L.linear_apply(p["v"], x, cfg, "attn_v"), Hkv, hd)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+
+    kd = cache["k"].dtype
+    page_of = page_table[jnp.clip(slot_ids, 0, n_slots), positions // ps]
+    off = positions % ps
+    ck = cache["k"].at[page_of, off].set(_quant_like(k[0], kd), mode="drop")
+    cv = cache["v"].at[page_of, off].set(_quant_like(v[0], kd), mode="drop")
+
+    sid = jnp.clip(slot_ids, 0, n_slots - 1)
+    pages = jnp.clip(page_table[sid], 0, P - 1)              # (T, npg)
+    kt = ck[pages].reshape(T, npg * ps, Hkv, hd)
+    vt = cv[pages].reshape(T, npg * ps, Hkv, hd)
+    t = jnp.arange(npg * ps)
+    mask = t[None, None, :] <= positions[:, None, None]      # (T, 1, npg*ps)
+    out = sdpa(q[0][:, None], _dequant(kt, q.dtype),
+               _dequant(vt, q.dtype), mask)                  # (T, 1, H, hd)
+    y = L.linear_apply(p["o"], out.reshape(1, T, H * hd), cfg, "attn_o")
+    return y, {"k": ck, "v": cv}
+
+
 def cross_attn_packed(p: dict, cfg: ModelConfig, x: jnp.ndarray, *,
                       slot_ids: jnp.ndarray, cache: dict) -> jnp.ndarray:
     """Packed-query cross attention: each token attends its slot's

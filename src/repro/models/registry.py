@@ -48,12 +48,31 @@ def serve_step_packed(params, cfg, cache, tokens, slot_ids, positions,
                                positions, new_pos, emit_idx)
 
 
+def serve_step_paged(params, cfg, cache, page_table, tokens, slot_ids,
+                     positions, new_pos, emit_idx):
+    return T.serve_step_paged(params, cfg, cache, page_table, tokens,
+                              slot_ids, positions, new_pos, emit_idx)
+
+
+def serve_step_window_paged(params, cfg, cache, page_table, tokens, n_valid):
+    return T.serve_step_window_paged(params, cfg, cache, page_table, tokens,
+                                     n_valid)
+
+
 def cache_spec(cfg, B, T_len):
     return T.cache_spec(cfg, B, T_len)
 
 
 def init_cache(cfg, B, T_len):
     return T.init_cache(cfg, B, T_len)
+
+
+def paged_cache_spec(cfg, B, page_size, n_pages):
+    return T.paged_cache_spec(cfg, B, page_size, n_pages)
+
+
+def init_paged_cache(cfg, B, page_size, n_pages):
+    return T.init_paged_cache(cfg, B, page_size, n_pages)
 
 
 def param_count(params) -> int:

@@ -347,6 +347,40 @@ def init_cache(cfg: ModelConfig, B: int, T: int) -> dict[str, Any]:
                                   cache_spec(cfg, B, T))
 
 
+def paged_cache_spec(cfg: ModelConfig, B: int, page_size: int,
+                     n_pages: int) -> dict[str, Any]:
+    """ShapeDtypeStruct pytree for the *paged* serving cache.
+
+    K/V are shared ``(nl, n_pages, page_size, Hkv, hd)`` pools instead of
+    per-slot ``(nl, B, T, ...)`` buffers — slots map into them through the
+    ``serving.kvcache.PagedKVCache`` page table, so device memory scales
+    with *live tokens* (rounded to pages), not ``slots x worst case``.
+    Cross-attention K/V (encdec) stay per-slot dense: they are prompt-sized
+    constants, not a growing decode cache. KV-cache families only.
+    """
+    sd = jax.ShapeDtypeStruct
+    if cfg.family not in _PACKED_FAMILIES:
+        raise NotImplementedError(
+            f"paged cache requires a KV-cache family, got {cfg.family!r}")
+    kv_dtype = jnp.dtype(cfg.kv_cache_dtype or cfg.dtype)
+    Hkv, hd, nl = cfg.n_kv_heads, cfg.hd, cfg.n_layers
+    spec: dict[str, Any] = {
+        "k": sd((nl, n_pages, page_size, Hkv, hd), kv_dtype),
+        "v": sd((nl, n_pages, page_size, Hkv, hd), kv_dtype),
+    }
+    if cfg.family == "encdec":
+        Te = cfg.encoder_seq
+        spec["xk"] = sd((nl, B, Te, Hkv, hd), jnp.dtype(cfg.dtype))
+        spec["xv"] = sd((nl, B, Te, Hkv, hd), jnp.dtype(cfg.dtype))
+    return spec
+
+
+def init_paged_cache(cfg: ModelConfig, B: int, page_size: int,
+                     n_pages: int) -> dict[str, Any]:
+    return jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                  paged_cache_spec(cfg, B, page_size, n_pages))
+
+
 # ---------------------------------------------------------------------------
 # Losses & serving entry points
 # ---------------------------------------------------------------------------
@@ -571,3 +605,103 @@ def serve_step_packed(params: dict, cfg: ModelConfig, cache: dict,
     new_cache = dict(new_layer_cache)
     new_cache["pos"] = new_pos
     return logits, new_cache
+
+
+def _paged_block(p: dict, cfg: ModelConfig, kind: str, x: jnp.ndarray, *,
+                 slot_ids: jnp.ndarray, positions: jnp.ndarray,
+                 page_table: jnp.ndarray, cache: dict
+                 ) -> tuple[jnp.ndarray, dict, jnp.ndarray]:
+    """``_packed_block`` with the paged attention path: K/V live in this
+    layer's (P, ps, Hkv, hd) page pools, addressed through ``page_table``."""
+    aux = jnp.float32(0.0)
+    new_cache = dict(cache)
+    h = L.rmsnorm_apply(p["norm1"], x, cfg.norm_eps)
+    y, upd = A.attn_apply_paged(p["attn"], cfg, h, positions=positions,
+                                slot_ids=slot_ids, page_table=page_table,
+                                cache={"k": cache["k"], "v": cache["v"]})
+    x = x + y
+    new_cache.update(upd)
+    if "cross" in p:
+        h = L.rmsnorm_apply(p["norm_x"], x, cfg.norm_eps)
+        y = A.cross_attn_packed(p["cross"], cfg, h, slot_ids=slot_ids,
+                                cache={"k": cache["xk"], "v": cache["xv"]})
+        x = x + y
+    h = L.rmsnorm_apply(p["norm2"], x, cfg.norm_eps)
+    if kind == "moe":
+        y, aux = M.moe_apply(p["moe"], cfg, h)
+    else:
+        y = _mlp_apply(p["mlp"], cfg, h)
+    return x + y, new_cache, aux
+
+
+def serve_step_paged(params: dict, cfg: ModelConfig, cache: dict,
+                     page_table: jnp.ndarray, tokens: jnp.ndarray,
+                     slot_ids: jnp.ndarray, positions: jnp.ndarray,
+                     new_pos: jnp.ndarray, emit_idx: jnp.ndarray
+                     ) -> tuple[jnp.ndarray, dict]:
+    """``serve_step_packed`` against the paged KV cache.
+
+    Identical packed-token contract (tokens/slot_ids/positions (T,), new_pos/
+    emit_idx (B,)) with one extra input: ``page_table`` (n_slots + 1,
+    max_pages) int32 from ``serving.kvcache.PagedKVCache`` — the same table
+    is shared by every layer (pools are per-layer, the mapping is not).
+    K/V scatter straight into granted pages and each token walks its own
+    slot's page list under the position-bounded mask, so with pages covering
+    the buffer (``max_pages * page_size == buffer_len``) the emitted logits
+    are bit-identical to the contiguous packed step. Not state-safe for
+    SSM/hybrid families.
+    """
+    if cfg.family not in _PACKED_FAMILIES:
+        raise NotImplementedError(
+            f"paged step requires a KV-cache family, got {cfg.family!r}")
+    kind = _layer_kind(cfg)
+    x = L.embed_apply(params["embed"], tokens[None])     # (1, T, d)
+    layer_cache = {k: v for k, v in cache.items() if k != "pos"}
+
+    def body(carry, scanned):
+        xx, aux = carry
+        pp, cc = scanned
+        xx, new_c, a = _paged_block(pp, cfg, kind, xx, slot_ids=slot_ids,
+                                    positions=positions,
+                                    page_table=page_table, cache=cc)
+        return (xx, aux + a), new_c
+
+    (x, _aux), new_layer_cache = jax.lax.scan(
+        body, (x, jnp.float32(0.0)), (params["blocks"], layer_cache))
+    feats = jnp.take(x[0], emit_idx, axis=0)             # (B, d)
+    logits = _unembed(params, cfg, feats[None])[0]       # (B, vocab)
+    new_cache = dict(new_layer_cache)
+    new_cache["pos"] = new_pos
+    return logits, new_cache
+
+
+def serve_step_window_paged(params: dict, cfg: ModelConfig, cache: dict,
+                            page_table: jnp.ndarray, tokens: jnp.ndarray,
+                            n_valid: jnp.ndarray
+                            ) -> tuple[jnp.ndarray, dict]:
+    """``serve_step_window`` semantics on the paged cache: advance slot b by
+    ``n_valid[b]`` of its W supplied tokens, returning each slot's logits at
+    column ``n_valid[b] - 1``.
+
+    Implemented by flattening the (B, W) window into the packed layout and
+    delegating to ``serve_step_paged`` — ONE trunk serves both step styles,
+    and because the scatter lands at exact (slot, position) pairs (never a
+    clamped dynamic_update_slice), the paged window path needs no window
+    over-allocation: the buffer is exactly ``buffer_len``. Padding columns
+    (``col >= n_valid[b]``) become sentinel-slot tokens at position 0 —
+    scatter-dropped, output discarded. ``cache["pos"]`` must be (B,)
+    per-slot fill levels (the paged engine core's convention).
+    """
+    B, W = tokens.shape
+    pos0 = cache["pos"]                                   # (B,)
+    col = jnp.arange(W)
+    valid = col[None, :] < n_valid[:, None]               # (B, W)
+    slot_ids = jnp.where(valid, jnp.arange(B)[:, None], B
+                         ).astype(jnp.int32).reshape(-1)
+    positions = jnp.where(valid, pos0[:, None] + col[None, :], 0
+                          ).astype(jnp.int32).reshape(-1)
+    new_pos = pos0 + n_valid
+    emit_idx = jnp.arange(B) * W + jnp.clip(n_valid - 1, 0, W - 1)
+    return serve_step_paged(params, cfg, cache, page_table,
+                            tokens.reshape(-1), slot_ids, positions,
+                            new_pos, emit_idx)

@@ -7,6 +7,7 @@ from repro.serving.api import (FINISH_EOS, FINISH_ERROR, FINISH_LENGTH,
                                hw_names, register_hw, resolve_hw)
 from repro.serving.core import EngineCore, StepOutput
 from repro.serving.engine import EngineStats, LLMEngine, ServingEngine
+from repro.serving.kvcache import PagedKVCache, pages_for
 from repro.serving.scheduler import (ChunkTask, FCFSScheduler, PackedStep,
                                      PrefillAssignment, PrefillGroup,
                                      SchedulerOutput, bucket_for,
@@ -23,4 +24,5 @@ __all__ = [
     "SchedulerOutput", "StepOutput", "bucket_lengths", "bucket_for",
     "PackedStep", "pack_bucket", "pack_step", "unpack_step",
     "EngineCore", "LLMEngine", "ServingEngine", "EngineStats",
+    "PagedKVCache", "pages_for",
 ]

@@ -24,6 +24,14 @@ The core owns everything that touches the device, behind one contract:
   the ``(B, W)`` window's dead decode columns never reach the model.
   ``StepOutput.n_valid_tokens``/``n_batch_tokens`` record the padding
   efficiency of every path for the benches and calibration.
+* **Paged KV cache (``paged=True``)** — K/V live in shared per-layer page
+  pools (``serving.kvcache``) instead of per-slot worst-case buffers; the
+  core owns a :class:`~repro.serving.kvcache.PagedKVCache` whose host page
+  table rides into every fused step call (constant shape — page churn never
+  retraces). Both the packed and window step styles run against the paged
+  packed trunk with exact scatters into granted pages, so neither needs
+  window slack and both stay bit-identical to the contiguous cache. The
+  ENGINE grants pages before calling ``step`` (see ``LLMEngine._page_gate``).
 * **Bucketed batched prefill (legacy mode)** — prompts right-padded to the
   scheduler's bucket length prefill as ONE jit'd ``serve_prefill_ragged``
   call over all ``B`` slot rows. The call retraces once per bucket length,
@@ -68,6 +76,7 @@ from repro.configs.base import ModelConfig
 from repro.models import registry as R
 from repro.runtime.faults import FaultPlan
 from repro.serving.api import Request, SamplingParams
+from repro.serving.kvcache import PagedKVCache
 from repro.serving.scheduler import SchedulerOutput
 
 _BUCKETED_FAMILIES = ("dense", "moe", "vlm", "encdec")
@@ -163,6 +172,44 @@ def _packed_step_fn(cfg: ModelConfig, Tb: int):
     return jax.jit(_packed)
 
 
+@functools.lru_cache(maxsize=64)
+def _paged_step_fn(cfg: ModelConfig, Tb: int):
+    """Compiled fused *paged* packed step + sampling: identical contract to
+    ``_packed_step_fn`` plus the (n_slots + 1, max_pages) page table. The
+    table rides as a traced argument (constant shape), so page churn —
+    grants, preemptions, recovery rebuilds — never retraces."""
+
+    def _paged(p, caches, page_table, tokens, slot_ids, positions, new_pos,
+               emit_idx, poison, temps, topks, greedy, keys):
+        logits, new_caches = R.serve_step_paged(
+            p, cfg, caches, page_table, tokens, slot_ids, positions,
+            new_pos, emit_idx)
+        toks, nkeys, ok = _health_and_sample(logits, poison, temps, topks,
+                                             greedy, keys)
+        return toks, new_caches, nkeys, ok
+
+    return jax.jit(_paged)
+
+
+@functools.lru_cache(maxsize=32)
+def _paged_window_step_fn(cfg: ModelConfig, W: int):
+    """Compiled fused *paged* window step: the (B, W) ragged window is
+    flattened onto the paged packed trunk inside the jit (see
+    ``models.transformer.serve_step_window_paged``) — no per-slot vmap, and
+    the same two steady-state shapes (W = chunk_size, W = 1) as the
+    contiguous window path."""
+
+    def _pw(p, caches, page_table, tokens, n_tok, poison, temps, topks,
+            greedy, keys):
+        logits, new_caches = R.serve_step_window_paged(
+            p, cfg, caches, page_table, tokens, n_tok)
+        toks, nkeys, ok = _health_and_sample(logits, poison, temps, topks,
+                                             greedy, keys)
+        return toks, new_caches, nkeys, ok
+
+    return jax.jit(_pw)
+
+
 @functools.lru_cache(maxsize=32)
 def _window_step_fn(cfg: ModelConfig, W: int):
     """Compiled fused window step: per-slot ragged (W-wide) model advance +
@@ -242,7 +289,8 @@ class EngineCore:
 
     def __init__(self, params, cfg: ModelConfig, *, batch_slots: int = 4,
                  buffer_len: int = 256, window: int = 0,
-                 packed: bool = False,
+                 packed: bool = False, paged: bool = False,
+                 page_size: int = 16, kv_pages: Optional[int] = None,
                  faults: Optional[FaultPlan] = None):
         self.params = params
         self.cfg = cfg
@@ -250,6 +298,8 @@ class EngineCore:
         self.T = buffer_len
         self.window = window
         self.packed = packed
+        self.paged = paged
+        self.page_size = page_size
         self.faults = faults
         # monotone fused-step counter driving the fault plan; the engine
         # carries it across a watchdog core rebuild so a step-pinned fault
@@ -259,12 +309,37 @@ class EngineCore:
         # Logical capacity is buffer_len (admission math unchanged); the
         # allocation carries `window` slack columns so a W-wide ragged write
         # at pos <= buffer_len - 1 never clamps (see module docstring). The
-        # packed path scatters at exact (slot, pos) coordinates — no clamping
-        # is possible, so it needs (and gets) no slack.
-        self.T_alloc = buffer_len if packed else buffer_len + window
+        # packed and paged paths scatter at exact (slot, pos) coordinates —
+        # no clamping is possible, so they need (and get) no slack.
+        self.T_alloc = buffer_len if (packed or paged) else buffer_len + window
         self.prefill_compiles = 0
         self.step_shapes: set = set()   # distinct fused step shapes traced
-        if packed:
+        self.pager: Optional[PagedKVCache] = None
+        if paged:
+            # K/V in shared page pools (serving/kvcache.py): device memory
+            # is n_pages x page_size tokens regardless of batch_slots, and
+            # both packed and window step styles run on the paged packed
+            # trunk (exact scatters through the page table).
+            if window <= 0:
+                raise ValueError("paged serving consumes prompts via chunks;"
+                                 " pass a chunked window (chunk_size)")
+            if buffer_len % page_size:
+                raise ValueError(f"buffer_len={buffer_len} must be a "
+                                 f"multiple of page_size={page_size} (pages "
+                                 f"tile the virtual slot buffer exactly)")
+            max_pages = buffer_len // page_size
+            n_pages = (int(kv_pages) if kv_pages is not None
+                       else batch_slots * max_pages)
+            kv_dtype = jnp.dtype(cfg.kv_cache_dtype or cfg.dtype)
+            page_bytes = (2 * cfg.n_layers * page_size * cfg.n_kv_heads
+                          * cfg.hd * kv_dtype.itemsize)
+            self.pager = PagedKVCache(batch_slots, page_size, n_pages,
+                                      max_pages, page_bytes)
+            self.caches = R.init_paged_cache(cfg, batch_slots, page_size,
+                                             n_pages)
+            self.caches["pos"] = jnp.zeros((batch_slots,), jnp.int32)
+            self._host_pos = np.zeros(batch_slots, np.int64)
+        elif packed:
             # Natural (family) cache layout with B rows per leaf and a
             # per-slot pos vector: the packed model call scans layers over
             # it directly — no per-slot vmap, no leading-slot transpose.
@@ -443,14 +518,17 @@ class EngineCore:
         if self.faults:
             self.faults.raise_or_delay(idx)
             poison = self.faults.poison_row(idx, self.B)
-        if self.packed:
+        if self.packed or self.paged:
             if so.prefill_groups:
-                raise ValueError("packed mode serves prompts via chunks "
-                                 "only; a legacy scheduler emitted "
+                raise ValueError("packed/paged mode serves prompts via "
+                                 "chunks only; a legacy scheduler emitted "
                                  "prefill_groups")
             if so.chunks or so.decode_slots:
                 t0 = time.perf_counter()
-                self._packed_step(so, last_tokens, out, poison)
+                if self.packed:
+                    self._packed_step(so, last_tokens, out, poison)
+                else:
+                    self._paged_window_step(so, last_tokens, out, poison)
                 dt = time.perf_counter() - t0
                 # A chunk-free packed step IS decode-shaped: book it as
                 # decode_s so the measured-vs-modeled calibration loop
@@ -578,15 +656,23 @@ class EngineCore:
         ps = pack_step(so, last_tokens, self._host_pos, self.B,
                        self.window or 1)
         self.step_shapes.add(("packed", ps.n_batch))
-        fn = _packed_step_fn(self.cfg, ps.n_batch)
-        toks, self.caches, nkeys, ok = fn(
-            self.params, self.caches, jnp.asarray(ps.tokens),
+        packed_args = (
+            jnp.asarray(ps.tokens),
             jnp.asarray(ps.slot_ids), jnp.asarray(ps.positions),
             jnp.asarray(ps.new_pos, dtype=jnp.int32),
             jnp.asarray(ps.emit_idx, dtype=jnp.int32),
             jnp.asarray(poison if poison is not None else self._zero_poison),
             jnp.asarray(self.temps), jnp.asarray(self.topks),
             jnp.asarray(self.greedy), jnp.asarray(self.keys))
+        if self.paged:
+            fn = _paged_step_fn(self.cfg, ps.n_batch)
+            toks, self.caches, nkeys, ok = fn(
+                self.params, self.caches,
+                jnp.asarray(self.pager.page_table), *packed_args)
+        else:
+            fn = _packed_step_fn(self.cfg, ps.n_batch)
+            toks, self.caches, nkeys, ok = fn(
+                self.params, self.caches, *packed_args)
         toks, nkeys, ok = np.asarray(toks), np.asarray(nkeys), np.asarray(ok)
         self._host_pos[:] = ps.new_pos
         # Same key-commit discipline as the window path: emitting slots only;
@@ -608,3 +694,58 @@ class EngineCore:
         out.bad_slots = out.bad_slots + tuple(bad)
         out.n_valid_tokens += ps.n_valid
         out.n_batch_tokens += ps.n_batch
+
+    def _paged_window_step(self, so: SchedulerOutput,
+                           last_tokens: Optional[np.ndarray],
+                           out: StepOutput,
+                           poison: Optional[np.ndarray] = None) -> None:
+        """Paged counterpart of ``_window_step``: the same (B, W) ragged
+        window, flattened inside the jit onto the paged packed trunk
+        (``serve_step_window_paged``) — one call, two steady-state shapes
+        (W = chunk_size, W = 1), K/V written straight into granted pages."""
+        W = self.window or max(c.length for c in so.chunks)
+        tokens = np.zeros((self.B, W), np.int32)
+        n_tok = np.zeros(self.B, np.int32)
+        for i in so.decode_slots:
+            tokens[i, 0] = last_tokens[i]
+            n_tok[i] = 1
+        fresh = []
+        for c in so.chunks:
+            tokens[c.slot, :c.length] = c.req.prompt[c.start:c.start + c.length]
+            n_tok[c.slot] = c.length
+            if c.start == 0:            # new request: re-base pos, seed keys
+                self._set_sampling(c.slot, c.req.sampling, c.req.resume_key)
+                fresh.append(c.slot)
+        if fresh:
+            self.caches["pos"] = self.caches["pos"].at[
+                jnp.asarray(fresh)].set(0)
+            self._host_pos[fresh] = 0
+        self.step_shapes.add(("window", W))
+        fn = _paged_window_step_fn(self.cfg, W)
+        toks, self.caches, nkeys, ok = fn(
+            self.params, self.caches, jnp.asarray(self.pager.page_table),
+            jnp.asarray(tokens), jnp.asarray(n_tok),
+            jnp.asarray(poison if poison is not None else self._zero_poison),
+            jnp.asarray(self.temps),
+            jnp.asarray(self.topks), jnp.asarray(self.greedy),
+            jnp.asarray(self.keys))
+        toks, nkeys, ok = np.asarray(toks), np.asarray(nkeys), np.asarray(ok)
+        self._host_pos[:] = self._host_pos + n_tok
+        # Same key-commit discipline as the contiguous window path.
+        bad: list = []
+        for i in so.decode_slots:
+            if not ok[i]:
+                bad.append(i)
+                continue
+            out.decode_tokens[i] = int(toks[i])
+            self.keys[i] = nkeys[i]
+        for c in so.chunks:
+            if c.last:
+                if not ok[c.slot]:
+                    bad.append(c.slot)
+                    continue
+                out.first_tokens[c.slot] = int(toks[c.slot])
+                self.keys[c.slot] = nkeys[c.slot]
+        out.bad_slots = out.bad_slots + tuple(bad)
+        out.n_valid_tokens += int(n_tok.sum())
+        out.n_batch_tokens += self.B * W

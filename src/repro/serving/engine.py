@@ -112,11 +112,26 @@ class EngineStats:
     weight_cache_misses: int = 0
     weight_cache_entries: int = 0
     weight_cache_bytes: int = 0   # resident dense-W footprint (process-wide)
+    # paged KV cache (paged=True engines; all zero otherwise). Used/bytes
+    # are HIGH-WATER marks across the run — a drained engine has released
+    # every page, so the instantaneous value at read time is always 0; the
+    # peak is the capacity-pressure signal benches and ops care about.
+    kv_pages_total: int = 0       # page pool size
+    kv_pages_used: int = 0        # peak pages simultaneously granted
+    kv_bytes_used: int = 0        # peak device bytes those pages pin
 
     @property
     def padding_efficiency(self) -> float:
         from repro.hwmodel.perf_model import padding_efficiency
         return padding_efficiency(self.packed_tokens, self.padded_tokens)
+
+    @property
+    def kv_utilization(self) -> float:
+        """Peak fraction of the page pool holding live KV (0.0 when the
+        engine is not paged) — the paged analogue of padding_efficiency."""
+        if not self.kv_pages_total:
+            return 0.0
+        return self.kv_pages_used / self.kv_pages_total
 
 
 class LLMEngine:
@@ -128,7 +143,9 @@ class LLMEngine:
                  bucketed_prefill: bool = True, admission: str = "reject",
                  scheduler=None, chunk_size: Optional[int] = None,
                  max_step_tokens: Optional[int] = None,
-                 packed: bool = False, calibrate: bool = False,
+                 packed: bool = False, paged: bool = False,
+                 page_size: int = 16, kv_pages: Optional[int] = None,
+                 calibrate: bool = False,
                  max_waiting: Optional[int] = None,
                  step_timeout_s: Optional[float] = None,
                  faults: Optional[FaultPlan] = None):
@@ -143,6 +160,9 @@ class LLMEngine:
         if packed and chunk_size is None:
             raise ValueError("packed=True requires chunk_size (the packed "
                              "step serves prompts via chunk tasks)")
+        if paged and chunk_size is None:
+            raise ValueError("paged=True requires chunk_size (the paged "
+                             "cache serves prompts via chunk tasks)")
         if chunk_size is not None and cfg.family not in _BUCKETED_FAMILIES:
             warnings.warn(
                 f"chunked prefill requires a KV-cache family (got "
@@ -150,8 +170,12 @@ class LLMEngine:
                 f"padding); falling back to phase-based serving", stacklevel=2)
             chunk_size = None
             packed = False
+            paged = False
         self.chunk = chunk_size
         self.packed = packed
+        self.paged = paged
+        self.page_size = page_size
+        self.kv_pages = kv_pages
         if packed and max_step_tokens is None:
             # Default packed token budget == the mixed-step bucket, so the
             # typical chunk-bearing step fills its pow-2 shape exactly
@@ -164,21 +188,27 @@ class LLMEngine:
         self.core = EngineCore(params, self.cfg, batch_slots=batch_slots,
                                buffer_len=buffer_len,
                                window=chunk_size or 0, packed=packed,
-                               faults=faults)
+                               paged=paged, page_size=page_size,
+                               kv_pages=kv_pages, faults=faults)
         self.bucketed = bucketed_prefill and self.core.supports_bucketing
         self.scheduler = scheduler if scheduler is not None else FCFSScheduler(
             buffer_len, admission=admission, bucketing=self.bucketed,
-            chunk_size=chunk_size, max_waiting=max_waiting)
-        if self.packed and not hasattr(self.scheduler, "schedule"):
+            chunk_size=chunk_size, max_waiting=max_waiting,
+            page_size=page_size if paged else None,
+            total_pages=self.core.pager.P if paged else None)
+        if (self.packed or self.paged) and not hasattr(self.scheduler,
+                                                       "schedule"):
             raise ValueError(
-                "packed=True requires a step scheduler (schedule method): "
-                "legacy add/next_group schedulers emit whole prefill groups, "
-                "which the packed core cannot execute")
+                "packed/paged mode requires a step scheduler (schedule "
+                "method): legacy add/next_group schedulers emit whole "
+                "prefill groups, which this core cannot execute")
         self.slots: list[Optional[Request]] = [None] * batch_slots
         self.slot_remaining = np.zeros(batch_slots, np.int32)
         # prompt tokens consumed per slot (== prompt_len once decoding)
         self._prefill_done = np.zeros(batch_slots, np.int64)
         self.stats = EngineStats()
+        if self.paged:
+            self.stats.kv_pages_total = self.core.pager.P
         self._finished: list[RequestOutput] = []
         from repro.kernels import ops as _ops
         self._ops = _ops
@@ -281,6 +311,8 @@ class LLMEngine:
         req = self.slots[i]
         req.finish_reason = reason
         self.slots[i] = None
+        if self.core.pager is not None:
+            self.core.pager.release(i)
         # re-arm the freed slot as greedy so one finished sampling request
         # doesn't pin every later fused step on the slow mixed-sampling
         # branch (the all-greedy fast path tests ALL B rows)
@@ -336,6 +368,9 @@ class LLMEngine:
         for i in so.preempt_slots:      # evict + recompute-requeue
             self._requeue_slot(i, preempt=True)
         self._drain_shed()              # requeue into a full queue sheds
+        if self.paged:
+            so = self._page_gate(so)    # grant KV pages / preempt on OOM
+            self._drain_shed()
         if so.empty:
             return self._remaining()
         last = np.zeros(self.B, np.int32)
@@ -367,6 +402,62 @@ class LLMEngine:
             self._recover()
         return self._remaining()
 
+    def _page_gate(self, so: SchedulerOutput) -> SchedulerOutput:
+        """Grant KV pages for everything the scheduler just emitted, treating
+        page exhaustion exactly like cache-overflow admission pressure.
+
+        Must-run work — decodes and chunks continuing an already-started
+        prompt — cannot be deferred (the slot's context is live), so a pool
+        shortfall preempts the lowest-priority / youngest scheduled slot
+        (the scheduler's own victim order) for recompute until the rest
+        fits. New prompts (``start == 0``) are best-effort: an ungrantable
+        one goes back to the waiting queue with its original arrival order
+        and retries next step once decodes finish and release pages.
+        """
+        pager = self.core.pager
+        pos = self.core._host_pos
+        decodes = list(so.decode_slots)
+        run_chunks = [c for c in so.chunks if c.start > 0]
+        new_chunks = [c for c in so.chunks if c.start == 0]
+
+        def shortfall() -> int:
+            need = (sum(pager.pages_needed(i, int(pos[i]) + 1)
+                        for i in decodes)
+                    + sum(pager.pages_needed(c.slot, c.start + c.length)
+                          for c in run_chunks))
+            return need - pager.free_pages
+
+        while shortfall() > 0:
+            cands = ([(i, self.slots[i]) for i in decodes]
+                     + [(c.slot, self.slots[c.slot]) for c in run_chunks])
+            if len(cands) <= 1:
+                break   # one slot always fits: admission caps it at buffer
+            victim = min(cands, key=lambda t: (t[1].priority,
+                                               -(t[1]._sched_seq or 0)))[0]
+            decodes = [i for i in decodes if i != victim]
+            run_chunks = [c for c in run_chunks if c.slot != victim]
+            self._requeue_slot(victim, preempt=True)    # releases its pages
+        for i in decodes:
+            pager.grant(i, int(pos[i]) + 1)
+        for c in run_chunks:
+            pager.grant(c.slot, c.start + c.length)
+        kept_new = []
+        for c in new_chunks:
+            if pager.grant(c.slot, c.start + c.length):
+                kept_new.append(c)
+            elif hasattr(self.scheduler, "requeue"):
+                self.scheduler.requeue(c.req)
+            else:
+                self.scheduler.add(c.req)
+        keep = {id(c) for c in run_chunks} | {id(c) for c in kept_new}
+        chunks = tuple(c for c in so.chunks if id(c) in keep)
+        st = self.stats
+        st.kv_pages_used = max(st.kv_pages_used, pager.used_pages)
+        st.kv_bytes_used = max(st.kv_bytes_used, pager.used_bytes)
+        return dataclasses.replace(
+            so, decode_slots=tuple(decodes), chunks=chunks,
+            n_scheduled_tokens=len(decodes) + sum(c.length for c in chunks))
+
     def _expire_deadlines(self) -> None:
         """Finish expired requests as FINISH_TIMEOUT — queued requests via
         the scheduler, running ones straight out of their slot."""
@@ -388,6 +479,8 @@ class LLMEngine:
         req = self.slots[i]
         self.slots[i] = None
         self.core.clear_sampling(i)
+        if self.core.pager is not None:
+            self.core.pager.release(i)  # victim pages free immediately
         self._prefill_done[i] = 0
         self.slot_remaining[i] = 0
         if req.prompt_len_orig is None:
@@ -421,7 +514,9 @@ class LLMEngine:
         old = self.core
         self.core = EngineCore(self.params, self.cfg, batch_slots=self.B,
                                buffer_len=self.T, window=self.chunk or 0,
-                               packed=self.packed, faults=self.faults)
+                               packed=self.packed, paged=self.paged,
+                               page_size=self.page_size,
+                               kv_pages=self.kv_pages, faults=self.faults)
         self.core.step_idx = old.step_idx
         self.core.prefill_compiles = old.prefill_compiles
         self.core.step_shapes = old.step_shapes

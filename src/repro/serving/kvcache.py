@@ -1,0 +1,144 @@
+"""Paged KV-cache management: fixed-size pages, slot page tables, free list.
+
+The contiguous serving cache reserves a worst-case ``(B, T_alloc)`` buffer
+per slot — HBM *capacity*, not bandwidth, caps concurrency, and most of the
+reservation is dead (a request occupying a 1024-token slot at position 40
+wastes 96% of it). This module breaks the cache into fixed-size pages
+(the vLLM move, applied to an on-the-fly-weights engine: weights stream as
+quantised alphas, KV lives in pages, and the same HBM holds several times
+more concurrent users):
+
+* **Page pools** — each layer's K and V live in ``(n_pages, page_size,
+  n_kv_heads, head_dim)`` pools shared by every slot (allocated by
+  ``models.transformer.init_paged_cache``; this module only does the
+  bookkeeping).
+* **Free-list allocator** — pages are granted on demand as a slot's fill
+  level crosses page boundaries (admission no longer reserves
+  ``prompt + max_new`` up front) and reclaimed wholesale on
+  finish/preempt/shed/recovery.
+* **Page table** — a host ``(n_slots + 1, max_pages)`` int32 array mapping
+  (slot, page-index-within-slot) -> physical page id. Unmapped entries and
+  the entire sentinel row ``n_slots`` (used by packed-step padding tokens)
+  carry ``n_pages``: a scatter through them is out of bounds and dropped
+  (``mode="drop"``), a gather clamps to a page the position mask already
+  excludes. The device-side consumers (``attention.attn_apply_paged``,
+  ``kernels.decode_attn.paged_flash_decode``) read this table verbatim.
+
+Token-position -> page arithmetic is fixed: position ``p`` of a slot lives
+in that slot's page-list entry ``p // page_size`` at offset
+``p % page_size``, so the slot's pages in list order ARE the contiguous
+buffer, virtually — which is what makes paged serving bit-identical to the
+contiguous cache (same values under the same position-bounded mask).
+
+Grant failure (``grant() -> False``, all-or-nothing) is the OOM-pages
+signal: the engine treats it like cache-overflow admission — new
+admissions wait, running work preempts the least-urgent slot (whose pages
+return to the free list immediately) and recomputes later.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["PagedKVCache", "pages_for"]
+
+
+def pages_for(n_tokens: int, page_size: int) -> int:
+    """Pages needed to hold ``n_tokens`` cache positions."""
+    return -(-max(int(n_tokens), 0) // page_size)
+
+
+class PagedKVCache:
+    """Host-side page allocator + slot page tables for the paged KV cache.
+
+    Pure bookkeeping (numpy; no device arrays): the engine core owns the
+    device pools and threads ``self.page_table`` into each fused step call.
+    """
+
+    def __init__(self, n_slots: int, page_size: int, n_pages: int,
+                 max_pages: int, page_bytes: int = 0):
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        if n_pages < max_pages:
+            raise ValueError(
+                f"pool of {n_pages} pages cannot hold one full slot "
+                f"({max_pages} pages): admission could never complete any "
+                f"near-capacity request")
+        self.S = n_slots
+        self.ps = page_size
+        self.P = n_pages
+        self.max_pages = max_pages
+        self.page_bytes = page_bytes     # device bytes per page (all layers)
+        # LIFO free list arranged so fresh pools allocate page 0 first
+        # (deterministic tests; reclaim order is whatever release sees)
+        self._free: list[int] = list(range(n_pages - 1, -1, -1))
+        self._slot_pages: list[list[int]] = [[] for _ in range(n_slots)]
+        self.lengths = np.zeros(n_slots, np.int64)   # granted token capacity
+        # +1 sentinel row for packed-padding tokens (slot_id == n_slots);
+        # unmapped entries carry n_pages (out of bounds -> scatter-dropped)
+        self.page_table = np.full((n_slots + 1, max_pages), n_pages, np.int32)
+
+    # -- accounting ---------------------------------------------------------
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.P - len(self._free)
+
+    @property
+    def used_bytes(self) -> int:
+        return self.used_pages * self.page_bytes
+
+    @property
+    def total_bytes(self) -> int:
+        return self.P * self.page_bytes
+
+    def slot_pages(self, slot: int) -> tuple:
+        return tuple(self._slot_pages[slot])
+
+    def pages_needed(self, slot: int, new_len: int) -> int:
+        """Additional pages slot needs to grow its granted capacity to
+        ``new_len`` tokens (0 if already covered)."""
+        return max(pages_for(new_len, self.ps) - len(self._slot_pages[slot]),
+                   0)
+
+    # -- grant / release ----------------------------------------------------
+
+    def grant(self, slot: int, new_len: int) -> bool:
+        """Grow slot's granted capacity to ``new_len`` tokens.
+
+        All-or-nothing: returns False (allocating NOTHING) when the free
+        list cannot cover the growth — the engine's OOM-pages signal.
+        """
+        total = pages_for(new_len, self.ps)
+        if total > self.max_pages:
+            raise ValueError(
+                f"slot {slot} would need {total} pages for {new_len} tokens "
+                f"(> max_pages={self.max_pages}): admission should have "
+                f"rejected this request")
+        need = total - len(self._slot_pages[slot])
+        if need > len(self._free):
+            return False
+        for _ in range(max(need, 0)):
+            pid = self._free.pop()
+            j = len(self._slot_pages[slot])
+            self._slot_pages[slot].append(pid)
+            self.page_table[slot, j] = pid
+        self.lengths[slot] = max(int(self.lengths[slot]), int(new_len))
+        return True
+
+    def release(self, slot: int) -> int:
+        """Return ALL of slot's pages to the free list (finish / preempt /
+        shed / recovery rebuild). Returns the number reclaimed."""
+        pages = self._slot_pages[slot]
+        n = len(pages)
+        self._free.extend(reversed(pages))
+        self._slot_pages[slot] = []
+        self.page_table[slot, :] = self.P
+        self.lengths[slot] = 0
+        return n
+
+    def release_all(self) -> int:
+        return sum(self.release(i) for i in range(self.S))

@@ -271,7 +271,9 @@ class FCFSScheduler:
     def __init__(self, buffer_len: int, *, admission: str = "reject",
                  min_bucket: int = 8, bucketing: bool = True,
                  chunk_size: Optional[int] = None,
-                 max_waiting: Optional[int] = None):
+                 max_waiting: Optional[int] = None,
+                 page_size: Optional[int] = None,
+                 total_pages: Optional[int] = None):
         if admission not in ("reject", "truncate", "preempt"):
             raise ValueError(f"admission policy {admission!r}")
         if admission == "preempt" and chunk_size is None:
@@ -287,6 +289,14 @@ class FCFSScheduler:
         self.bucketing = bucketing
         self.chunk_size = chunk_size
         self.max_waiting = max_waiting
+        # paged-KV admission (both set by the paged engine): a request whose
+        # full lifetime (prompt + max_new, rounded up to pages) exceeds the
+        # ENTIRE page pool could never run even alone — reject/truncate it
+        # here, exactly like buffer overflow. Transient pool pressure is NOT
+        # an admission concern: the engine's page gate handles it per step
+        # (wait / preempt-and-recompute).
+        self.page_size = page_size
+        self.total_pages = total_pages
         self.buckets = bucket_lengths(buffer_len, min_bucket=min_bucket)
         self.waiting: list[Request] = []
         self.shed: list[Request] = []   # load-shed victims awaiting finalize
@@ -335,13 +345,18 @@ class FCFSScheduler:
         FINISH_REJECTED; shed requests FINISH_SHED (victims evicted from a
         full bounded queue land in ``self.shed``)."""
         plen = req.prompt_len
-        overflow = plen + req.max_new_tokens > self.buffer_len
-        if plen < 1 or plen > self.buffer_len - 1 or (
+        # max generable tokens: buffer capacity, further clamped by the page
+        # pool when paged (whole-pool bound — see __init__)
+        cap = self.buffer_len - plen
+        if self.page_size and self.total_pages:
+            cap = min(cap, self.total_pages * self.page_size - plen)
+        overflow = req.max_new_tokens > cap
+        if plen < 1 or plen > self.buffer_len - 1 or cap < 1 or (
                 overflow and self.admission != "truncate"):
             req.finish_reason = FINISH_REJECTED
             return False
         if overflow:  # admission == "truncate"
-            req.max_new_tokens = self.buffer_len - plen
+            req.max_new_tokens = cap
         if req._sched_seq is None:
             req._sched_seq = self._seq
             self._seq += 1

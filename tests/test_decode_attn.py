@@ -1,4 +1,5 @@
-"""Flash-decoding attention kernel vs oracle (shape/dtype/pos sweeps)."""
+"""Flash-decoding attention kernels vs the ``kernels.ref`` oracles
+(shape/dtype/pos sweeps; interpret mode, so they run on any backend)."""
 import pytest
 
 hypothesis = pytest.importorskip(
@@ -9,7 +10,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.decode_attn import flash_decode_attn, flash_decode_attn_ref
+from repro.kernels.decode_attn import (flash_decode_attn,
+                                       flash_decode_attn_ref,
+                                       paged_flash_decode)
+from repro.kernels.ref import decode_attn_ref, paged_decode_attn_ref
 
 hypothesis.settings.register_profile(
     "ci", deadline=None, max_examples=10,
@@ -54,6 +58,88 @@ def test_hypothesis_positions(seed, pos, g):
     q, k, v = _case(seed, 2, g * Hkv, Hkv, 16, 64)
     y = flash_decode_attn(q, k, v, pos, block_t=16, interpret=True)
     yr = flash_decode_attn_ref(q, k, v, pos)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_ref_delegates_to_oracle():
+    """The seed kernel's reference IS the kernels.ref oracle."""
+    q, k, v = _case(3, 2, 4, 2, 16, 32)
+    np.testing.assert_array_equal(
+        np.asarray(flash_decode_attn_ref(q, k, v, 17)),
+        np.asarray(decode_attn_ref(q, k, v, 17)))
+
+
+# -- paged kernel vs oracle --------------------------------------------------
+
+def _paged_case(seed, T, S, H, Hkv, hd, ps, npg, P):
+    """Random paged layout: each slot holds a disjoint shuffled page list,
+    unmapped table entries carry the out-of-bounds sentinel ``P``, and some
+    query rows are padding (slot_id == S, the sentinel row)."""
+    assert P >= S * npg
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (T, H, hd))
+    k_pool = jax.random.normal(ks[1], (P, ps, Hkv, hd)) * 0.3
+    v_pool = jax.random.normal(ks[2], (P, ps, Hkv, hd)) * 0.3
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(P)
+    pt = np.full((S + 1, npg), P, np.int32)
+    fill = rng.integers(1, npg * ps + 1, S)      # tokens stored per slot
+    used = 0
+    for s in range(S):
+        n = -(-int(fill[s]) // ps)
+        pt[s, :n] = perm[used:used + n]
+        used += n
+    slot_ids = rng.integers(0, S + 1, T).astype(np.int32)
+    positions = np.array([0 if s == S else rng.integers(0, fill[s])
+                          for s in slot_ids], np.int32)
+    return (q, k_pool, v_pool, jnp.asarray(pt), jnp.asarray(slot_ids),
+            jnp.asarray(positions))
+
+
+@pytest.mark.parametrize("T,S,H,Hkv,hd,ps,npg", [
+    (8, 3, 8, 2, 32, 8, 4), (4, 2, 4, 4, 16, 4, 2), (6, 2, 4, 2, 64, 16, 3),
+])
+def test_paged_matches_oracle(T, S, H, Hkv, hd, ps, npg):
+    case = _paged_case(11, T, S, H, Hkv, hd, ps, npg, S * npg + 2)
+    y = paged_flash_decode(*case, interpret=True)
+    yr = paged_decode_attn_ref(*case)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_paged_matches_contiguous_kernel():
+    """A slot's page list in order IS its contiguous buffer: the paged
+    kernel at position fill-1 must equal the seed kernel over the gathered
+    contiguous view at pos=fill (exclusive vs inclusive mask bounds)."""
+    S, H, Hkv, hd, ps, npg = 3, 8, 2, 32, 8, 4
+    P = S * npg + 2
+    q, k_pool, v_pool, pt, _, _ = _paged_case(5, S, S, H, Hkv, hd, ps, npg, P)
+    rng = np.random.default_rng(5)
+    fill = np.array([rng.integers(1, npg * ps + 1) for _ in range(S)])
+    pt = np.asarray(pt).copy()
+    for s in range(S):      # map every page so the dense gather is defined
+        pt[s] = np.arange(s * npg, (s + 1) * npg)
+    slot_ids = jnp.arange(S, dtype=jnp.int32)
+    positions = jnp.asarray(fill - 1, jnp.int32)
+    y = paged_flash_decode(q, k_pool, v_pool, jnp.asarray(pt), slot_ids,
+                           positions, interpret=True)
+    k_dense = k_pool[np.asarray(pt[:S])].reshape(S, npg * ps, Hkv, hd)
+    v_dense = v_pool[np.asarray(pt[:S])].reshape(S, npg * ps, Hkv, hd)
+    for s in range(S):
+        yr = flash_decode_attn(q[s:s + 1], k_dense[s:s + 1],
+                               v_dense[s:s + 1], int(fill[s]),
+                               block_t=ps, interpret=True)
+        np.testing.assert_allclose(np.asarray(y[s]), np.asarray(yr[0]),
+                                   rtol=1e-4, atol=1e-5)
+
+
+@hypothesis.given(seed=st.integers(0, 10_000), ps=st.sampled_from([4, 8]),
+                  npg=st.integers(2, 4))
+def test_paged_hypothesis(seed, ps, npg):
+    case = _paged_case(seed, 4, 2, 4, 2, 16, ps, npg, 2 * npg + 2)
+    y = paged_flash_decode(*case, interpret=True)
+    yr = paged_decode_attn_ref(*case)
     np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
                                rtol=1e-4, atol=1e-5)
 

@@ -180,11 +180,12 @@ def _drain_tokens(eng):
     return {o.rid: o.tokens for o in eng.outputs()}
 
 
-def _preempt_run(cfg, params, sampling, *, packed=False):
+def _preempt_run(cfg, params, sampling, *, packed=False, paged=False):
     """Fill both slots, let them decode a few tokens, then submit a
     higher-priority request so one slot is preempted and recomputed."""
     eng = LLMEngine(params, cfg, batch_slots=2, buffer_len=64, chunk_size=8,
-                    admission="preempt", packed=packed)
+                    admission="preempt", packed=packed, paged=paged,
+                    page_size=8 if paged else 16)
     for rid in range(2):
         eng.submit(_req(rid, 10, max_new=6, vocab=cfg.vocab,
                         sampling=sampling))
@@ -245,6 +246,26 @@ def test_preemption_equivalence_packed_mode(tiny):
         assert outs[rid].tokens == toks0[rid]
 
 
+@pytest.mark.parametrize("packed", [False, True])
+def test_preemption_equivalence_paged_mode(tiny, packed):
+    """Preemption releases the victim's pages immediately and the resumed
+    stream is token-identical — window AND packed paged paths, sampled
+    (the resume_key must land in a freshly regranted page layout)."""
+    cfg, params = tiny
+    sp = SamplingParams(temperature=0.8, top_k=20, seed=42)
+    base = LLMEngine(params, cfg, batch_slots=2, buffer_len=64, chunk_size=8,
+                     packed=packed, paged=True, page_size=8)
+    for rid in range(2):
+        base.submit(_req(rid, 10, max_new=6, vocab=cfg.vocab, sampling=sp))
+    toks0 = _drain_tokens(base)
+    eng = _preempt_run(cfg, params, sp, packed=packed, paged=True)
+    assert eng.stats.preemptions >= 1
+    outs = _outs(eng)
+    for rid in range(2):
+        assert outs[rid].tokens == toks0[rid]
+    assert eng.core.pager.used_pages == 0           # everything released
+
+
 # ---------------------------------------------------------------------------
 # NaN quarantine + watchdog recovery (the chaos acceptance bar)
 # ---------------------------------------------------------------------------
@@ -300,6 +321,26 @@ def test_combined_nan_and_failure_chaos(tiny):
     assert all(outs[r].finish_reason in (FINISH_EOS, FINISH_LENGTH)
                for r in healthy)
     assert all(outs[r].tokens == toks0[r] for r in healthy)
+
+
+def test_paged_chaos_recovery_rebuilds_page_tables(tiny):
+    """A step crash in paged mode rebuilds the core (fresh empty pool);
+    recompute replay regrants pages and the streams match the fault-free
+    paged run — page tables are reconstructable state, never truth."""
+    cfg, params = tiny
+    toks0 = {o.rid: o.tokens
+             for o in _chaos_run(cfg, params, paged=True,
+                                 page_size=8).outputs()}
+    eng = _chaos_run(cfg, params, faults=FaultPlan.parse(
+        ["nan:step=3,slot=0", "fail:step=5"]), paged=True, page_size=8)
+    assert eng.stats.recoveries >= 1
+    outs = _outs(eng)
+    errored = [r for r in outs if outs[r].finish_reason == FINISH_ERROR]
+    assert len(errored) == 1
+    healthy = [r for r in outs if r not in errored]
+    assert all(outs[r].tokens == toks0[r] for r in healthy)
+    assert eng.core.pager.used_pages == 0
+    assert eng.stats.kv_pages_total == eng.core.pager.P
 
 
 def test_stall_watchdog_counts_and_recovers(tiny):

@@ -1,0 +1,277 @@
+"""Paged KV cache subsystem: pager accounting, kernel parity, and
+engine-level token identity vs the contiguous cache.
+
+The load-bearing claims, each tested here:
+
+* ``PagedKVCache`` grants are all-or-nothing and release returns every
+  page (no leaks, no double-frees).
+* The segment-aware paged flash-decode kernel matches the
+  ``kernels.ref.paged_decode_attn_ref`` oracle in interpret mode.
+* A paged engine is TOKEN-IDENTICAL to the contiguous engine on greedy
+  AND sampled streams, for both the window and the packed step styles —
+  a slot's page list in order IS its contiguous buffer.
+* Page exhaustion behaves like admission pressure: preemption-and-
+  recompute under a starved pool still completes every request with
+  identical streams; a pool sized for one slot serialises instead of
+  corrupting.
+* The compile-count discipline survives paging: page-table churn rides a
+  traced argument, so the paged window/packed steady states stay inside
+  the same CI-gated shape bounds as their contiguous counterparts.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.kernels.decode_attn import flash_decode_attn, paged_flash_decode
+from repro.kernels.ref import paged_decode_attn_ref
+from repro.models import registry as R
+from repro.serving import LLMEngine, PagedKVCache, Request, SamplingParams
+from repro.serving.kvcache import pages_for
+
+
+# -- pager accounting --------------------------------------------------------
+
+def test_pages_for():
+    assert pages_for(0, 4) == 0
+    assert pages_for(1, 4) == 1
+    assert pages_for(4, 4) == 1
+    assert pages_for(5, 4) == 2
+    assert pages_for(17, 16) == 2
+
+
+def test_grant_release_roundtrip():
+    kv = PagedKVCache(n_slots=2, page_size=4, n_pages=8, max_pages=4,
+                      page_bytes=100)
+    assert kv.free_pages == 8 and kv.used_pages == 0
+    assert kv.grant(0, 1)                   # 1 token -> 1 page
+    assert kv.used_pages == 1 and kv.used_bytes == 100
+    assert kv.grant(0, 4)                   # still fits page 0: no-op
+    assert kv.used_pages == 1
+    assert kv.grant(0, 5)                   # crosses into page 1
+    assert kv.used_pages == 2
+    assert len(kv.slot_pages(0)) == 2
+    # the page table mirrors the slot list; unmapped entries stay sentinel
+    assert kv.page_table[0, 0] != kv.P and kv.page_table[0, 1] != kv.P
+    assert kv.page_table[0, 2] == kv.P
+    assert kv.release(0) == 2
+    assert kv.free_pages == 8 and kv.lengths[0] == 0
+    assert (kv.page_table[0] == kv.P).all()
+
+
+def test_grant_all_or_nothing():
+    kv = PagedKVCache(n_slots=2, page_size=4, n_pages=3, max_pages=3)
+    assert kv.grant(0, 8)                   # 2 pages
+    assert not kv.grant(1, 9)               # needs 3, only 1 free: NO grant
+    assert kv.used_pages == 2 and len(kv.slot_pages(1)) == 0
+    assert kv.grant(1, 4)                   # 1 page still fits
+    assert kv.free_pages == 0
+
+
+def test_grant_beyond_max_pages_raises():
+    kv = PagedKVCache(n_slots=1, page_size=4, n_pages=8, max_pages=2)
+    with pytest.raises(ValueError):
+        kv.grant(0, 9)                      # 3 pages > max_pages=2
+
+
+def test_pool_smaller_than_one_slot_rejected():
+    with pytest.raises(ValueError):
+        PagedKVCache(n_slots=1, page_size=4, n_pages=1, max_pages=2)
+
+
+# -- paged kernel vs oracle (deterministic; the hypothesis sweep lives in
+#    test_decode_attn.py and runs where hypothesis is installed) -------------
+
+def _paged_case(seed, T, S, H, Hkv, hd, ps, npg, P):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (T, H, hd))
+    k_pool = jax.random.normal(ks[1], (P, ps, Hkv, hd)) * 0.3
+    v_pool = jax.random.normal(ks[2], (P, ps, Hkv, hd)) * 0.3
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(P)
+    pt = np.full((S + 1, npg), P, np.int32)
+    fill = rng.integers(1, npg * ps + 1, S)
+    used = 0
+    for s in range(S):
+        n = -(-int(fill[s]) // ps)
+        pt[s, :n] = perm[used:used + n]
+        used += n
+    slot_ids = rng.integers(0, S + 1, T).astype(np.int32)  # S = padding row
+    positions = np.array([0 if s == S else rng.integers(0, fill[s])
+                          for s in slot_ids], np.int32)
+    return (q, k_pool, v_pool, jnp.asarray(pt), jnp.asarray(slot_ids),
+            jnp.asarray(positions))
+
+
+@pytest.mark.parametrize("T,S,H,Hkv,hd,ps,npg", [
+    (8, 3, 8, 2, 32, 8, 4), (4, 2, 4, 4, 16, 4, 2), (6, 2, 4, 2, 64, 16, 3),
+])
+def test_paged_kernel_matches_oracle(T, S, H, Hkv, hd, ps, npg):
+    case = _paged_case(11, T, S, H, Hkv, hd, ps, npg, S * npg + 2)
+    y = paged_flash_decode(*case, interpret=True)
+    yr = paged_decode_attn_ref(*case)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_paged_kernel_matches_contiguous_kernel():
+    """A slot's page list in order IS its contiguous buffer (positions are
+    0-indexed inclusive in the paged kernel, a fill level in the seed one)."""
+    S, H, Hkv, hd, ps, npg = 3, 8, 2, 32, 8, 4
+    P = S * npg + 2
+    q, k_pool, v_pool, _, _, _ = _paged_case(5, S, S, H, Hkv, hd, ps, npg, P)
+    pt = np.full((S + 1, npg), P, np.int32)
+    for s in range(S):
+        pt[s] = np.arange(s * npg, (s + 1) * npg)
+    rng = np.random.default_rng(5)
+    fill = rng.integers(1, npg * ps + 1, S)
+    y = paged_flash_decode(q, k_pool, v_pool, jnp.asarray(pt),
+                           jnp.arange(S, dtype=jnp.int32),
+                           jnp.asarray(fill - 1, jnp.int32), interpret=True)
+    k_dense = np.asarray(k_pool)[pt[:S]].reshape(S, npg * ps, Hkv, hd)
+    v_dense = np.asarray(v_pool)[pt[:S]].reshape(S, npg * ps, Hkv, hd)
+    for s in range(S):
+        yr = flash_decode_attn(q[s:s + 1], jnp.asarray(k_dense[s:s + 1]),
+                               jnp.asarray(v_dense[s:s + 1]), int(fill[s]),
+                               block_t=ps, interpret=True)
+        np.testing.assert_allclose(np.asarray(y[s]), np.asarray(yr[0]),
+                                   rtol=1e-4, atol=1e-5)
+
+
+# -- engine-level equivalence ------------------------------------------------
+
+_CFG = ModelConfig(name="t", family="dense", d_model=64, n_layers=2,
+                   n_heads=4, n_kv_heads=2, d_ff=128, vocab=256,
+                   dtype="float32", remat=False)
+_PARAMS = R.model_init(jax.random.PRNGKey(0), _CFG)
+
+
+def _run(reqs_fn, **kw):
+    eng = LLMEngine(_PARAMS, _CFG, batch_slots=2, buffer_len=32,
+                    chunk_size=8, use_mapper=False, **kw)
+    for r in reqs_fn():
+        eng.submit(r)
+    eng.run_until_drained(max_steps=500)
+    return eng, {o.rid: (o.finish_reason, tuple(o.tokens))
+                 for o in eng.outputs()}
+
+
+def _reqs(n=4, max_new=8, plen_base=3, sampled=True):
+    def mk():
+        rng = np.random.default_rng(0)
+        out = []
+        for j in range(n):
+            sp = (SamplingParams(temperature=0.7, top_k=8, seed=11 + j)
+                  if sampled and j % 2 else SamplingParams())
+            out.append(Request(j, rng.integers(1, 200, size=plen_base + 2 * j,
+                                               dtype=np.int32),
+                               max_new_tokens=max_new, sampling=sp))
+        return out
+    return mk
+
+
+@pytest.mark.parametrize("packed", [False, True])
+def test_paged_token_identical(packed):
+    """Greedy AND sampled streams bit-match the contiguous engine, for both
+    the window and the packed step styles."""
+    _, base = _run(_reqs(), packed=packed)
+    eng, paged = _run(_reqs(), packed=packed, paged=True, page_size=4)
+    assert paged == base
+    assert eng.core.pager.used_pages == 0          # fully drained
+    assert eng.stats.kv_pages_used > 0             # and actually exercised
+
+
+def test_paged_t_alloc_is_buffer_len():
+    eng = LLMEngine(_PARAMS, _CFG, batch_slots=2, buffer_len=32,
+                    chunk_size=8, use_mapper=False, paged=True, page_size=4)
+    assert eng.core.T_alloc == 32                  # no window slack
+    assert eng.core.pager.P == 2 * (32 // 4)       # default pool: B*max_pages
+
+
+def test_paged_requires_chunk_size():
+    with pytest.raises(ValueError):
+        LLMEngine(_PARAMS, _CFG, batch_slots=2, buffer_len=32,
+                  use_mapper=False, paged=True)
+
+
+def test_page_size_must_divide_buffer():
+    with pytest.raises(ValueError):
+        LLMEngine(_PARAMS, _CFG, batch_slots=2, buffer_len=32, chunk_size=8,
+                  use_mapper=False, paged=True, page_size=5)
+
+
+def test_paged_admission_page_budget():
+    """A pool below one full slot's worth caps admission like a smaller
+    buffer: reject when max_new can't fit, truncate when asked to."""
+    eng = LLMEngine(_PARAMS, _CFG, batch_slots=2, buffer_len=32,
+                    chunk_size=8, use_mapper=False, paged=True, page_size=4,
+                    kv_pages=8)     # max_pages per slot, but shared: 32 tok
+    ok = eng.submit(Request(0, np.arange(1, 5, dtype=np.int32),
+                            max_new_tokens=29))    # 4 + 29 > 32
+    assert not ok
+    assert eng.outputs()[0].finish_reason == "rejected"
+    eng2 = LLMEngine(_PARAMS, _CFG, batch_slots=2, buffer_len=32,
+                     chunk_size=8, use_mapper=False, paged=True, page_size=4,
+                     kv_pages=8, admission="truncate")
+    assert eng2.submit(Request(0, np.arange(1, 5, dtype=np.int32),
+                               max_new_tokens=29))
+    eng2.run_until_drained(max_steps=200)
+    out = eng2.outputs()[0]
+    assert out.finish_reason == "length" and len(out.tokens) == 28
+
+
+def test_paged_oom_preempts_and_completes():
+    """A pool sized for ONE slot's worth forces the page gate to serialise
+    via preemption-and-recompute; every request still completes and the
+    streams match the ample-pool run token for token."""
+    reqs = _reqs(n=3, max_new=14, plen_base=4, sampled=False)
+    _, ample = _run(reqs, admission="preempt")
+    eng, starved = _run(reqs, admission="preempt", paged=True, page_size=4,
+                        kv_pages=8)                # 8 pages == buffer_len/ps
+    assert starved == ample
+    assert all(r == "length" for r, _ in starved.values())
+    assert eng.core.pager.used_pages == 0
+    assert eng.stats.kv_utilization == 1.0         # the pool hit its ceiling
+
+
+def test_paged_capacity_exceeds_slot_count_budget():
+    """More concurrent short requests than a contiguous engine could hold
+    at the same HBM budget: 4 slots x 1 page each out of a pool that a
+    contiguous layout would exhaust at 1 slot."""
+    eng = LLMEngine(_PARAMS, _CFG, batch_slots=4, buffer_len=32,
+                    chunk_size=8, use_mapper=False, paged=True, page_size=8,
+                    kv_pages=4)     # 32 tokens of KV budget == ONE buffer
+    rng = np.random.default_rng(1)
+    for j in range(4):
+        eng.submit(Request(j, rng.integers(1, 200, size=3, dtype=np.int32),
+                           max_new_tokens=5))      # lifetime 8 tok = 1 page
+    peak = 0
+    while True:
+        remaining = eng.step()
+        peak = max(peak, sum(s is not None for s in eng.slots))
+        if remaining == 0:
+            break
+    assert eng.stats.completed == 4
+    assert peak == 4                               # vs 1 contiguous slot
+
+
+def test_paged_step_shape_bounds():
+    """Page-table churn must not retrace: the paged steady states stay
+    inside the contiguous modes' CI-gated shape bounds."""
+    _, _ = _run(_reqs())               # warm nothing shared; fresh engines
+    eng_w, _ = _run(_reqs(n=6), paged=True, page_size=4)
+    assert eng_w.stats.step_compiles <= 2          # window: (B, W) + (B, 1)
+    eng_p, _ = _run(_reqs(n=6), packed=True, paged=True, page_size=4)
+    assert eng_p.stats.step_compiles <= 3          # packed: pow-2 buckets
+
+
+def test_kv_stats_reported():
+    eng, _ = _run(_reqs(), paged=True, page_size=4)
+    st = eng.stats
+    assert st.kv_pages_total == 2 * (32 // 4)
+    assert 0 < st.kv_pages_used <= st.kv_pages_total
+    assert st.kv_bytes_used == st.kv_pages_used * eng.core.pager.page_bytes
+    assert st.kv_utilization == st.kv_pages_used / st.kv_pages_total
+    eng_c, _ = _run(_reqs())
+    assert eng_c.stats.kv_utilization == 0.0       # contiguous: no pool

@@ -77,6 +77,24 @@ def test_model_layers_counts():
     assert len(layers) == cfg.n_layers * 7
 
 
+def test_kv_read_bytes_grow_modeled_ii():
+    # the serving memory wall: decode II must grow with cached context
+    cfg = get_config("tinyllama_1_1b")
+    ts = [pm.serve_step_timing(cfg, valid_tokens=8, batch_tokens=8,
+                               kv_len=L).total_s for L in (0, 512, 8192)]
+    assert ts[0] < ts[1] < ts[2]
+    # the KV traffic lands on the attention block, not the MLP
+    layers = pm.model_layers(cfg, SHAPES["decode_32k"], n_devices=1, tp=1,
+                             kv_len=4096)
+    kv = {l.name: l.kv_bytes for l in layers}
+    assert all(b > 0 for n, b in kv.items() if n.endswith("attn_o"))
+    assert all(b == 0 for n, b in kv.items() if "attn_o" not in n)
+    # per-token traffic: wasted-row accounting scales it with valid rows
+    t_pad = pm.layer_timing(dataclasses.replace(
+        layers[3], M=8, m_valid=2), pm.V5E)
+    assert t_pad.t_wasted > 0
+
+
 def test_tile_balancer_improves_ragged_gemm():
     # C=192 on 128-blocks wastes 25% of the N dim; menu should recover it
     ch = tb.balance_blocks(M=1024, K=4096, N=192)
