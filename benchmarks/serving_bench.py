@@ -42,6 +42,16 @@ Three comparisons, all written to ``BENCH_serving.json``:
   same HBM budget as a shared page pool, so short requests pin only the
   pages they touch. Peak concurrent requests at a fixed budget, paged vs
   contiguous — deterministic slot accounting, RAISES below 2x (smoke too).
+* **multi-model gateway**: two same-architecture variants served through
+  ONE stacked-alpha engine by the ``ServingGateway``. Two deterministic
+  gates, both raising in smoke mode too: (a) the aggregate resident bytes
+  of the pool (stacked pytree + registry ledger) must stay BELOW one
+  dense-fp32 copy of the largest registered model — the paper's premise
+  that what stays resident per model is the compressed alpha bank; (b)
+  every request's token stream must be IDENTICAL to a dedicated
+  single-model engine run of the same request (greedy and sampled) —
+  cross-model batching is free of numerics drift. The cross-model step
+  must also hold the single-model compile bound.
 
 ``--hw`` threads any registered HW target (v5e/v5p/v6e/cpu) into the
 mapper's execution planning (the model still *runs* on the host backend).
@@ -63,9 +73,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import dataclasses
+
 from repro.configs import get_smoke_config
 from repro.models import registry as R
-from repro.serving import FaultPlan, LLMEngine, Request
+from repro.serving import (FaultPlan, LLMEngine, ModelRegistry, Request,
+                           SamplingParams, ServingGateway)
+from repro.serving.model_registry import (alpha_bank_bytes, dense_fp32_bytes,
+                                          make_alpha_variant, param_bytes)
 
 MAX_STEP_SHAPES = 2      # chunked steady state: (B, chunk) window + (B, 1)
 MAX_PACKED_STEP_SHAPES = 3   # packed: decode bucket + mixed bucket (+1 rare
@@ -80,6 +95,9 @@ PAGED_CAPACITY_GATE = 2.0    # paged KV must hold >= 2x the concurrent
                              # budget (deterministic slot accounting — the
                              # gate applies in smoke mode too)
 PAGE_SIZE = 16           # paged-capacity bench page size (tokens/page)
+MM_RHO = 0.25            # multi-model bench compression ratio: M=2 resident
+                         # banks at rho=0.25 keep the aggregate well under
+                         # one dense copy (2 * 0.25 = half the linear bytes)
 CHAOS_SPECS = ("delay:p=0.1,s=0.002",   # ~10% of steps stall 2ms
                "fail:step=5",           # one step crash -> rebuild + replay
                "nan:step=3,slot=0")     # one poisoned logits row
@@ -200,7 +218,6 @@ def run(print_fn=print, smoke: bool = False,
     n_req = 4 if smoke else 8
     cfg = get_smoke_config("tinyllama_1_1b")
     if alpha_dtype:
-        import dataclasses
         cfg = cfg.replace(ovsf=dataclasses.replace(
             cfg.ovsf, alpha_dtype=alpha_dtype))
     if not smoke:
@@ -434,6 +451,90 @@ def run(print_fn=print, smoke: bool = False,
             f"contiguous concurrency at a {kv_budget_tokens}-token budget "
             f"(need >= {PAGED_CAPACITY_GATE}x)")
 
+    # -- multi-model gateway: resident banks + cross-config batching --------
+    # Spectral-pinned config: the stacked multi kernel routes through the
+    # spectral identity, which is bit-exact against the single-model
+    # spectral path (the dedicated baselines below) — the identity gate
+    # compares raw token streams, so the baselines must share the path.
+    mm_cfg = cfg.replace(ovsf=dataclasses.replace(
+        cfg.ovsf, rho=MM_RHO, exec_path="spectral", alpha_dtype=""))
+    mm_base = R.model_init(jax.random.PRNGKey(0), mm_cfg)
+    mm_var = make_alpha_variant(mm_base, seed=1)
+    n_mm = 6 if smoke else 12
+
+    def mm_requests():
+        rng = np.random.default_rng(5)
+        reqs = []
+        for rid in range(n_mm):
+            sp = (SamplingParams() if rid % 3 else
+                  SamplingParams(temperature=0.8, top_k=20, seed=rid))
+            reqs.append(Request(
+                rid, rng.integers(0, mm_cfg.vocab, 4 + 2 * rid,
+                                  dtype=np.int32),
+                max_new_tokens=6 + rid % 4, sampling=sp,
+                model="tl-a" if rid % 2 == 0 else "tl-b"))
+        return reqs
+
+    reg = ModelRegistry()
+    reg.register("tl-a", mm_cfg, lambda: mm_base)
+    reg.register("tl-b", mm_cfg, lambda: mm_var)
+    gw = ServingGateway(reg, batch_slots=B, buffer_len=buf,
+                        chunk_size=chunk_size, hw=hw)
+    for r in mm_requests():
+        gw.add_request(r)
+    t0 = time.perf_counter()
+    gw.run_until_drained()
+    dt_mm = time.perf_counter() - t0
+    mm_outs = {o.rid: tuple(o.tokens) for o in gw.outputs()}
+    tps_mm = sum(len(t) for t in mm_outs.values()) / dt_mm
+
+    dd_outs = {}
+    dd_tokens, dd_dt = 0, 0.0
+    for model, p_ in (("tl-a", mm_base), ("tl-b", mm_var)):
+        eng = LLMEngine(p_, mm_cfg, batch_slots=B, buffer_len=buf,
+                        chunk_size=chunk_size, hw=hw, use_mapper=False)
+        for r in mm_requests():
+            if r.model == model:
+                eng.add_request(r)
+        t0 = time.perf_counter()
+        stats_d = eng.run_until_drained()
+        dd_dt += time.perf_counter() - t0
+        dd_tokens += stats_d.tokens_out
+        for o in eng.outputs():
+            dd_outs[o.rid] = tuple(o.tokens)
+    tps_dd = dd_tokens / dd_dt
+
+    mm_eng = gw.engine_for("tl-a")
+    resident = max(gw.resident_bytes(), reg.resident_bytes())
+    dense_largest = max(dense_fp32_bytes(e.cfg)
+                        for e in reg.entries.values())
+    residency_ratio = resident / dense_largest
+    mismatches = [rid for rid in mm_outs if mm_outs[rid] != dd_outs.get(rid)]
+    print_fn(f"serving_bench,multi_model,models=2,n={n_mm},"
+             f"{tps_mm:.1f}tok/s,dedicated={tps_dd:.1f}tok/s,"
+             f"step_shapes={len(mm_eng.core.step_shapes)}")
+    print_fn(f"serving_bench,multi_model_residency,resident={resident},"
+             f"dense_fp32_largest={dense_largest},"
+             f"ratio={residency_ratio:.2f}")
+    # Gate (a): the pool's resident bytes must undercut ONE dense copy of
+    # the largest model — deterministic byte accounting, raises in smoke.
+    if resident >= dense_largest:
+        raise RuntimeError(
+            f"multi-model residency gate: {resident} resident bytes for "
+            f"{len(reg.names())} models >= one dense-fp32 copy of the "
+            f"largest ({dense_largest}) — the alpha banks stopped paying "
+            f"for themselves")
+    # Gate (b): token streams must be identical to dedicated engines.
+    if mismatches:
+        raise RuntimeError(
+            f"multi-model identity gate: requests {mismatches} diverged "
+            f"from their dedicated single-model engines")
+    # The cross-model step shares the single-model compile bound.
+    if len(mm_eng.core.step_shapes) > MAX_STEP_SHAPES:
+        raise RuntimeError(
+            f"multi-model step traced {len(mm_eng.core.step_shapes)} "
+            f"shapes (> {MAX_STEP_SHAPES}): variant routing is retracing")
+
     result = {"bench": "serving", "smoke": smoke, "batch_slots": B,
               "model": cfg.name, "backend": jax.default_backend(), "hw": hw,
               "alpha_dtype": alpha_dtype,
@@ -492,6 +593,21 @@ def run(print_fn=print, smoke: bool = False,
                   "kv_pages_peak": stats_pc.kv_pages_used,
                   "kv_utilization": stats_pc.kv_utilization,
                   "completed": stats_pc.completed},
+              "multi_model": {
+                  "n_models": len(reg.names()),
+                  "n_requests": n_mm,
+                  "rho": MM_RHO,
+                  "gateway_tok_s": tps_mm,
+                  "dedicated_tok_s": tps_dd,
+                  "consolidation_ratio": tps_mm / tps_dd if tps_dd else 0.0,
+                  "resident_bytes": resident,
+                  "alpha_bank_bytes": (alpha_bank_bytes(mm_base)
+                                       + alpha_bank_bytes(mm_var)),
+                  "dense_fp32_largest_bytes": dense_largest,
+                  "residency_ratio": residency_ratio,
+                  "streams_identical": not mismatches,
+                  "step_shapes": len(mm_eng.core.step_shapes),
+                  "stacked_param_bytes": param_bytes(mm_eng.params)},
               "latency": lat}
     if json_path:
         with open(json_path, "w") as f:

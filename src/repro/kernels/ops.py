@@ -18,6 +18,7 @@ All paths are numerically validated against each other in tests.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 from typing import Any, Literal, Optional
 
@@ -100,6 +101,18 @@ def spectral_matmul(x: jnp.ndarray, alphas: jnp.ndarray, idx: jnp.ndarray,
     """
     if alpha_dtype:
         alphas = ovsf.dequantize_alphas(alphas, alpha_scale, alpha_dtype)
+    xk = spectral_transform(x, idx, use_pallas=use_pallas,
+                            interpret=interpret)
+    return (xk @ alphas.astype(xk.dtype)).astype(x.dtype)
+
+
+def spectral_transform(x: jnp.ndarray, idx: jnp.ndarray, *,
+                       use_pallas: bool | None = None,
+                       interpret: bool = False) -> jnp.ndarray:
+    """The activation-transform half of ``spectral_matmul``: (..., d_in) ->
+    (..., J) kept-code coefficients. The remaining GEMM against the alpha
+    bank is the caller's — ``ovsf_matmul_multi`` reuses this transform once
+    per token and contracts against a *per-token-selected* bank."""
     d_in = x.shape[-1]
     if idx.ndim == 2:
         ns, nk = idx.shape
@@ -108,14 +121,12 @@ def spectral_matmul(x: jnp.ndarray, alphas: jnp.ndarray, idx: jnp.ndarray,
         xh = fwht(xs, use_pallas=False)                 # tiny per-seg WHT
         xk = jnp.take_along_axis(
             xh, jnp.broadcast_to(idx, xh.shape[:-1] + (nk,)), axis=-1)
-        xk = xk.reshape(x.shape[:-1] + (ns * nk,))
-        return (xk @ alphas.astype(xk.dtype)).astype(x.dtype)
+        return xk.reshape(x.shape[:-1] + (ns * nk,))
     L = ovsf.next_pow2(d_in)
     if L != d_in:
         x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, L - d_in)])
     xh = fwht(x, use_pallas=use_pallas, interpret=interpret)
-    xk = jnp.take(xh, idx, axis=-1)                    # (..., J)
-    return (xk @ alphas.astype(xk.dtype)).astype(x.dtype)
+    return jnp.take(xh, idx, axis=-1)                  # (..., J)
 
 
 # ---------------------------------------------------------------------------
@@ -129,50 +140,87 @@ def spectral_matmul(x: jnp.ndarray, alphas: jnp.ndarray, idx: jnp.ndarray,
 # so the ``is`` identity check can never alias a recycled object id; a layer
 # re-keying (new params) simply overwrites its slot, so the cache holds at
 # most one (alphas, W) pair per cache_key.
+#
+# Entries and counters are keyed by a *model label* (the active
+# ``weight_cache_scope``) so a multi-model gateway gets an exact per-model
+# eviction ledger instead of one process-wide lump. Label "" is the
+# single-model default and keeps the legacy behaviour.
 
-_WEIGHT_CACHE: dict[str, tuple[Any, Any, jnp.ndarray]] = {}
-_WEIGHT_CACHE_HITS = 0      # eager lookups served from the cache
-_WEIGHT_CACHE_MISSES = 0    # eager lookups that ran the generator
+_WEIGHT_CACHE: dict[str, dict[str, tuple[Any, Any, jnp.ndarray]]] = {}
+_WEIGHT_CACHE_HITS: dict[str, int] = {}    # eager lookups served per label
+_WEIGHT_CACHE_MISSES: dict[str, int] = {}  # eager generator runs per label
+_CACHE_LABEL = ""                          # active model/param-version label
 
 
-def clear_weight_cache() -> None:
-    global _WEIGHT_CACHE_HITS, _WEIGHT_CACHE_MISSES
-    _WEIGHT_CACHE.clear()
-    _WEIGHT_CACHE_HITS = 0
-    _WEIGHT_CACHE_MISSES = 0
+@contextlib.contextmanager
+def weight_cache_scope(label: str):
+    """Attribute decompress-cache entries/counters to a model label.
+
+    Engines wrap their step/prefill calls in this scope so every cached
+    dense W (and every hit/miss) lands in that model's ledger. Scopes nest;
+    the outermost default is the unlabelled ("") single-model bucket."""
+    global _CACHE_LABEL
+    prev = _CACHE_LABEL
+    _CACHE_LABEL = label or ""
+    try:
+        yield
+    finally:
+        _CACHE_LABEL = prev
 
 
-def weight_cache_stats() -> dict:
-    """Process-wide decompress-cache counters (hits/misses/entries/bytes).
+def clear_weight_cache(label: Optional[str] = None) -> None:
+    """Drop cached weights (+ counters): one label's, or everything."""
+    if label is None:
+        _WEIGHT_CACHE.clear()
+        _WEIGHT_CACHE_HITS.clear()
+        _WEIGHT_CACHE_MISSES.clear()
+    else:
+        _WEIGHT_CACHE.pop(label, None)
+        _WEIGHT_CACHE_HITS.pop(label, None)
+        _WEIGHT_CACHE_MISSES.pop(label, None)
 
-    Counters are cumulative since import (or ``clear_weight_cache``); callers
-    that want per-run effectiveness (e.g. ``EngineStats``) snapshot a baseline
-    and report the delta."""
-    return {"entries": len(_WEIGHT_CACHE),
-            "hits": _WEIGHT_CACHE_HITS,
-            "misses": _WEIGHT_CACHE_MISSES,
+
+def weight_cache_stats(label: Optional[str] = None) -> dict:
+    """Decompress-cache counters (hits/misses/entries/bytes).
+
+    ``label`` selects one model's ledger; ``None`` aggregates every label
+    (the legacy process-wide view). Counters are cumulative since import (or
+    ``clear_weight_cache``); callers that want per-run effectiveness (e.g.
+    ``EngineStats``) snapshot a baseline and report the delta."""
+    if label is None:
+        caches = list(_WEIGHT_CACHE.values())
+        hits = sum(_WEIGHT_CACHE_HITS.values())
+        misses = sum(_WEIGHT_CACHE_MISSES.values())
+    else:
+        caches = [_WEIGHT_CACHE.get(label, {})]
+        hits = _WEIGHT_CACHE_HITS.get(label, 0)
+        misses = _WEIGHT_CACHE_MISSES.get(label, 0)
+    return {"entries": sum(len(c) for c in caches),
+            "hits": hits,
+            "misses": misses,
             "bytes": sum(int(w.size) * w.dtype.itemsize
-                         for *_s, w in _WEIGHT_CACHE.values())}
+                         for c in caches for *_s, w in c.values())}
 
 
 def cached_generate(cache_key: str, alphas: jnp.ndarray, idx: jnp.ndarray,
                     gen_fn) -> jnp.ndarray:
-    """Memoise ``gen_fn()`` per (cache_key, parameter identity).
+    """Memoise ``gen_fn()`` per (label, cache_key, parameter identity).
 
     Only concrete arrays are cached — under a jit trace the operands are
     tracers and caching would leak abstract values, so we fall through to the
     generator (XLA CSEs duplicate generation within one program; the cache's
     job is reuse *across* program invocations in eager serving)."""
-    global _WEIGHT_CACHE_HITS, _WEIGHT_CACHE_MISSES
     if isinstance(alphas, jax.core.Tracer) or isinstance(idx, jax.core.Tracer):
         return gen_fn()
-    ent = _WEIGHT_CACHE.get(cache_key)
+    label = _CACHE_LABEL
+    bucket = _WEIGHT_CACHE.setdefault(label, {})
+    ent = bucket.get(cache_key)
     if ent is not None and ent[0] is alphas and ent[1] is idx:
-        _WEIGHT_CACHE_HITS += 1
+        _WEIGHT_CACHE_HITS[label] = _WEIGHT_CACHE_HITS.get(label, 0) + 1
         return ent[2]
-    _WEIGHT_CACHE_MISSES += 1
+    _WEIGHT_CACHE_MISSES[label] = _WEIGHT_CACHE_MISSES.get(label, 0) + 1
     W = gen_fn()
-    _WEIGHT_CACHE[cache_key] = (alphas, idx, W)
+    bucket[cache_key] = (alphas, idx, W)
     return W
 
 
@@ -265,3 +313,42 @@ def ovsf_matmul(x: jnp.ndarray, alphas: jnp.ndarray, idx: jnp.ndarray, *,
     else:
         raise ValueError(f"unknown exec path: {path}")
     return y.reshape(lead + (d_out,))
+
+
+def ovsf_matmul_multi(x: jnp.ndarray, alphas: jnp.ndarray, idx: jnp.ndarray,
+                      mids: jnp.ndarray, *,
+                      alpha_scale=None, alpha_dtype: str = "",
+                      use_pallas: bool | None = None,
+                      interpret: bool = False) -> jnp.ndarray:
+    """y[t] = x[t] @ W(alphas[mids[t]], idx) — a stacked multi-variant GEMM.
+
+    ``alphas`` carries a leading model axis (M, J, d_out): M same-architecture
+    variants whose banks share ``idx`` (and every non-alpha leaf). ``mids``
+    (x.shape[:-1]) selects each token's variant inside ONE jit'd call, so a
+    step can mix models without per-model dispatch or retracing — the
+    multi-LoRA analogue for on-the-fly generated weights.
+
+    Uses the spectral identity: the activation transform is variant-
+    independent (idx is shared), so only the closing GEMM is per-variant.
+    Each variant runs the literal single-model ``spectral_matmul`` on the
+    same flattened activations (an unrolled Python loop — M is static and
+    small), and tokens select their variant's row with ``where``, which is a
+    bitwise pass-through. That keeps each token's output bit-identical to
+    the single-model spectral path — the license for token-exact gateway
+    equivalence. A vmapped batched GEMM would be fewer ops but XLA may pick
+    a different reduction order for it, breaking bit-identity. M is small
+    (resident same-arch variants), so the extra FLOPs stay noise next to
+    the attention + dense trunk.
+    """
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    m2 = mids.astype(jnp.int32).reshape(-1)
+    out = None
+    for m in range(alphas.shape[0]):
+        ym = spectral_matmul(x2, alphas[m], idx,
+                             alpha_scale=None if alpha_scale is None
+                             else alpha_scale[m],
+                             alpha_dtype=alpha_dtype, use_pallas=use_pallas,
+                             interpret=interpret)
+        out = ym if out is None else jnp.where((m2 == m)[:, None], ym, out)
+    return out.reshape(lead + (out.shape[-1],))

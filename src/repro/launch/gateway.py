@@ -1,0 +1,267 @@
+"""Multi-model gateway launcher: registry + HTTP front door in one command.
+
+  PYTHONPATH=src python -m repro.launch.gateway --smoke \
+      --models tinyllama_1_1b:tl-a,tinyllama_1_1b:tl-b --chunk-size 8 \
+      --alpha-budget-mb 64 --port 8080
+
+``--models`` is a comma-separated list of ``arch[:alias]`` entries. Each
+architecture's FIRST entry gets its seeded base init; REPEATED entries of
+the same architecture become same-architecture variants (the alpha banks
+are deterministically perturbed per occurrence — the "fine-tune touched
+the alphas" story), so they stack into ONE multi-model engine and batch
+together. Distinct architectures get their own pool engine and round-robin.
+``--alpha-budget-mb`` arms the registry's byte budget: the LRU unpinned
+group is evicted when a load would exceed it, and a model that cannot be
+made resident is refused with 503 (``model_evicted``), never silently
+queued cold.
+
+``--self-test N`` starts the server on an ephemeral port, drives N
+concurrent HTTP requests round-robin across the registered models (mixed
+greedy/sampled, one streaming, plus one deliberate unknown-model request
+that must 404) and exits non-zero unless every response is well-formed and
+every finish reason is attributable to what this invocation configured —
+the CI gateway smoke rides exactly this contract. ``--inject`` faults are
+scoped to ``--inject-model``'s engine only; the self-test additionally
+asserts the OTHER models' requests never see an error reason (per-model
+NaN quarantine isolation).
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import dataclasses
+import json
+import time
+
+import jax
+
+from repro.configs import get_config, get_smoke_config
+from repro.models import registry as R
+from repro.runtime.faults import FaultPlan
+from repro.serving import ModelRegistry, hw_names
+from repro.serving.gateway import GatewayHTTPServer, ServingGateway
+from repro.serving.model_registry import (dense_fp32_bytes,
+                                          make_alpha_variant)
+
+
+def parse_models(spec: str) -> list:
+    """``arch[:alias],...`` -> [(arch, alias, occurrence_index)]."""
+    out = []
+    counts: dict = {}
+    for item in spec.split(","):
+        item = item.strip()
+        if not item:
+            continue
+        arch, _, alias = item.partition(":")
+        k = counts.get(arch, 0)
+        counts[arch] = k + 1
+        if not alias:
+            alias = arch if k == 0 else f"{arch}-{k}"
+        out.append((arch, alias, k))
+    if not out:
+        raise SystemExit("--models: no models parsed")
+    names = [a for _, a, _ in out]
+    if len(set(names)) != len(names):
+        raise SystemExit(f"--models: duplicate aliases in {names}")
+    return out
+
+
+def build_registry(models: list, smoke: bool, seed: int,
+                   budget_bytes=None) -> ModelRegistry:
+    """Registry whose loaders re-materialise params bit-identically:
+    occurrence k of an architecture is its seeded base init for k == 0 and
+    a deterministic alpha perturbation of that base for k > 0."""
+    reg = ModelRegistry(budget_bytes=budget_bytes)
+    for arch, alias, k in models:
+        cfg = get_smoke_config(arch) if smoke else get_config(arch)
+
+        def loader(_arch=arch, _cfg=cfg, _k=k):
+            base = R.model_init(jax.random.PRNGKey(seed), _cfg)
+            if _k == 0:
+                return base
+            return make_alpha_variant(base, seed=seed + _k)
+
+        reg.register(alias, cfg, loader, tags=(arch, f"variant-{k}"))
+    return reg
+
+
+async def _http(host: str, port: int, method: str, path: str,
+                body=None) -> tuple:
+    """One HTTP exchange; returns (status, parsed-JSON-or-SSE-events)."""
+    reader, writer = await asyncio.open_connection(host, port)
+    payload = b"" if body is None else json.dumps(body).encode()
+    writer.write((f"{method} {path} HTTP/1.1\r\nHost: {host}\r\n"
+                  f"Content-Length: {len(payload)}\r\n"
+                  "Connection: close\r\n\r\n").encode() + payload)
+    await writer.drain()
+    status_line = await reader.readline()
+    status = int(status_line.split()[1])
+    ctype = ""
+    while True:
+        h = await reader.readline()
+        if h in (b"\r\n", b"\n", b""):
+            break
+        k, _, v = h.decode().partition(":")
+        if k.strip().lower() == "content-type":
+            ctype = v.strip()
+    raw = await reader.read()
+    writer.close()
+    try:
+        await writer.wait_closed()
+    except Exception:
+        pass
+    if "event-stream" in ctype:
+        events = []
+        for line in raw.decode().splitlines():
+            if line.startswith("data: "):
+                data = line[len("data: "):]
+                events.append(data if data == "[DONE]" else json.loads(data))
+        return status, events
+    body_txt = raw.split(b"\r\n\r\n")[-1] if b"\r\n\r\n" in raw else raw
+    return status, json.loads(body_txt or b"{}")
+
+
+async def self_test(srv: GatewayHTTPServer, names: list, n: int,
+                    injected: set, max_new: int) -> None:
+    """Concurrent client drive of the just-started server (see module
+    docstring for the pass criteria). Raises SystemExit on violation."""
+    host, port = srv.host, srv.port
+
+    async def completion(i: int) -> tuple:
+        model = names[i % len(names)]
+        sampled = i % 3 == 2
+        body = {"model": model, "prompt": [2 + i, 3, 5 + i],
+                "max_tokens": max_new,
+                "temperature": 0.8 if sampled else 0.0,
+                "top_k": 20 if sampled else 0, "seed": i,
+                "stream": i == 1}
+        status, resp = await _http(host, port, "POST", "/v1/completions",
+                                   body)
+        if i == 1:   # streaming: fold SSE events into a completion-like dict
+            toks = [e["choices"][0]["token"] for e in resp
+                    if e != "[DONE]" and e["choices"][0].get("token")
+                    is not None]
+            fins = [e["choices"][0]["finish_reason"] for e in resp
+                    if e != "[DONE]"]
+            if resp[-1] != "[DONE]":
+                raise SystemExit("[gateway] FAILED: stream missing [DONE]")
+            return model, status, toks, fins[-1]
+        ch = resp.get("choices", [{}])[0]
+        return (model, status, ch.get("token_ids", []),
+                ch.get("finish_reason"))
+
+    status, models = await _http(host, port, "GET", "/v1/models")
+    listed = sorted(m["id"] for m in models.get("data", []))
+    if status != 200 or listed != sorted(names):
+        raise SystemExit(f"[gateway] FAILED: /v1/models -> {status} {listed}")
+
+    results = await asyncio.gather(
+        *[completion(i) for i in range(n)],
+        _http(host, port, "POST", "/v1/completions",
+              {"model": "no-such-model", "prompt": [1]}))
+    nf_status, nf_body = results[-1]
+    if nf_status != 404 or nf_body["error"]["code"] != "model_not_found":
+        raise SystemExit(f"[gateway] FAILED: unknown model -> {nf_status} "
+                         f"{nf_body}")
+    bad = []
+    for model, status, toks, reason in results[:-1]:
+        allowed = {"eos", "length"}
+        if model in injected:
+            allowed.add("error")   # the deliberately-poisoned engine only
+        if status != 200 or reason not in allowed:
+            bad.append((model, status, reason))
+        elif reason == "length" and len(toks) != max_new:
+            bad.append((model, status, f"{len(toks)} tokens"))
+    if bad:
+        raise SystemExit(f"[gateway] FAILED: bad completions: {bad}")
+    print(f"[gateway] self-test OK: {n} completions + 404 + streaming "
+          f"(quarantine scope: {sorted(injected) or 'none'})")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--models", required=True,
+                    help="comma-separated arch[:alias]; repeated archs "
+                         "become stacked same-architecture variants")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--buffer", type=int, default=128)
+    ap.add_argument("--chunk-size", type=int, default=16)
+    ap.add_argument("--hw", default="cpu", choices=list(hw_names()))
+    ap.add_argument("--alpha-budget-mb", type=float, default=None,
+                    help="registry byte budget; LRU groups evict past it "
+                         "and unloadable models are refused with 503")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8080,
+                    help="0 = ephemeral (printed at startup)")
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--inject", action="append", default=[],
+                    metavar="KIND:KEY=V,...",
+                    help="deterministic faults for --inject-model's engine "
+                         "only (same grammar as repro.launch.serve)")
+    ap.add_argument("--inject-model", default=None,
+                    help="model alias the --inject plan is scoped to "
+                         "(default: the first registered model)")
+    ap.add_argument("--self-test", type=int, default=0, metavar="N",
+                    help="serve, drive N concurrent HTTP requests, verify "
+                         "the exit contract, and exit (CI smoke mode)")
+    args = ap.parse_args(argv)
+
+    models = parse_models(args.models)
+    names = [alias for _, alias, _ in models]
+    budget = (None if args.alpha_budget_mb is None
+              else int(args.alpha_budget_mb * 1024 * 1024))
+    reg = build_registry(models, args.smoke, args.seed, budget_bytes=budget)
+
+    faults = None
+    injected: set = set()
+    if args.inject:
+        target = args.inject_model or names[0]
+        if target not in names:
+            raise SystemExit(f"--inject-model {target!r} not in {names}")
+        plan = FaultPlan.parse(args.inject, seed=args.seed)
+        faults = {target: plan}
+        # quarantine scope = the target's whole engine (its arch group)
+        group = reg.entries[target].group
+        injected = {n for n in names if reg.entries[n].group == group}
+        print(f"[gateway] chaos: {len(plan.faults)} injector(s) on "
+              f"{target!r} (engine scope: {sorted(injected)})")
+
+    gw = ServingGateway(reg, batch_slots=args.slots, buffer_len=args.buffer,
+                        chunk_size=args.chunk_size, hw=args.hw,
+                        faults=faults)
+    largest = max(dense_fp32_bytes(e.cfg) for e in reg.entries.values())
+    print(f"[gateway] {len(names)} models in "
+          f"{len(reg.groups())} engine group(s): {names}")
+    print(f"[gateway] budget="
+          + (f"{budget/2**20:.1f}MB" if budget else "unbounded")
+          + f" dense-fp32(largest)={largest/2**20:.2f}MB")
+
+    async def run() -> None:
+        srv = GatewayHTTPServer(gw, host=args.host,
+                                port=0 if args.self_test else args.port)
+        await srv.start()
+        print(f"[gateway] listening on http://{srv.host}:{srv.port} "
+              f"(models: GET /v1/models, completions: POST /v1/completions)")
+        if args.self_test:
+            t0 = time.perf_counter()
+            try:
+                await self_test(srv, names, args.self_test, injected,
+                                args.max_new)
+            finally:
+                await srv.stop()
+            s = gw.stats
+            print(f"[gateway] routed={dict(s.routed)} builds="
+                  f"{s.engine_builds} not_found={s.not_found} "
+                  f"evicted={s.evicted_refusals} "
+                  f"resident={gw.resident_bytes()/2**20:.2f}MB "
+                  f"({time.perf_counter()-t0:.1f}s)")
+            return
+        await srv.serve_forever()
+
+    asyncio.run(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -112,7 +112,9 @@ def attn_apply(p: dict, cfg: ModelConfig, x: jnp.ndarray, *,
 
 def attn_apply_packed(p: dict, cfg: ModelConfig, x: jnp.ndarray, *,
                       positions: jnp.ndarray, slot_ids: jnp.ndarray,
-                      cache: dict) -> tuple[jnp.ndarray, dict]:
+                      cache: dict,
+                      mids: Optional[jnp.ndarray] = None
+                      ) -> tuple[jnp.ndarray, dict]:
     """Packed-query attention over a stacked per-slot KV cache.
 
     ``x`` is (1, T, d): T tokens from *different* sequences flattened into one
@@ -131,13 +133,19 @@ def attn_apply_packed(p: dict, cfg: ModelConfig, x: jnp.ndarray, *,
     stale rows from a previous occupant (p' > p) are masked. Duplicate
     (slot, pos) pairs never occur among valid tokens: the scheduler packs
     each slot's tokens at consecutive, unique positions.
+
+    ``mids`` (T,) selects each token's model variant when the OVSF alpha
+    banks are stacked (multi-model gateway batching); None = single model.
     """
     H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     T = x.shape[1]
     B, Tbuf = cache["k"].shape[0], cache["k"].shape[1]
-    q = _split_heads(L.linear_apply(p["q"], x, cfg, "attn_q"), H, hd)
-    k = _split_heads(L.linear_apply(p["k"], x, cfg, "attn_k"), Hkv, hd)
-    v = _split_heads(L.linear_apply(p["v"], x, cfg, "attn_v"), Hkv, hd)
+    m2 = None if mids is None else mids[None, :]            # (1, T)
+    q = _split_heads(L.linear_apply(p["q"], x, cfg, "attn_q", mids=m2), H, hd)
+    k = _split_heads(L.linear_apply(p["k"], x, cfg, "attn_k", mids=m2), Hkv,
+                     hd)
+    v = _split_heads(L.linear_apply(p["v"], x, cfg, "attn_v", mids=m2), Hkv,
+                     hd)
     q = L.apply_rope(q, positions, cfg.rope_theta)
     k = L.apply_rope(k, positions, cfg.rope_theta)
 
@@ -153,7 +161,8 @@ def attn_apply_packed(p: dict, cfg: ModelConfig, x: jnp.ndarray, *,
     mask = t[None, None, :] <= positions[:, None, None]     # (T, 1, Tbuf)
     out = sdpa(q[0][:, None], _dequant(kt, q.dtype),
                _dequant(vt, q.dtype), mask)                 # (T, 1, H, hd)
-    y = L.linear_apply(p["o"], out.reshape(1, T, H * hd), cfg, "attn_o")
+    y = L.linear_apply(p["o"], out.reshape(1, T, H * hd), cfg, "attn_o",
+                       mids=m2)
     return y, {"k": ck, "v": cv}
 
 
@@ -211,19 +220,22 @@ def attn_apply_paged(p: dict, cfg: ModelConfig, x: jnp.ndarray, *,
 
 
 def cross_attn_packed(p: dict, cfg: ModelConfig, x: jnp.ndarray, *,
-                      slot_ids: jnp.ndarray, cache: dict) -> jnp.ndarray:
+                      slot_ids: jnp.ndarray, cache: dict,
+                      mids: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Packed-query cross attention: each token attends its slot's
     precomputed encoder K/V ((B, Te, Hkv, hd) stacked buffers), no mask."""
     H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     T = x.shape[1]
     B = cache["k"].shape[0]
-    q = _split_heads(L.linear_apply(p["q"], x, cfg, "attn_q"), H, hd)
+    m2 = None if mids is None else mids[None, :]
+    q = _split_heads(L.linear_apply(p["q"], x, cfg, "attn_q", mids=m2), H, hd)
     sid = jnp.clip(slot_ids, 0, B - 1)
     kt = jnp.take(cache["k"], sid, axis=0)
     vt = jnp.take(cache["v"], sid, axis=0)
     out = sdpa(q[0][:, None], _dequant(kt, q.dtype),
                _dequant(vt, q.dtype), None)
-    return L.linear_apply(p["o"], out.reshape(1, T, H * hd), cfg, "attn_o")
+    return L.linear_apply(p["o"], out.reshape(1, T, H * hd), cfg, "attn_o",
+                          mids=m2)
 
 
 def make_cross_cache(p: dict, cfg: ModelConfig, src: jnp.ndarray) -> dict:

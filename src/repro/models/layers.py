@@ -58,15 +58,22 @@ def layer_plan(cfg: ModelConfig, name: str):
 
 
 def linear_apply(p: dict, x: jnp.ndarray, cfg: ModelConfig,
-                 name: str = "") -> jnp.ndarray:
+                 name: str = "", mids: Optional[jnp.ndarray] = None
+                 ) -> jnp.ndarray:
     """Apply a linear layer. ``name`` (weight type, e.g. "mlp_up") keys the
     hardware-aware execution plan when ``cfg.exec_plan`` is set; OVSF layers
     then dispatch per-layer (path, blocks, cache) instead of the uniform
-    ``cfg.ovsf.exec_path``."""
+    ``cfg.ovsf.exec_path``. ``mids`` (x.shape[:-1] int32) selects a
+    per-token variant when the alpha bank is stacked (M, J, d_out) — the
+    multi-model gateway's same-architecture batching; dense and unstacked
+    OVSF leaves are variant-shared and ignore it."""
     if "alphas" in p or "alphas_q8" in p or "alphas_q4" in p:
         al, scale, adt = ovsf.alpha_params(p)
         plan = layer_plan(cfg, name)
-        if plan is not None:
+        if mids is not None and al.ndim == 3:
+            y = kops.ovsf_matmul_multi(x, al, p["idx"], mids,
+                                       alpha_scale=scale, alpha_dtype=adt)
+        elif plan is not None:
             y = kops.ovsf_matmul(x, al, p["idx"], plan=plan,
                                  alpha_scale=scale, alpha_dtype=adt)
         else:

@@ -59,6 +59,17 @@ def serve_step_window_paged(params, cfg, cache, page_table, tokens, n_valid):
                                      n_valid)
 
 
+def serve_step_packed_multi(params, cfg, cache, tokens, slot_ids, positions,
+                            new_pos, emit_idx, model_ids):
+    return T.serve_step_packed_multi(params, cfg, cache, tokens, slot_ids,
+                                     positions, new_pos, emit_idx, model_ids)
+
+
+def serve_step_window_multi(params, cfg, cache, tokens, n_valid, model_ids):
+    return T.serve_step_window_multi(params, cfg, cache, tokens, n_valid,
+                                     model_ids)
+
+
 def cache_spec(cfg, B, T_len):
     return T.cache_spec(cfg, B, T_len)
 

@@ -40,15 +40,16 @@ def _mlp_init(key: jax.Array, cfg: ModelConfig, d: int, f: int) -> dict:
     return p
 
 
-def _mlp_apply(p: dict, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
-    u = L.linear_apply(p["up"], x, cfg, "mlp_up")
+def _mlp_apply(p: dict, cfg: ModelConfig, x: jnp.ndarray,
+               mids: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    u = L.linear_apply(p["up"], x, cfg, "mlp_up", mids=mids)
     if cfg.mlp_gated:
-        g = L.linear_apply(p["gate"], x, cfg, "mlp_gate")
+        g = L.linear_apply(p["gate"], x, cfg, "mlp_gate", mids=mids)
         h = (jax.nn.silu(g.astype(jnp.float32))
              * u.astype(jnp.float32)).astype(x.dtype)
     else:
         h = jax.nn.gelu(u.astype(jnp.float32)).astype(x.dtype)
-    return L.linear_apply(p["down"], h, cfg, "mlp_down")
+    return L.linear_apply(p["down"], h, cfg, "mlp_down", mids=mids)
 
 
 def block_init(key: jax.Array, cfg: ModelConfig, kind: str, *,
@@ -525,35 +526,43 @@ _PACKED_FAMILIES = ("dense", "vlm", "moe", "encdec")
 
 
 def _packed_block(p: dict, cfg: ModelConfig, kind: str, x: jnp.ndarray, *,
-                  slot_ids: jnp.ndarray, positions: jnp.ndarray, cache: dict
+                  slot_ids: jnp.ndarray, positions: jnp.ndarray, cache: dict,
+                  mids: Optional[jnp.ndarray] = None
                   ) -> tuple[jnp.ndarray, dict, jnp.ndarray]:
     """One block over a packed token stream (x: (1, T, d)); mirrors
-    ``block_apply`` for the KV-cache kinds with the packed attention path."""
+    ``block_apply`` for the KV-cache kinds with the packed attention path.
+    ``mids`` (T,) selects each token's stacked-alpha variant (multi-model)."""
     aux = jnp.float32(0.0)
     new_cache = dict(cache)
     h = L.rmsnorm_apply(p["norm1"], x, cfg.norm_eps)
     y, upd = A.attn_apply_packed(p["attn"], cfg, h, positions=positions,
                                  slot_ids=slot_ids,
-                                 cache={"k": cache["k"], "v": cache["v"]})
+                                 cache={"k": cache["k"], "v": cache["v"]},
+                                 mids=mids)
     x = x + y
     new_cache.update(upd)
     if "cross" in p:
         h = L.rmsnorm_apply(p["norm_x"], x, cfg.norm_eps)
         y = A.cross_attn_packed(p["cross"], cfg, h, slot_ids=slot_ids,
-                                cache={"k": cache["xk"], "v": cache["xv"]})
+                                cache={"k": cache["xk"], "v": cache["xv"]},
+                                mids=mids)
         x = x + y
     h = L.rmsnorm_apply(p["norm2"], x, cfg.norm_eps)
     if kind == "moe":
         y, aux = M.moe_apply(p["moe"], cfg, h)
     else:
-        y = _mlp_apply(p["mlp"], cfg, h)
+        # mids is (T,); MLP activations are (1, T, d) — match x.shape[:-1]
+        y = _mlp_apply(p["mlp"], cfg, h,
+                       mids=None if mids is None else mids[None, :])
     return x + y, new_cache, aux
 
 
 def serve_step_packed(params: dict, cfg: ModelConfig, cache: dict,
                       tokens: jnp.ndarray, slot_ids: jnp.ndarray,
                       positions: jnp.ndarray, new_pos: jnp.ndarray,
-                      emit_idx: jnp.ndarray) -> tuple[jnp.ndarray, dict]:
+                      emit_idx: jnp.ndarray, *,
+                      model_ids: Optional[jnp.ndarray] = None
+                      ) -> tuple[jnp.ndarray, dict]:
     """Token-packed ragged step: ONE dense pass over every valid token of a
     serving iteration, with zero padded-row model FLOPs.
 
@@ -583,11 +592,20 @@ def serve_step_packed(params: dict, cfg: ModelConfig, cache: dict,
     (``p <= positions[t]``) — see ``attention.attn_apply_packed``. Per-slot
     writes never clamp (scatter, not dynamic_update_slice), so no window
     over-allocation is needed. Not state-safe for SSM/hybrid families.
+
+    ``model_ids`` (B,) maps each slot to a stacked-alpha variant (see
+    ``serve_step_packed_multi``); None = single model.
     """
     if cfg.family not in _PACKED_FAMILIES:
         raise NotImplementedError(
             f"packed step requires a KV-cache family, got {cfg.family!r}")
     kind = _layer_kind(cfg)
+    mids = None
+    if model_ids is not None:
+        # padding tokens (slot_id == B) clip to slot B-1: their variant pick
+        # is arbitrary — output discarded, scatter already dropped
+        B = model_ids.shape[0]
+        mids = jnp.take(model_ids, jnp.clip(slot_ids, 0, B - 1))
     x = L.embed_apply(params["embed"], tokens[None])     # (1, T, d)
     layer_cache = {k: v for k, v in cache.items() if k != "pos"}
 
@@ -595,7 +613,8 @@ def serve_step_packed(params: dict, cfg: ModelConfig, cache: dict,
         xx, aux = carry
         pp, cc = scanned
         xx, new_c, a = _packed_block(pp, cfg, kind, xx, slot_ids=slot_ids,
-                                     positions=positions, cache=cc)
+                                     positions=positions, cache=cc,
+                                     mids=mids)
         return (xx, aux + a), new_c
 
     (x, _aux), new_layer_cache = jax.lax.scan(
@@ -705,3 +724,57 @@ def serve_step_window_paged(params: dict, cfg: ModelConfig, cache: dict,
     return serve_step_paged(params, cfg, cache, page_table,
                             tokens.reshape(-1), slot_ids, positions,
                             new_pos, emit_idx)
+
+
+# ---------------------------------------------------------------------------
+# Multi-model steps: same-architecture variants batched in ONE jit'd call
+# ---------------------------------------------------------------------------
+
+def serve_step_packed_multi(params: dict, cfg: ModelConfig, cache: dict,
+                            tokens: jnp.ndarray, slot_ids: jnp.ndarray,
+                            positions: jnp.ndarray, new_pos: jnp.ndarray,
+                            emit_idx: jnp.ndarray, model_ids: jnp.ndarray
+                            ) -> tuple[jnp.ndarray, dict]:
+    """``serve_step_packed`` over M stacked same-architecture variants.
+
+    ``params`` is one pytree whose OVSF alpha leaves carry a leading (M, ...)
+    model axis (every other leaf — embed, norms, idx, dense linears — is
+    shared across variants; see ``serving.model_registry.VariantSet``).
+    ``model_ids`` (B,) maps each slot to its variant; each packed token
+    contracts against its own slot's alpha bank inside the one jit'd call
+    (``kernels.ops.ovsf_matmul_multi``), so a step can mix models without
+    extra traces — the compile-shape bound is the single-model one.
+    """
+    if cfg.family == "moe":
+        raise NotImplementedError(
+            "multi-model batching over MoE expert banks is not supported "
+            "yet (per-expert alpha stacking)")
+    return serve_step_packed(params, cfg, cache, tokens, slot_ids, positions,
+                             new_pos, emit_idx, model_ids=model_ids)
+
+
+def serve_step_window_multi(params: dict, cfg: ModelConfig, cache: dict,
+                            tokens: jnp.ndarray, n_valid: jnp.ndarray,
+                            model_ids: jnp.ndarray
+                            ) -> tuple[jnp.ndarray, dict]:
+    """``serve_step_window`` semantics over stacked variants: advance slot b
+    by ``n_valid[b]`` of its W tokens under variant ``model_ids[b]``.
+
+    Flattens the (B, W) window onto the packed multi trunk exactly like
+    ``serve_step_window_paged`` flattens onto the paged trunk — padding
+    columns become sentinel-slot tokens (scatter-dropped, output discarded).
+    ``cache["pos"]`` must be (B,) per-slot fill levels (natural layout).
+    """
+    B, W = tokens.shape
+    pos0 = cache["pos"]                                   # (B,)
+    col = jnp.arange(W)
+    valid = col[None, :] < n_valid[:, None]               # (B, W)
+    slot_ids = jnp.where(valid, jnp.arange(B)[:, None], B
+                         ).astype(jnp.int32).reshape(-1)
+    positions = jnp.where(valid, pos0[:, None] + col[None, :], 0
+                          ).astype(jnp.int32).reshape(-1)
+    new_pos = pos0 + n_valid
+    emit_idx = jnp.arange(B) * W + jnp.clip(n_valid - 1, 0, W - 1)
+    return serve_step_packed_multi(params, cfg, cache, tokens.reshape(-1),
+                                   slot_ids, positions, new_pos, emit_idx,
+                                   model_ids)

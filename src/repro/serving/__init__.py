@@ -1,13 +1,25 @@
-"""Request-level serving stack (see ``repro.serving.api`` for the surface)."""
+"""Request-level serving stack (see ``repro.serving.api`` for the surface).
+
+Single-model serving is ``LLMEngine``; multi-model serving — resident alpha
+banks, cross-config continuous batching, the async HTTP front door — is
+``ServingGateway`` over a ``ModelRegistry`` (``repro.serving.gateway`` /
+``repro.serving.model_registry``).
+"""
 from repro.runtime.faults import Fault, FaultPlan, InjectedFault, parse_fault
-from repro.serving.api import (FINISH_EOS, FINISH_ERROR, FINISH_LENGTH,
-                               FINISH_PREEMPTED, FINISH_REJECTED, FINISH_SHED,
-                               FINISH_TIMEOUT, HWTarget, Request,
-                               RequestOutput, SamplingParams, hw_by_name,
-                               hw_names, register_hw, resolve_hw)
+from repro.serving.api import (FINISH_EOS, FINISH_ERROR, FINISH_EVICTED,
+                               FINISH_LENGTH, FINISH_PREEMPTED,
+                               FINISH_REJECTED, FINISH_SHED, FINISH_TIMEOUT,
+                               HWTarget, Request, RequestOutput,
+                               SamplingParams, hw_by_name, hw_names,
+                               register_hw, resolve_hw)
 from repro.serving.core import EngineCore, StepOutput
-from repro.serving.engine import EngineStats, LLMEngine, ServingEngine
+from repro.serving.engine import EngineStats, LLMEngine
+from repro.serving.gateway import GatewayStats, ServingGateway
 from repro.serving.kvcache import PagedKVCache, pages_for
+from repro.serving.model_registry import (ModelEntry, ModelRegistry,
+                                          VariantSet, alpha_bank_bytes,
+                                          dense_fp32_bytes,
+                                          make_alpha_variant, param_bytes)
 from repro.serving.scheduler import (ChunkTask, FCFSScheduler, PackedStep,
                                      PrefillAssignment, PrefillGroup,
                                      SchedulerOutput, bucket_for,
@@ -18,11 +30,16 @@ __all__ = [
     "SamplingParams", "Request", "RequestOutput",
     "FINISH_LENGTH", "FINISH_EOS", "FINISH_REJECTED",
     "FINISH_TIMEOUT", "FINISH_SHED", "FINISH_ERROR", "FINISH_PREEMPTED",
+    "FINISH_EVICTED",
     "Fault", "FaultPlan", "InjectedFault", "parse_fault",
     "HWTarget", "hw_by_name", "hw_names", "register_hw", "resolve_hw",
     "FCFSScheduler", "PrefillGroup", "PrefillAssignment", "ChunkTask",
     "SchedulerOutput", "StepOutput", "bucket_lengths", "bucket_for",
     "PackedStep", "pack_bucket", "pack_step", "unpack_step",
-    "EngineCore", "LLMEngine", "ServingEngine", "EngineStats",
+    "EngineCore", "LLMEngine", "EngineStats",
+    "ServingGateway", "GatewayStats",
+    "ModelRegistry", "ModelEntry", "VariantSet",
+    "alpha_bank_bytes", "param_bytes", "dense_fp32_bytes",
+    "make_alpha_variant",
     "PagedKVCache", "pages_for",
 ]

@@ -6,7 +6,7 @@ Three layers sit behind this module (vLLM-style split, sized for this repo):
   ``scheduler``  pluggable admission + length-bucketed batching (FCFS default)
   ``core``       EngineCore: stacked cache, jit'd bucketed prefill, ONE fused
                  decode+sample call per token
-  ``engine``     LLMEngine orchestrator (+ thin ServingEngine compat shim)
+  ``engine``     LLMEngine orchestrator
 
 Requests carry their own :class:`SamplingParams` (greedy / temperature /
 top-k with a per-request seed) and an optional streaming token callback;
@@ -35,6 +35,7 @@ __all__ = [
     "SamplingParams", "Request", "RequestOutput",
     "FINISH_LENGTH", "FINISH_EOS", "FINISH_REJECTED",
     "FINISH_TIMEOUT", "FINISH_SHED", "FINISH_ERROR", "FINISH_PREEMPTED",
+    "FINISH_EVICTED",
     "HWTarget", "HW", "hw_by_name", "hw_names", "register_hw", "resolve_hw",
 ]
 
@@ -48,6 +49,11 @@ FINISH_PREEMPTED = "preempted"  # preempted AND could not be re-admitted
                                 # (bounded queue full of higher-priority
                                 # work); otherwise preemption is transient —
                                 # the request is recomputed, never finished
+FINISH_EVICTED = "evicted"      # gateway: the target model's weights are
+                                # evicted and could not be made resident
+                                # within the byte budget — a distinct
+                                # backpressure signal, never a silent queue
+                                # against a cold model
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,6 +96,9 @@ class Request:
     prompt: np.ndarray                  # (S,) int32 token ids
     max_new_tokens: int = 16
     sampling: SamplingParams = GREEDY
+    # gateway routing target (registry model name); None = single-model
+    # engines, which ignore it
+    model: Optional[str] = None
     # called as stream(rid, token) the moment each token is committed
     stream: Optional[Callable[[int, int], None]] = None
     priority: int = 0                   # higher = more urgent

@@ -210,6 +210,45 @@ def _paged_window_step_fn(cfg: ModelConfig, W: int):
     return jax.jit(_pw)
 
 
+@functools.lru_cache(maxsize=64)
+def _mm_packed_step_fn(cfg: ModelConfig, Tb: int):
+    """Compiled fused *multi-model* packed step: identical contract to
+    ``_packed_step_fn`` plus a (B,) ``model_ids`` vector routing each slot's
+    tokens to its stacked alpha variant (``serve_step_packed_multi``). The
+    vector rides as a traced argument (constant shape), so re-routing a slot
+    to a different resident model never retraces."""
+
+    def _mm(p, caches, tokens, slot_ids, positions, new_pos, emit_idx,
+            model_ids, poison, temps, topks, greedy, keys):
+        logits, new_caches = R.serve_step_packed_multi(
+            p, cfg, caches, tokens, slot_ids, positions, new_pos, emit_idx,
+            model_ids)
+        toks, nkeys, ok = _health_and_sample(logits, poison, temps, topks,
+                                             greedy, keys)
+        return toks, new_caches, nkeys, ok
+
+    return jax.jit(_mm)
+
+
+@functools.lru_cache(maxsize=32)
+def _mm_window_step_fn(cfg: ModelConfig, W: int):
+    """Compiled fused *multi-model* window step: the (B, W) ragged window is
+    flattened onto the packed multi trunk inside the jit (see
+    ``models.transformer.serve_step_window_multi``) — exact scatters, no
+    window slack, and the same two steady-state shapes (W = chunk_size,
+    W = 1) as the single-model window path."""
+
+    def _mm(p, caches, tokens, n_tok, model_ids, poison, temps, topks,
+            greedy, keys):
+        logits, new_caches = R.serve_step_window_multi(
+            p, cfg, caches, tokens, n_tok, model_ids)
+        toks, nkeys, ok = _health_and_sample(logits, poison, temps, topks,
+                                             greedy, keys)
+        return toks, new_caches, nkeys, ok
+
+    return jax.jit(_mm)
+
+
 @functools.lru_cache(maxsize=32)
 def _window_step_fn(cfg: ModelConfig, W: int):
     """Compiled fused window step: per-slot ragged (W-wide) model advance +
@@ -291,7 +330,7 @@ class EngineCore:
                  buffer_len: int = 256, window: int = 0,
                  packed: bool = False, paged: bool = False,
                  page_size: int = 16, kv_pages: Optional[int] = None,
-                 faults: Optional[FaultPlan] = None):
+                 faults: Optional[FaultPlan] = None, variants: int = 0):
         self.params = params
         self.cfg = cfg
         self.B = batch_slots
@@ -301,6 +340,20 @@ class EngineCore:
         self.paged = paged
         self.page_size = page_size
         self.faults = faults
+        # Multi-model mode (variants = number of stacked alpha variants the
+        # params pytree carries; 0 = single-model). Every slot routes through
+        # its entry in the host ``model_ids`` vector — the gateway's
+        # same-architecture cross-config batching.
+        self.variants = variants
+        if variants:
+            if paged:
+                raise NotImplementedError(
+                    "multi-model variants over the paged KV cache are not "
+                    "supported yet (page-table routing per variant)")
+            if window <= 0:
+                raise ValueError(
+                    "multi-model serving consumes prompts via chunks; pass "
+                    "a chunked window (chunk_size)")
         # monotone fused-step counter driving the fault plan; the engine
         # carries it across a watchdog core rebuild so a step-pinned fault
         # fires exactly once per run, not once per core instance
@@ -309,9 +362,11 @@ class EngineCore:
         # Logical capacity is buffer_len (admission math unchanged); the
         # allocation carries `window` slack columns so a W-wide ragged write
         # at pos <= buffer_len - 1 never clamps (see module docstring). The
-        # packed and paged paths scatter at exact (slot, pos) coordinates —
-        # no clamping is possible, so they need (and get) no slack.
-        self.T_alloc = buffer_len if (packed or paged) else buffer_len + window
+        # packed, paged, and multi-model paths scatter at exact (slot, pos)
+        # coordinates — no clamping is possible, so they need (and get) no
+        # slack.
+        self.T_alloc = (buffer_len if (packed or paged or variants)
+                        else buffer_len + window)
         self.prefill_compiles = 0
         self.step_shapes: set = set()   # distinct fused step shapes traced
         self.pager: Optional[PagedKVCache] = None
@@ -339,10 +394,12 @@ class EngineCore:
                                              n_pages)
             self.caches["pos"] = jnp.zeros((batch_slots,), jnp.int32)
             self._host_pos = np.zeros(batch_slots, np.int64)
-        elif packed:
+        elif packed or variants:
             # Natural (family) cache layout with B rows per leaf and a
             # per-slot pos vector: the packed model call scans layers over
             # it directly — no per-slot vmap, no leading-slot transpose.
+            # (Multi-model window mode also lives here: its (B, W) window is
+            # flattened onto the packed multi trunk inside the jit.)
             self.caches = R.init_cache(cfg, batch_slots, self.T_alloc)
             self.caches["pos"] = jnp.zeros((batch_slots,), jnp.int32)
             # host mirror of the per-slot fill levels (decode positions)
@@ -355,6 +412,10 @@ class EngineCore:
                                            (batch_slots,) + a.shape), one)
             self._axes = _leaf_batch_axes(cfg, self.T_alloc)
         self._step_fn = _decode_step_fn(cfg)
+        # Per-slot variant routing (host-side; the ENGINE scatters each
+        # slot's model index at admission, exactly like sampling state).
+        # Single-model engines leave it all-zero and never pass it down.
+        self.model_ids = np.zeros(batch_slots, np.int32)
         # Per-slot sampling state (host-side, scattered at admission).
         self.temps = np.zeros(batch_slots, np.float32)
         self.topks = np.zeros(batch_slots, np.int32)
@@ -518,17 +579,19 @@ class EngineCore:
         if self.faults:
             self.faults.raise_or_delay(idx)
             poison = self.faults.poison_row(idx, self.B)
-        if self.packed or self.paged:
+        if self.packed or self.paged or self.variants:
             if so.prefill_groups:
-                raise ValueError("packed/paged mode serves prompts via "
-                                 "chunks only; a legacy scheduler emitted "
-                                 "prefill_groups")
+                raise ValueError("packed/paged/multi-model mode serves "
+                                 "prompts via chunks only; a legacy "
+                                 "scheduler emitted prefill_groups")
             if so.chunks or so.decode_slots:
                 t0 = time.perf_counter()
                 if self.packed:
                     self._packed_step(so, last_tokens, out, poison)
-                else:
+                elif self.paged:
                     self._paged_window_step(so, last_tokens, out, poison)
+                else:
+                    self._mm_window_step(so, last_tokens, out, poison)
                 dt = time.perf_counter() - t0
                 # A chunk-free packed step IS decode-shaped: book it as
                 # decode_s so the measured-vs-modeled calibration loop
@@ -656,23 +719,30 @@ class EngineCore:
         ps = pack_step(so, last_tokens, self._host_pos, self.B,
                        self.window or 1)
         self.step_shapes.add(("packed", ps.n_batch))
+        sample_args = (
+            jnp.asarray(poison if poison is not None else self._zero_poison),
+            jnp.asarray(self.temps), jnp.asarray(self.topks),
+            jnp.asarray(self.greedy), jnp.asarray(self.keys))
         packed_args = (
             jnp.asarray(ps.tokens),
             jnp.asarray(ps.slot_ids), jnp.asarray(ps.positions),
             jnp.asarray(ps.new_pos, dtype=jnp.int32),
-            jnp.asarray(ps.emit_idx, dtype=jnp.int32),
-            jnp.asarray(poison if poison is not None else self._zero_poison),
-            jnp.asarray(self.temps), jnp.asarray(self.topks),
-            jnp.asarray(self.greedy), jnp.asarray(self.keys))
+            jnp.asarray(ps.emit_idx, dtype=jnp.int32))
         if self.paged:
             fn = _paged_step_fn(self.cfg, ps.n_batch)
             toks, self.caches, nkeys, ok = fn(
                 self.params, self.caches,
-                jnp.asarray(self.pager.page_table), *packed_args)
+                jnp.asarray(self.pager.page_table), *packed_args,
+                *sample_args)
+        elif self.variants:
+            fn = _mm_packed_step_fn(self.cfg, ps.n_batch)
+            toks, self.caches, nkeys, ok = fn(
+                self.params, self.caches, *packed_args,
+                jnp.asarray(self.model_ids), *sample_args)
         else:
             fn = _packed_step_fn(self.cfg, ps.n_batch)
             toks, self.caches, nkeys, ok = fn(
-                self.params, self.caches, *packed_args)
+                self.params, self.caches, *packed_args, *sample_args)
         toks, nkeys, ok = np.asarray(toks), np.asarray(nkeys), np.asarray(ok)
         self._host_pos[:] = ps.new_pos
         # Same key-commit discipline as the window path: emitting slots only;
@@ -732,6 +802,64 @@ class EngineCore:
         toks, nkeys, ok = np.asarray(toks), np.asarray(nkeys), np.asarray(ok)
         self._host_pos[:] = self._host_pos + n_tok
         # Same key-commit discipline as the contiguous window path.
+        bad: list = []
+        for i in so.decode_slots:
+            if not ok[i]:
+                bad.append(i)
+                continue
+            out.decode_tokens[i] = int(toks[i])
+            self.keys[i] = nkeys[i]
+        for c in so.chunks:
+            if c.last:
+                if not ok[c.slot]:
+                    bad.append(c.slot)
+                    continue
+                out.first_tokens[c.slot] = int(toks[c.slot])
+                self.keys[c.slot] = nkeys[c.slot]
+        out.bad_slots = out.bad_slots + tuple(bad)
+        out.n_valid_tokens += int(n_tok.sum())
+        out.n_batch_tokens += self.B * W
+
+    def _mm_window_step(self, so: SchedulerOutput,
+                        last_tokens: Optional[np.ndarray],
+                        out: StepOutput,
+                        poison: Optional[np.ndarray] = None) -> None:
+        """Multi-model counterpart of ``_window_step``: the same (B, W)
+        ragged window, flattened inside the jit onto the packed multi trunk
+        (``serve_step_window_multi``) with each slot's tokens routed to its
+        stacked alpha variant by ``model_ids``. Pure-decode steps ride the
+        W = 1 shape, booked as ``("decode", 1)`` so compile accounting
+        matches the single-model window engine (two steady-state shapes)."""
+        W = ((self.window or max(c.length for c in so.chunks))
+             if so.chunks else 1)
+        tokens = np.zeros((self.B, W), np.int32)
+        n_tok = np.zeros(self.B, np.int32)
+        for i in so.decode_slots:
+            tokens[i, 0] = last_tokens[i]
+            n_tok[i] = 1
+        fresh = []
+        for c in so.chunks:
+            tokens[c.slot, :c.length] = c.req.prompt[c.start:c.start + c.length]
+            n_tok[c.slot] = c.length
+            if c.start == 0:            # new request: re-base pos, seed keys
+                self._set_sampling(c.slot, c.req.sampling, c.req.resume_key)
+                fresh.append(c.slot)
+        if fresh:
+            self.caches["pos"] = self.caches["pos"].at[
+                jnp.asarray(fresh)].set(0)
+            self._host_pos[fresh] = 0
+        self.step_shapes.add(("window", W) if so.chunks else ("decode", 1))
+        fn = _mm_window_step_fn(self.cfg, W)
+        toks, self.caches, nkeys, ok = fn(
+            self.params, self.caches, jnp.asarray(tokens),
+            jnp.asarray(n_tok), jnp.asarray(self.model_ids),
+            jnp.asarray(poison if poison is not None else self._zero_poison),
+            jnp.asarray(self.temps),
+            jnp.asarray(self.topks), jnp.asarray(self.greedy),
+            jnp.asarray(self.keys))
+        toks, nkeys, ok = np.asarray(toks), np.asarray(nkeys), np.asarray(ok)
+        self._host_pos[:] = self._host_pos + n_tok
+        # Same key-commit discipline as the single-model window path.
         bad: list = []
         for i in so.decode_slots:
             if not ok[i]:

@@ -51,8 +51,13 @@ the engine additionally feeds each pure-decode step's measured wall time
 into a :class:`~repro.runtime.calibrate.CalibrationTable`; ``replan()``
 re-runs the mapper under the accumulated measured-vs-modeled corrections.
 
-``ServingEngine`` remains as a **deprecated** compatibility alias of
-``LLMEngine`` and now emits a ``DeprecationWarning``.
+Multi-model serving (the gateway's same-architecture batching): construct
+with ``variants=M`` (the stacked-alpha variant count of the params pytree)
+and a ``model_index`` callable mapping ``Request.model`` names to variant
+indices — each slot's tokens then route through its own alpha bank inside
+ONE fused step (see ``serving.gateway``). ``model_label`` keys the
+decompress-weight-cache counters per model, so a multi-tenant process can
+attribute resident dense-W bytes to the engine that generated them.
 """
 from __future__ import annotations
 
@@ -73,7 +78,7 @@ from repro.serving.core import _BUCKETED_FAMILIES, EngineCore, StepOutput
 from repro.serving.scheduler import (FCFSScheduler, SchedulerOutput,
                                      legacy_schedule)
 
-__all__ = ["LLMEngine", "ServingEngine", "EngineStats", "Request",
+__all__ = ["LLMEngine", "EngineStats", "Request",
            "SamplingParams", "RequestOutput"]
 
 
@@ -107,11 +112,12 @@ class EngineStats:
     decode_s: float = 0.0         # pure fused decode steps
     mixed_s: float = 0.0          # fused window steps (chunks + decode)
     # decompress-weight-cache effectiveness for THIS run (delta against the
-    # process-wide kernels.ops counters snapshotted at engine construction)
+    # engine's model_label bucket of the kernels.ops counters, snapshotted
+    # at engine construction — multi-tenant processes see per-model figures)
     weight_cache_hits: int = 0
     weight_cache_misses: int = 0
     weight_cache_entries: int = 0
-    weight_cache_bytes: int = 0   # resident dense-W footprint (process-wide)
+    weight_cache_bytes: int = 0   # resident dense-W footprint (this label)
     # paged KV cache (paged=True engines; all zero otherwise). Used/bytes
     # are HIGH-WATER marks across the run — a drained engine has released
     # every page, so the instantaneous value at read time is always 0; the
@@ -148,11 +154,29 @@ class LLMEngine:
                  calibrate: bool = False,
                  max_waiting: Optional[int] = None,
                  step_timeout_s: Optional[float] = None,
-                 faults: Optional[FaultPlan] = None):
+                 faults: Optional[FaultPlan] = None,
+                 variants: int = 0, model_index=None,
+                 model_label: Optional[str] = None):
         self._base_cfg = cfg
         self.hw = hw
         self.hw_label = resolve_hw(hw).name
+        # Multi-model mode: variants = stacked-alpha variant count of the
+        # params pytree (0 = single-model); model_index maps Request.model
+        # names to variant rows. The mapper plans per-layer exec paths for a
+        # single alpha bank — stacked leaves dispatch the multi spectral
+        # path regardless, so skip planning rather than key traces on a
+        # plan the step never consults.
+        self.variants = int(variants)
+        self._model_index = model_index
+        if self.variants and chunk_size is None:
+            raise ValueError("variants>0 requires chunk_size (multi-model "
+                             "steps serve prompts via chunk tasks)")
+        use_mapper = use_mapper and not self.variants
         self.cfg = self._plan_cfg(cfg, batch_slots, use_mapper, hw)
+        # Keys this engine's decompress-weight-cache bucket (satellite of the
+        # multi-model gateway: per-model byte attribution). Defaults to the
+        # config name so single-engine stats stay self-describing.
+        self.model_label = cfg.name if model_label is None else model_label
         self.params = params
         self.B = batch_slots
         self.T = buffer_len
@@ -189,7 +213,8 @@ class LLMEngine:
                                buffer_len=buffer_len,
                                window=chunk_size or 0, packed=packed,
                                paged=paged, page_size=page_size,
-                               kv_pages=kv_pages, faults=faults)
+                               kv_pages=kv_pages, faults=faults,
+                               variants=self.variants)
         self.bucketed = bucketed_prefill and self.core.supports_bucketing
         self.scheduler = scheduler if scheduler is not None else FCFSScheduler(
             buffer_len, admission=admission, bucketing=self.bucketed,
@@ -212,7 +237,7 @@ class LLMEngine:
         self._finished: list[RequestOutput] = []
         from repro.kernels import ops as _ops
         self._ops = _ops
-        self._wc_base = _ops.weight_cache_stats()
+        self._wc_base = _ops.weight_cache_stats(self.model_label)
         self.calibrate = calibrate
         from repro.runtime.calibrate import CalibrationTable
         self.calibration = CalibrationTable()
@@ -380,13 +405,21 @@ class LLMEngine:
             if c.start == 0:
                 self.slots[c.slot] = c.req
                 self._prefill_done[c.slot] = 0
+                if self.variants:       # route the slot to its alpha variant
+                    self.core.model_ids[c.slot] = (
+                        self._model_index(c.req.model)
+                        if self._model_index is not None
+                        and c.req.model is not None else 0)
         for pg in so.prefill_groups:    # legacy whole-prompt prefill
             for i, req in pg.slot_reqs:
                 self.slots[i] = req
                 self._prefill_done[i] = 0
         t0 = time.perf_counter()
         try:
-            out = self.core.step(so, last)
+            # Scope the decompress weight cache to this engine's model label
+            # so a multi-tenant process attributes hits/bytes per model.
+            with self._ops.weight_cache_scope(self.model_label):
+                out = self.core.step(so, last)
         except Exception:               # watchdog: step crashed — recover
             self._recover()
             return self._remaining()
@@ -516,7 +549,8 @@ class LLMEngine:
                                buffer_len=self.T, window=self.chunk or 0,
                                packed=self.packed, paged=self.paged,
                                page_size=self.page_size,
-                               kv_pages=self.kv_pages, faults=self.faults)
+                               kv_pages=self.kv_pages, faults=self.faults,
+                               variants=self.variants)
         self.core.step_idx = old.step_idx
         self.core.prefill_compiles = old.prefill_compiles
         self.core.step_shapes = old.step_shapes
@@ -557,7 +591,7 @@ class LLMEngine:
             len(pg.slot_reqs) if pg.exact else 1 for pg in so.prefill_groups)
         st.prefill_compiles = self.core.prefill_compiles
         st.step_compiles = len(self.core.step_shapes)
-        wc = self._ops.weight_cache_stats()
+        wc = self._ops.weight_cache_stats(self.model_label)
         st.weight_cache_hits = wc["hits"] - self._wc_base["hits"]
         st.weight_cache_misses = wc["misses"] - self._wc_base["misses"]
         st.weight_cache_entries = wc["entries"]
@@ -590,15 +624,3 @@ class LLMEngine:
                                  weight_reuse=1, calibration=self.calibration)
 
 
-class ServingEngine(LLMEngine):
-    """Deprecated compatibility shim for the pre-request-API engine surface.
-
-    Use :class:`LLMEngine` — same constructor (the dead ``greedy`` flag was
-    already removed; per-request ``SamplingParams`` subsumed it).
-    """
-
-    def __init__(self, *args, **kw):
-        warnings.warn(
-            "ServingEngine is deprecated; use repro.serving.LLMEngine "
-            "(same constructor)", DeprecationWarning, stacklevel=2)
-        super().__init__(*args, **kw)

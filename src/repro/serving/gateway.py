@@ -1,0 +1,454 @@
+"""Multi-model serving gateway: one front door over a pool of LLMEngines.
+
+The gateway routes per-request ``Request.model`` names onto engines built
+from a :class:`~repro.serving.model_registry.ModelRegistry`:
+
+* **Same-architecture variants batch into ONE engine** — a registry group
+  (models whose configs share an architecture signature and whose params
+  differ only on alpha banks) serves from a single
+  ``LLMEngine(variants=M)`` over a stacked params pytree; each slot's
+  tokens route through its model's alpha bank inside the same fused jit'd
+  step (multi-LoRA-style), so cross-model batching costs no extra compiles
+  beyond the single-model step shapes.
+* **Distinct architectures round-robin across pool engines** — each group
+  gets its own engine; ``step()`` advances them round-robin under the
+  shared admission/deadline policy the gateway was constructed with.
+* **Byte-budget residency** — engines exist exactly for resident groups.
+  ``add_request`` on an evicted model triggers reload-within-budget
+  (evicting the LRU unpinned group, engines dropped with their
+  weight-cache buckets); when the budget cannot be met the request is
+  refused with the distinct ``FINISH_EVICTED`` backpressure reason — never
+  a silent queue against a cold model.
+* **HTTP front door** — :class:`GatewayHTTPServer` is a minimal stdlib
+  ``asyncio`` server exposing OpenAI-compatible ``GET /v1/models`` and
+  ``POST /v1/completions`` (non-streaming JSON, or SSE streaming with
+  ``"stream": true``); unknown models get a 404, evicted-and-unloadable
+  models a 503. The engine pump runs in a background thread; token
+  callbacks cross back into the event loop via ``call_soon_threadsafe``.
+
+Compile-count note: every model of a group shares the group engine's jit
+traces (the stacked alpha leaves are one traced argument; ``model_ids``
+routing is data, not shape), so a gateway serving N same-architecture
+models compiles exactly as many step shapes as ONE chunked engine —
+``("window", W)`` and ``("decode", 1)``.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import itertools
+import json
+import threading
+from typing import Optional
+
+import numpy as np
+
+from repro.serving.api import FINISH_EVICTED, Request, SamplingParams
+from repro.serving.engine import LLMEngine
+from repro.serving.model_registry import (ModelRegistry, param_bytes,
+                                          stack_variants)
+
+__all__ = ["ServingGateway", "GatewayStats", "GatewayHTTPServer"]
+
+
+@dataclasses.dataclass
+class GatewayStats:
+    requests: int = 0               # add_request calls (incl. refusals)
+    routed: dict = dataclasses.field(default_factory=dict)  # model -> count
+    not_found: int = 0              # unknown model names
+    evicted_refusals: int = 0       # FINISH_EVICTED backpressure responses
+    engine_builds: int = 0          # engines constructed (first build + re)
+    engines_dropped: int = 0        # engines dropped by eviction
+    reloads: int = 0                # engine rebuilds after a prior eviction
+
+
+class ServingGateway:
+    """Multi-model router over per-group LLMEngines (see module docstring).
+
+    ``engine_kw`` is forwarded to every engine the gateway builds — the
+    shared admission/deadline policy (``admission``, ``max_waiting``,
+    ``step_timeout_s``, ``packed``, ...). ``chunk_size`` is mandatory:
+    multi-model steps serve prompts via chunk tasks, and a uniform step
+    style keeps the pool's compile budget predictable. ``faults`` maps a
+    model name to a :class:`~repro.runtime.faults.FaultPlan` wired into
+    that model's (group) engine only — chaos in one engine cannot reach
+    another model's pool sibling."""
+
+    def __init__(self, registry: ModelRegistry, *, batch_slots: int = 4,
+                 buffer_len: int = 128, chunk_size: int = 16,
+                 eos_id: Optional[int] = None, hw="cpu",
+                 faults: Optional[dict] = None, **engine_kw):
+        if chunk_size is None:
+            raise ValueError("the gateway serves prompts via chunked steps; "
+                             "chunk_size must be set")
+        self.registry = registry
+        self._engine_kw = dict(batch_slots=batch_slots,
+                               buffer_len=buffer_len,
+                               chunk_size=chunk_size, eos_id=eos_id,
+                               hw=hw, **engine_kw)
+        self._faults = dict(faults or {})
+        for n in self._faults:
+            if self.registry.get(n) is None:
+                raise KeyError(f"fault plan targets unregistered model {n!r}")
+        self._engines: dict = {}        # group signature -> LLMEngine
+        self._rr = 0                    # round-robin cursor over engines
+        self._finished: list = []
+        self.stats = GatewayStats()
+
+    # -- engine lifecycle ---------------------------------------------------
+
+    def _drop_engine(self, group: str) -> None:
+        eng = self._engines.pop(group, None)
+        if eng is not None:
+            # the evicted model's resident dense-W decompressions go with it
+            eng._ops.clear_weight_cache(eng.model_label)
+            self.stats.engines_dropped += 1
+
+    def _build_engine(self, group: str) -> None:
+        members = self.registry.group_members(group)
+        entries = [self.registry.entries[n] for n in members]
+        cfg = entries[0].cfg
+        label = "+".join(members)
+        kw = dict(self._engine_kw)
+        plans = [self._faults[n] for n in members if n in self._faults]
+        if plans:
+            kw["faults"] = plans[0]
+        if len(members) == 1:
+            eng = LLMEngine(entries[0].params, cfg, model_label=label, **kw)
+        else:
+            vset = stack_variants(
+                [(n, e.params) for n, e in zip(members, entries)], cfg)
+            eng = LLMEngine(vset.params, cfg, variants=vset.M,
+                            model_index=vset.index, model_label=label, **kw)
+        self._engines[group] = eng
+        self.stats.engine_builds += 1
+        if any(e.evictions for e in entries):
+            self.stats.reloads += 1
+
+    def _ensure_engine(self, group: str) -> bool:
+        """Engine-for-group invariant: an engine exists exactly when its
+        group is resident (``_drop_engine`` rides the eviction callback)."""
+        if group in self._engines:
+            return True
+        if not self.registry.ensure_resident_group(
+                group, on_evict=self._drop_engine):
+            return False
+        self._build_engine(group)
+        return True
+
+    # -- request intake -----------------------------------------------------
+
+    def add_request(self, req: Request) -> tuple:
+        """Route ``req.model``; returns ``(admitted, info)`` where info is
+        the engine backpressure float, or :data:`FINISH_EVICTED` when the
+        model could not be made resident. Unknown models raise ``KeyError``
+        (the HTTP layer's 404)."""
+        self.stats.requests += 1
+        entry = self.registry.get(req.model)
+        if entry is None:
+            self.stats.not_found += 1
+            raise KeyError(f"unknown model {req.model!r}; registered: "
+                           f"{sorted(self.registry.names())}")
+        if not self._ensure_engine(entry.group):
+            self.stats.evicted_refusals += 1
+            req.finish_reason = FINISH_EVICTED
+            out = req.output()
+            self._finished.append(out)
+            if req.on_finish is not None and not req._notified:
+                req._notified = True
+                req.on_finish(out)
+            return False, FINISH_EVICTED
+        name = req.model
+        self.registry.touch(name)
+        self.registry.pin(name)        # in-flight requests block eviction
+        prev = req.on_finish
+
+        def _fin(out, _n=name, _prev=prev):
+            self.registry.unpin(_n)
+            self._finished.append(out)
+            if _prev is not None:
+                _prev(out)
+
+        req.on_finish = _fin
+        self.stats.routed[name] = self.stats.routed.get(name, 0) + 1
+        return self._engines[entry.group].add_request(req)
+
+    # -- the step loop ------------------------------------------------------
+
+    @property
+    def pending(self) -> int:
+        """Occupied slots + queued waiters across the pool."""
+        return sum(e._remaining() for e in self._engines.values())
+
+    def step(self) -> int:
+        """Advance every pool engine one scheduler iteration, round-robin
+        order rotating across calls so no engine systematically steps last.
+        Returns the remaining work across the pool."""
+        engines = list(self._engines.values())
+        if not engines:
+            return 0
+        n = len(engines)
+        total = 0
+        for k in range(n):
+            total += engines[(self._rr + k) % n].step()
+        self._rr = (self._rr + 1) % n
+        return total
+
+    def run_until_drained(self, max_steps: int = 10_000) -> GatewayStats:
+        for _ in range(max_steps):
+            if self.step() == 0:
+                break
+        return self.stats
+
+    # -- introspection ------------------------------------------------------
+
+    def outputs(self) -> list:
+        """Finished requests across the pool, in gateway finish order."""
+        return list(self._finished)
+
+    def resident_bytes(self) -> int:
+        """ACTUAL resident params footprint: the sum over pool engines of
+        their (stacked) pytree bytes — what the serving bench's raising
+        gate compares against one dense-fp32 copy of the largest model."""
+        return sum(param_bytes(e.params) for e in self._engines.values())
+
+    def engine_for(self, name: str) -> Optional[LLMEngine]:
+        entry = self.registry.get(name)
+        if entry is None:
+            return None
+        return self._engines.get(entry.group)
+
+
+# ---------------------------------------------------------------------------
+# The async HTTP front door (stdlib asyncio only — no new dependencies)
+# ---------------------------------------------------------------------------
+
+_REASONS = {200: "OK", 404: "Not Found", 500: "Internal Server Error",
+            503: "Service Unavailable"}
+
+
+class GatewayHTTPServer:
+    """Minimal OpenAI-compatible HTTP server over a :class:`ServingGateway`.
+
+    Routes:
+      ``GET /v1/models``        registered models + residency
+      ``POST /v1/completions``  token-id completions; ``"stream": true``
+                                emits SSE chunks (one per committed token)
+
+    There is no tokenizer in this repo: ``prompt`` is a list of token ids
+    (a string prompt is mapped deterministically onto ids via char codes
+    modulo the model's vocab). The engine pump runs in ONE background
+    thread — engines are not thread-safe, so intake (``add_request``) and
+    stepping share ``self._lock``; token/finish callbacks hop back into
+    the event loop via ``call_soon_threadsafe``."""
+
+    def __init__(self, gateway: ServingGateway, host: str = "127.0.0.1",
+                 port: int = 8080):
+        self.gateway = gateway
+        self.host = host
+        self.port = port
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._pump_thread: Optional[threading.Thread] = None
+        self._server: Optional[asyncio.AbstractServer] = None
+        self.loop: Optional[asyncio.AbstractEventLoop] = None
+        self._rids = itertools.count()
+
+    # -- lifecycle ----------------------------------------------------------
+
+    async def start(self) -> None:
+        self.loop = asyncio.get_running_loop()
+        self._server = await asyncio.start_server(self._handle, self.host,
+                                                  self.port)
+        self.port = self._server.sockets[0].getsockname()[1]  # resolve :0
+        self._pump_thread = threading.Thread(target=self._pump, daemon=True)
+        self._pump_thread.start()
+
+    async def stop(self) -> None:
+        self._stop.set()
+        if self._pump_thread is not None:
+            await self.loop.run_in_executor(None, self._pump_thread.join)
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+
+    async def serve_forever(self) -> None:
+        async with self._server:
+            await self._server.serve_forever()
+
+    def _pump(self) -> None:
+        """Background step loop: drains the pool whenever any engine has
+        work; idles on a short wait otherwise."""
+        while not self._stop.is_set():
+            with self._lock:
+                work = self.gateway.step() if self.gateway.pending else 0
+            if not work:
+                self._stop.wait(0.002)
+
+    # -- HTTP plumbing ------------------------------------------------------
+
+    async def _handle(self, reader: asyncio.StreamReader,
+                      writer: asyncio.StreamWriter) -> None:
+        try:
+            line = await reader.readline()
+            if not line:
+                return
+            parts = line.decode("latin-1").split()
+            if len(parts) < 2:
+                return
+            method, path = parts[0], parts[1]
+            headers = {}
+            while True:
+                h = await reader.readline()
+                if h in (b"\r\n", b"\n", b""):
+                    break
+                k, _, v = h.decode("latin-1").partition(":")
+                headers[k.strip().lower()] = v.strip()
+            body = b""
+            n = int(headers.get("content-length", "0") or 0)
+            if n:
+                body = await reader.readexactly(n)
+            if method == "GET" and path == "/v1/models":
+                await self._models(writer)
+            elif method == "POST" and path == "/v1/completions":
+                await self._completions(writer, body)
+            else:
+                await self._error(writer, 404, f"no route {method} {path}",
+                                  code="not_found")
+        except Exception as exc:            # noqa: BLE001 — server must live
+            try:
+                await self._error(writer, 500, f"{type(exc).__name__}: {exc}",
+                                  code="internal_error")
+            except Exception:
+                pass
+        finally:
+            try:
+                writer.close()
+                await writer.wait_closed()
+            except Exception:
+                pass
+
+    async def _json(self, writer, status: int, obj) -> None:
+        data = json.dumps(obj).encode()
+        writer.write((f"HTTP/1.1 {status} {_REASONS.get(status, 'OK')}\r\n"
+                      "Content-Type: application/json\r\n"
+                      f"Content-Length: {len(data)}\r\n"
+                      "Connection: close\r\n\r\n").encode() + data)
+        await writer.drain()
+
+    async def _error(self, writer, status: int, message: str,
+                     code: str = "error") -> None:
+        await self._json(writer, status,
+                         {"error": {"message": message, "type": code,
+                                    "code": code}})
+
+    # -- routes -------------------------------------------------------------
+
+    async def _models(self, writer) -> None:
+        data = [{"id": n, "object": "model", "owned_by": "repro",
+                 "ready": self.gateway.registry.entries[n].resident,
+                 "tags": list(self.gateway.registry.entries[n].tags)}
+                for n in self.gateway.registry.names()]
+        await self._json(writer, 200, {"object": "list", "data": data})
+
+    async def _completions(self, writer, body: bytes) -> None:
+        try:
+            spec = json.loads(body or b"{}")
+        except json.JSONDecodeError as exc:
+            return await self._error(writer, 500, f"bad JSON body: {exc}",
+                                     code="invalid_request")
+        model = spec.get("model")
+        entry = self.gateway.registry.get(model)
+        if entry is None:
+            return await self._error(
+                writer, 404, f"model {model!r} not found",
+                code="model_not_found")
+        prompt = spec.get("prompt", [])
+        if isinstance(prompt, str):
+            prompt = [ord(c) % entry.cfg.vocab for c in prompt]
+        if not prompt:
+            prompt = [1]
+        stream = bool(spec.get("stream", False))
+        rid = next(self._rids)
+        q: asyncio.Queue = asyncio.Queue()
+        loop = self.loop
+
+        def on_tok(_rid, tok):
+            loop.call_soon_threadsafe(q.put_nowait, ("tok", int(tok)))
+
+        def on_fin(out):
+            loop.call_soon_threadsafe(q.put_nowait, ("fin", out))
+
+        req = Request(
+            rid, np.asarray(prompt, np.int32),
+            max_new_tokens=int(spec.get("max_tokens", 16)),
+            model=model,
+            sampling=SamplingParams(
+                temperature=float(spec.get("temperature", 0.0)),
+                top_k=int(spec.get("top_k", 0)),
+                seed=int(spec.get("seed", 0))),
+            deadline_s=spec.get("deadline_s"),
+            stream=on_tok if stream else None,
+            on_finish=on_fin)
+
+        def _add():
+            with self._lock:
+                return self.gateway.add_request(req)
+
+        try:
+            # intake may load checkpoints / trigger jit compiles: keep it
+            # off the event loop so concurrent requests still parse
+            _admitted, info = await loop.run_in_executor(None, _add)
+        except KeyError as exc:
+            return await self._error(writer, 404, str(exc),
+                                     code="model_not_found")
+        if info == FINISH_EVICTED:
+            return await self._error(
+                writer, 503,
+                f"model {model!r} is evicted and cannot be made resident "
+                "within the byte budget; retry later",
+                code="model_evicted")
+        # Any other refusal (rejected/shed) already finalized the request:
+        # the "fin" event is queued and the loops below return immediately.
+        if stream:
+            writer.write(b"HTTP/1.1 200 OK\r\n"
+                         b"Content-Type: text/event-stream\r\n"
+                         b"Cache-Control: no-cache\r\n"
+                         b"Connection: close\r\n\r\n")
+            await writer.drain()
+            while True:
+                kind, val = await q.get()
+                if kind == "tok":
+                    chunk = {"id": f"cmpl-{rid}", "object": "text_completion",
+                             "model": model,
+                             "choices": [{"index": 0, "text": f"{val} ",
+                                          "token": val,
+                                          "finish_reason": None}]}
+                    writer.write(b"data: " + json.dumps(chunk).encode()
+                                 + b"\n\n")
+                    await writer.drain()
+                else:
+                    chunk = {"id": f"cmpl-{rid}", "object": "text_completion",
+                             "model": model,
+                             "choices": [{"index": 0, "text": "",
+                                          "finish_reason":
+                                          val.finish_reason}]}
+                    writer.write(b"data: " + json.dumps(chunk).encode()
+                                 + b"\n\ndata: [DONE]\n\n")
+                    await writer.drain()
+                    return
+        out = None
+        while out is None:
+            kind, val = await q.get()
+            if kind == "fin":
+                out = val
+        payload = {"id": f"cmpl-{rid}", "object": "text_completion",
+                   "model": model,
+                   "choices": [{"index": 0,
+                                "text": " ".join(str(t) for t in out.tokens),
+                                "token_ids": list(out.tokens),
+                                "finish_reason": out.finish_reason}],
+                   "usage": {"prompt_tokens": out.prompt_len,
+                             "completion_tokens": out.n_tokens,
+                             "total_tokens": out.prompt_len + out.n_tokens}}
+        await self._json(writer, 200, payload)

@@ -5,11 +5,9 @@ contract: scheduler chunk/budget math (pure, no model), chunk-boundary edge
 cases (prompt shorter than a chunk, exact-multiple prompts, EOS mid-run,
 determinism vs the unchunked path under the same seed), the 2-shape compile
 bound of the fused window step, the measured-vs-modeled calibration loop
-(injected skew re-maps a layer on re-plan), weight-cache stats surfacing,
-and the ServingEngine deprecation.
+(injected skew re-maps a layer on re-plan), and per-label weight-cache
+stats surfacing.
 """
-import warnings
-
 import numpy as np
 import jax
 import pytest
@@ -22,7 +20,7 @@ from repro.runtime.calibrate import (CalibrationTable, attribute_step,
                                      update_from_step)
 from repro.serving import (ChunkTask, FCFSScheduler, FINISH_EOS,
                            FINISH_LENGTH, LLMEngine, Request, SamplingParams,
-                           SchedulerOutput, ServingEngine)
+                           SchedulerOutput)
 
 
 @pytest.fixture(scope="module")
@@ -370,7 +368,7 @@ def test_update_from_step_records_executed_paths(tiny):
 
 
 # ---------------------------------------------------------------------------
-# Satellites: weight-cache stats surfacing + ServingEngine deprecation
+# Satellite: per-label weight-cache stats surfacing
 # ---------------------------------------------------------------------------
 
 def test_weight_cache_stats_surface_in_engine_stats():
@@ -403,12 +401,3 @@ def test_cached_generate_counts_hits_and_misses():
     assert len(calls) == 1
     ops.clear_weight_cache()
 
-
-def test_serving_engine_shim_warns_deprecation(tiny):
-    cfg, params = tiny
-    with pytest.warns(DeprecationWarning, match="LLMEngine"):
-        eng = ServingEngine(params, cfg, batch_slots=2, buffer_len=32)
-    assert isinstance(eng, LLMEngine)
-    with warnings.catch_warnings():
-        warnings.simplefilter("error", DeprecationWarning)
-        LLMEngine(params, cfg, batch_slots=2, buffer_len=32)  # no warning

@@ -1,0 +1,399 @@
+"""Multi-model serving gateway: registry residency, stacked-variant
+batching, token-exact routing, eviction backpressure, and the HTTP door.
+
+The load-bearing claims:
+
+* ``stack_variants`` places the variant axis so the per-block scan slice
+  is the (M, ...) leaf the multi kernel expects, and rejects non-stackable
+  pytrees.
+* A gateway request's token stream is IDENTICAL to a dedicated
+  single-model ``LLMEngine`` run of the same request (greedy and sampled,
+  window and packed step styles) — cross-model batching is free of
+  numerics drift. Dedicated baselines pin the spectral exec path
+  (``use_mapper=False``): the multi kernel routes per-token through the
+  spectral identity, which is bit-exact against the single-model spectral
+  path but not against a mapper-planned materialize path.
+* Evict-then-reload through a checkpoint loader restores BIT-IDENTICAL
+  alpha banks, and an unloadable model surfaces ``FINISH_EVICTED``
+  backpressure (then admits again once the budget allows — the
+  requeue-on-reload path).
+* A fault plan scoped to one model's engine cannot poison another pool
+  engine's requests (per-model NaN quarantine isolation).
+"""
+import asyncio
+import dataclasses
+import json
+
+import numpy as np
+import jax
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.configs import get_smoke_config
+from repro.configs.base import smoke_variant
+from repro.models import registry as R
+from repro.runtime.faults import FaultPlan
+from repro.serving import (FINISH_EVICTED, LLMEngine, ModelRegistry, Request,
+                           SamplingParams, ServingGateway)
+from repro.serving.gateway import GatewayHTTPServer
+from repro.serving.model_registry import (alpha_bank_bytes, arch_signature,
+                                          dense_fp32_bytes,
+                                          make_alpha_variant, param_bytes,
+                                          stack_variants)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    """Spectral-pinned smoke config + base/variant params (shared: engine
+    builds in this module reuse one compile footprint)."""
+    cfg = get_smoke_config("tinyllama_1_1b")
+    cfg = cfg.replace(ovsf=dataclasses.replace(cfg.ovsf,
+                                               exec_path="spectral"))
+    base = R.model_init(jax.random.PRNGKey(0), cfg)
+    var = make_alpha_variant(base, seed=1)
+    return cfg, base, var
+
+
+def _req(rid, plen, vocab, max_new=6, model=None, greedy=True):
+    rng = np.random.default_rng(100 + rid)
+    sp = (SamplingParams() if greedy else
+          SamplingParams(temperature=0.8, top_k=20, seed=rid))
+    return Request(rid, rng.integers(0, vocab, plen, dtype=np.int32),
+                   max_new_tokens=max_new, sampling=sp, model=model)
+
+
+def _registry(cfg, base, var):
+    reg = ModelRegistry()
+    reg.register("m-a", cfg, lambda: base)
+    reg.register("m-b", cfg, lambda: var)
+    return reg
+
+
+# ---------------------------------------------------------------------------
+# Registry: bytes, LRU, pinning, budget rollback
+# ---------------------------------------------------------------------------
+
+def test_byte_accounting_orders_sanely(tiny):
+    cfg, base, _ = tiny
+    total = param_bytes(base)
+    bank = alpha_bank_bytes(base)
+    assert 0 < bank < total
+    assert dense_fp32_bytes(cfg) > 0
+    # the compressed bank is the small thing the gateway keeps per model
+    assert bank < dense_fp32_bytes(cfg)
+
+
+def test_stack_variants_axis_and_validation(tiny):
+    cfg, base, var = tiny
+    vset = stack_variants([("a", base), ("b", var)], cfg)
+    assert vset.M == 2 and vset.index("b") == 1 and vset.index(None) == 0
+    flat = jax.tree_util.tree_flatten_with_path(vset.params)[0]
+    bflat = dict(
+        ("/".join(str(getattr(k, "key", k)) for k in path), leaf)
+        for path, leaf in jax.tree_util.tree_flatten_with_path(base)[0])
+    saw_alpha = False
+    for path, leaf in flat:
+        key = str(getattr(path[-1], "key", ""))
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        if key in ("alphas", "alphas_q8", "alphas_q4", "alpha_scale"):
+            saw_alpha = True
+            # blocks leaves are scan-stacked (n_layers leading): the variant
+            # axis sits at 1 so each block's scan slice is (M, ...)
+            axis = 1 if name.startswith("blocks") else 0
+            assert leaf.shape[axis] == 2, name
+            assert np.array_equal(
+                np.asarray(jax.numpy.take(leaf, 0, axis=axis)),
+                np.asarray(bflat[name])), name
+        else:
+            assert leaf.shape == bflat[name].shape, name
+    assert saw_alpha
+    # a single member is not a stack
+    with pytest.raises(ValueError, match=">= 2"):
+        stack_variants([("a", base)], cfg)
+    # a differing SHARED leaf (embedding) must be rejected, named
+    bad = jax.tree_util.tree_map(lambda a: a, base)
+    bad["embed"]["table"] = bad["embed"]["table"] + 1.0
+    with pytest.raises(ValueError, match="shared leaf"):
+        stack_variants([("a", base), ("bad", bad)], cfg)
+
+
+def test_make_alpha_variant_touches_only_alphas(tiny):
+    _, base, var = tiny
+    for (path, a), (_, b) in zip(
+            jax.tree_util.tree_flatten_with_path(base)[0],
+            jax.tree_util.tree_flatten_with_path(var)[0]):
+        key = str(getattr(path[-1], "key", ""))
+        same = np.array_equal(np.asarray(a), np.asarray(b))
+        if key in ("alphas", "alpha_scale"):
+            assert not same, path
+        else:
+            assert same, path
+
+
+def test_registry_lru_eviction_pinning_and_rollback(tiny):
+    cfg, base, var = tiny
+    other_cfg = smoke_variant(cfg, n_layers=1)
+    other = R.model_init(jax.random.PRNGKey(2), other_cfg)
+    assert arch_signature(other_cfg) != arch_signature(cfg)
+
+    reg = ModelRegistry()
+    reg.register("m-a", cfg, lambda: base)
+    reg.register("m-b", cfg, lambda: var)
+    reg.register("solo", other_cfg, lambda: other)
+    ga = reg.entries["m-a"].group
+    gs = reg.entries["solo"].group
+    assert reg.entries["m-b"].group == ga  # same-arch pair shares a group
+
+    # unbounded: both groups resident; ledger counts stacked sharing once
+    assert reg.ensure_resident_group(ga) and reg.ensure_resident_group(gs)
+    pair_bytes = (param_bytes(base) + alpha_bank_bytes(var))
+    assert reg.resident_bytes() == pair_bytes + param_bytes(other)
+
+    # budget for one group: loading the pair evicts LRU 'solo'
+    dropped = []
+    reg.budget_bytes = pair_bytes
+    reg.touch("solo")
+    reg.touch("m-a")  # pair more recent -> solo is the LRU victim
+    reg.evict_group(ga)
+    assert reg.ensure_resident_group(ga, on_evict=dropped.append)
+    assert dropped == [gs]
+    assert not reg.entries["solo"].resident
+    assert reg.entries["solo"].evictions == 1
+
+    # pinned groups are not victims: reloading solo must roll back, not
+    # evict the pinned pair
+    reg.pin("m-b")
+    assert not reg.ensure_resident_group(gs, on_evict=dropped.append)
+    assert not reg.entries["solo"].resident          # rolled back
+    assert reg.entries["m-a"].resident               # pinned pair intact
+    reg.unpin("m-b")
+    assert reg.ensure_resident_group(gs)             # now evictable
+    assert not reg.entries["m-a"].resident
+
+
+# ---------------------------------------------------------------------------
+# Token-exact equivalence: gateway == dedicated engines
+# ---------------------------------------------------------------------------
+
+def _mk_requests(vocab):
+    """Mixed greedy/sampled requests round-robin over the two models."""
+    reqs = []
+    for rid in range(6):
+        reqs.append(_req(rid, plen=3 + 2 * rid, vocab=vocab,
+                         model="m-a" if rid % 2 == 0 else "m-b",
+                         greedy=rid < 3))
+    return reqs
+
+
+def _dedicated_streams(cfg, base, var, vocab, **engine_kw):
+    outs = {}
+    for model, params in [("m-a", base), ("m-b", var)]:
+        eng = LLMEngine(params, cfg, batch_slots=4, buffer_len=64,
+                        chunk_size=8, hw="cpu", use_mapper=False,
+                        **engine_kw)
+        for r in _mk_requests(vocab):
+            if r.model == model:
+                eng.add_request(r)
+        eng.run_until_drained()
+        for o in eng.outputs():
+            outs[o.rid] = tuple(o.tokens)
+    return outs
+
+
+@pytest.mark.parametrize("packed", [False, True],
+                         ids=["window", "packed"])
+def test_gateway_tokens_match_dedicated_engines(tiny, packed):
+    cfg, base, var = tiny
+    gw = ServingGateway(_registry(cfg, base, var), batch_slots=4,
+                        buffer_len=64, chunk_size=8, hw="cpu", packed=packed)
+    for r in _mk_requests(cfg.vocab):
+        admitted, _ = gw.add_request(r)
+        assert admitted
+    gw.run_until_drained()
+    got = {o.rid: tuple(o.tokens) for o in gw.outputs()}
+    want = _dedicated_streams(cfg, base, var, cfg.vocab, packed=packed)
+    assert got == want
+    eng = gw.engine_for("m-a")
+    assert eng is gw.engine_for("m-b")   # one stacked engine for the pair
+    assert eng.variants == 2
+    # cross-model batching costs no extra traces beyond the single-model
+    # chunked step shapes
+    assert len(eng.core.step_shapes) <= 2
+
+
+# ---------------------------------------------------------------------------
+# Eviction: FINISH_EVICTED backpressure + bit-identical reload
+# ---------------------------------------------------------------------------
+
+def test_finish_evicted_backpressure_then_requeue(tiny):
+    cfg, base, var = tiny
+    other_cfg = smoke_variant(cfg, n_layers=1)
+    other = R.model_init(jax.random.PRNGKey(2), other_cfg)
+    reg = ModelRegistry()
+    reg.register("m-a", cfg, lambda: base)
+    reg.register("m-b", cfg, lambda: var)
+    reg.register("solo", other_cfg, lambda: other)
+    gw = ServingGateway(reg, batch_slots=2, buffer_len=64, chunk_size=8,
+                        hw="cpu")
+    pair_bytes = param_bytes(base) + alpha_bank_bytes(var)
+    reg.budget_bytes = pair_bytes
+
+    fins = []
+    r0 = _req(0, 4, cfg.vocab, model="m-a")
+    r0.on_finish = fins.append
+    admitted, _ = gw.add_request(r0)       # pair resident + pinned
+    assert admitted
+
+    # solo cannot fit while the pair is pinned by the in-flight request:
+    # distinct FINISH_EVICTED refusal, on_finish fired exactly once
+    r1 = _req(1, 4, other_cfg.vocab, model="solo")
+    r1.on_finish = fins.append
+    admitted, info = gw.add_request(r1)
+    assert (admitted, info) == (False, FINISH_EVICTED)
+    assert [o.finish_reason for o in fins if o.rid == 1] == [FINISH_EVICTED]
+    assert gw.stats.evicted_refusals == 1
+    assert not reg.entries["solo"].resident            # rolled back
+    assert gw.engine_for("solo") is None               # and no engine built
+
+    # drain the pin, lift the budget: the SAME work re-queued now admits
+    gw.run_until_drained()
+    assert [o.finish_reason for o in fins if o.rid == 0] != [FINISH_EVICTED]
+    reg.budget_bytes = None
+    admitted, _ = gw.add_request(_req(2, 4, other_cfg.vocab, model="solo"))
+    assert admitted
+    gw.run_until_drained()
+    # the budget-rollback counted as solo's eviction, so this build is a
+    # reload — the requeue-on-reload path the stat exists to observe
+    assert gw.stats.reloads == 1
+    assert reg.entries["solo"].resident
+
+
+def test_evict_then_reload_restores_bitwise_alpha_banks(tiny, tmp_path):
+    cfg, base, var = tiny
+    ckpt.save(base, str(tmp_path / "a"), 0)
+    ckpt.save(var, str(tmp_path / "b"), 0)
+    reg = ModelRegistry()
+    reg.register(
+        "m-a", cfg,
+        lambda: ckpt.restore(str(tmp_path / "a"), 0, template=base)[0])
+    reg.register(
+        "m-b", cfg,
+        lambda: ckpt.restore(str(tmp_path / "b"), 0, template=var)[0])
+    g = reg.entries["m-a"].group
+    assert reg.ensure_resident_group(g)
+    first = {n: jax.tree_util.tree_leaves(reg.entries[n].params)
+             for n in ("m-a", "m-b")}
+    reg.evict_group(g)
+    assert all(not reg.entries[n].resident for n in ("m-a", "m-b"))
+    assert reg.ensure_resident_group(g)    # reload through the checkpoint
+    assert reg.entries["m-a"].loads == 2
+    for n, ref in (("m-a", base), ("m-b", var)):
+        again = jax.tree_util.tree_leaves(reg.entries[n].params)
+        for l0, l1, lr in zip(first[n], again,
+                              jax.tree_util.tree_leaves(ref)):
+            assert np.array_equal(np.asarray(l0), np.asarray(l1))
+            assert np.array_equal(np.asarray(l1), np.asarray(lr))
+
+
+# ---------------------------------------------------------------------------
+# Fault isolation: per-model NaN quarantine
+# ---------------------------------------------------------------------------
+
+def test_nan_quarantine_stays_on_injected_engine(tiny):
+    cfg, base, var = tiny
+    other_cfg = smoke_variant(cfg, n_layers=1)
+    other = R.model_init(jax.random.PRNGKey(2), other_cfg)
+    reg = ModelRegistry()
+    reg.register("clean", cfg, lambda: base)
+    reg.register("chaos", other_cfg, lambda: other)
+    plan = FaultPlan.parse(["nan:step=0,slot=0"], seed=0)
+    gw = ServingGateway(reg, batch_slots=2, buffer_len=64, chunk_size=8,
+                        hw="cpu", faults={"chaos": plan})
+    for rid, model in [(0, "clean"), (1, "chaos"), (2, "clean")]:
+        vocab = cfg.vocab if model == "clean" else other_cfg.vocab
+        admitted, _ = gw.add_request(_req(rid, 4, vocab, model=model))
+        assert admitted
+    gw.run_until_drained()
+    outs = {o.rid: o for o in gw.outputs()}
+    # the poisoned engine quarantines ITS slot; the clean engine's requests
+    # never see the fault
+    assert outs[1].finish_reason == "error"
+    for rid in (0, 2):
+        assert outs[rid].finish_reason in ("eos", "length"), outs[rid]
+    # an unknown fault target is rejected at construction
+    with pytest.raises(KeyError, match="unregistered"):
+        ServingGateway(reg, chunk_size=8, faults={"nope": plan})
+
+
+# ---------------------------------------------------------------------------
+# HTTP front door
+# ---------------------------------------------------------------------------
+
+def test_http_models_completions_404_and_streaming(tiny):
+    cfg, base, var = tiny
+    gw = ServingGateway(_registry(cfg, base, var), batch_slots=2,
+                        buffer_len=64, chunk_size=8, hw="cpu")
+
+    async def _call(host, port, method, path, body=None):
+        reader, writer = await asyncio.open_connection(host, port)
+        payload = b"" if body is None else json.dumps(body).encode()
+        writer.write((f"{method} {path} HTTP/1.1\r\nHost: {host}\r\n"
+                      f"Content-Length: {len(payload)}\r\n"
+                      "Connection: close\r\n\r\n").encode() + payload)
+        await writer.drain()
+        status = int((await reader.readline()).split()[1])
+        ctype = ""
+        while True:
+            h = await reader.readline()
+            if h in (b"\r\n", b"\n", b""):
+                break
+            k, _, v = h.decode().partition(":")
+            if k.strip().lower() == "content-type":
+                ctype = v.strip()
+        raw = await reader.read()
+        writer.close()
+        if "event-stream" in ctype:
+            return status, [l[6:] for l in raw.decode().splitlines()
+                            if l.startswith("data: ")]
+        return status, json.loads(raw or b"{}")
+
+    async def drive():
+        srv = GatewayHTTPServer(gw, port=0)
+        await srv.start()
+        try:
+            st, models = await _call(srv.host, srv.port, "GET", "/v1/models")
+            assert st == 200
+            assert sorted(m["id"] for m in models["data"]) == ["m-a", "m-b"]
+
+            # concurrent: one per model, one unknown (404), one streaming
+            c1, c2, nf, sse = await asyncio.gather(
+                _call(srv.host, srv.port, "POST", "/v1/completions",
+                      {"model": "m-a", "prompt": [3, 1, 4], "max_tokens": 4}),
+                _call(srv.host, srv.port, "POST", "/v1/completions",
+                      {"model": "m-b", "prompt": [3, 1, 4], "max_tokens": 4,
+                       "temperature": 0.8, "top_k": 20, "seed": 7}),
+                _call(srv.host, srv.port, "POST", "/v1/completions",
+                      {"model": "ghost", "prompt": [1]}),
+                _call(srv.host, srv.port, "POST", "/v1/completions",
+                      {"model": "m-a", "prompt": [3, 1, 4], "max_tokens": 4,
+                       "stream": True}))
+            for st, resp in (c1, c2):
+                assert st == 200
+                ch = resp["choices"][0]
+                assert ch["finish_reason"] in ("eos", "length")
+                assert len(ch["token_ids"]) <= 4
+                assert resp["usage"]["prompt_tokens"] == 3
+            assert nf[0] == 404
+            assert nf[1]["error"]["code"] == "model_not_found"
+            st, events = sse
+            assert st == 200 and events[-1] == "[DONE]"
+            toks = [json.loads(e)["choices"][0]["token"]
+                    for e in events[:-1]
+                    if json.loads(e)["choices"][0].get("token") is not None]
+            # the SSE token stream is the same stream the engine committed
+            st1, resp1 = c1
+            assert toks == resp1["choices"][0]["token_ids"]
+        finally:
+            await srv.stop()
+
+    asyncio.run(drive())

@@ -170,14 +170,14 @@ def test_weight_cache_hits_and_invalidates():
     y1 = ops.ovsf_matmul(x, alphas, idx, plan=plan)
     assert ops.weight_cache_stats()["entries"] == 1
     # slots are keyed (cache_key | alpha dtype) so a dtype switch re-keys
-    w_cached = ops._WEIGHT_CACHE["test_layer|fp"][2]
+    w_cached = ops._WEIGHT_CACHE[""]["test_layer|fp"][2]
     y2 = ops.ovsf_matmul(x, alphas, idx, plan=plan)
-    assert ops._WEIGHT_CACHE["test_layer|fp"][2] is w_cached   # reused
+    assert ops._WEIGHT_CACHE[""]["test_layer|fp"][2] is w_cached   # reused
     np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
     # new parameter version -> regenerated
     alphas2 = alphas + 1.0
     ops.ovsf_matmul(x, alphas2, idx, plan=plan)
-    assert ops._WEIGHT_CACHE["test_layer|fp"][2] is not w_cached
+    assert ops._WEIGHT_CACHE[""]["test_layer|fp"][2] is not w_cached
     ops.clear_weight_cache()
 
 
@@ -189,7 +189,7 @@ def test_weight_cache_skips_tracers():
                             cache_key="traced_layer")
     y = jax.jit(lambda a: ops.ovsf_matmul(x, a, idx, plan=plan))(alphas)
     jax.block_until_ready(y)
-    assert "traced_layer" not in ops._WEIGHT_CACHE      # no tracer leaks
+    assert "traced_layer" not in ops._WEIGHT_CACHE.get("", {})  # no tracer leaks
     ops.clear_weight_cache()
 
 
