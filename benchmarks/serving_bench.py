@@ -52,6 +52,14 @@ Three comparisons, all written to ``BENCH_serving.json``:
   single-model engine run of the same request (greedy and sampled) —
   cross-model batching is free of numerics drift. The cross-model step
   must also hold the single-model compile bound.
+* **replica failover**: the multi-model workload on a 2-replica group with
+  replica 0 killed mid-run by an injected step crash (``dead_after=1``).
+  The health state machine must mark the replica DEAD and migrate its
+  in-flight requests to the survivor via preempt-and-recompute. Raising
+  gates in every mode: at least one failover, zero lost requests, and
+  token streams identical to dedicated fault-free engines; full mode
+  additionally requires >= 0.7x the throughput of a warm fault-free
+  2-replica baseline.
 
 ``--hw`` threads any registered HW target (v5e/v5p/v6e/cpu) into the
 mapper's execution planning (the model still *runs* on the host backend).
@@ -77,8 +85,8 @@ import dataclasses
 
 from repro.configs import get_smoke_config
 from repro.models import registry as R
-from repro.serving import (FaultPlan, LLMEngine, ModelRegistry, Request,
-                           SamplingParams, ServingGateway)
+from repro.serving import (FaultPlan, HealthPolicy, LLMEngine, ModelRegistry,
+                           Request, SamplingParams, ServingGateway)
 from repro.serving.model_registry import (alpha_bank_bytes, dense_fp32_bytes,
                                           make_alpha_variant, param_bytes)
 
@@ -94,6 +102,11 @@ PAGED_CAPACITY_GATE = 2.0    # paged KV must hold >= 2x the concurrent
                              # requests of contiguous slots at the same HBM
                              # budget (deterministic slot accounting — the
                              # gate applies in smoke mode too)
+REPLICA_GATE = 0.7       # failover throughput floor vs a warm fault-free
+                         # 2-replica run (full mode): killing one replica
+                         # mid-run costs migration + recompute, not a
+                         # collapse. Lost requests or stream divergence
+                         # raise in EVERY mode.
 PAGE_SIZE = 16           # paged-capacity bench page size (tokens/page)
 MM_RHO = 0.25            # multi-model bench compression ratio: M=2 resident
                          # banks at rho=0.25 keep the aggregate well under
@@ -535,6 +548,65 @@ def run(print_fn=print, smoke: bool = False,
             f"multi-model step traced {len(mm_eng.core.step_shapes)} "
             f"shapes (> {MAX_STEP_SHAPES}): variant routing is retracing")
 
+    # -- replica failover: kill one of two replicas mid-run -----------------
+    # Same multi-model workload on a 2-replica group. The faulted run kills
+    # replica 0 with an injected step crash (dead_after=1: the first
+    # incident is terminal) and must migrate its in-flight requests to the
+    # survivor via preempt-and-recompute. Three always-on gates — at least
+    # one failover fired, zero lost requests, token streams identical to
+    # the dedicated fault-free engines — plus a full-mode throughput floor
+    # against a WARM fault-free 2-replica baseline (the first run below
+    # pays any residual compiles so the timed pair compares steady state).
+    def time_fleet(faults):
+        reg_f = ModelRegistry()
+        reg_f.register("tl-a", mm_cfg, lambda: mm_base)
+        reg_f.register("tl-b", mm_cfg, lambda: mm_var)
+        gw_f = ServingGateway(
+            reg_f, batch_slots=B, buffer_len=buf, chunk_size=chunk_size,
+            hw=hw, faults=faults, replicas=2,
+            health=HealthPolicy(degraded_after=1, dead_after=1))
+        for r in mm_requests():
+            gw_f.add_request(r)
+        t0 = time.perf_counter()
+        gw_f.run_until_drained()
+        return gw_f, time.perf_counter() - t0
+
+    time_fleet(None)                              # warm-up
+    _, dt_rw = time_fleet(None)                   # warm fault-free baseline
+    kill = {"tl-a": FaultPlan.parse(["fail:step=2"], seed=0)}
+    gw_k, dt_rk = time_fleet(kill)
+    fo_outs = {o.rid: tuple(o.tokens) for o in gw_k.outputs()}
+    tps_rw = sum(len(t) for t in dd_outs.values()) / dt_rw
+    tps_rk = sum(len(t) for t in fo_outs.values()) / dt_rk
+    failover_ratio = tps_rk / tps_rw if tps_rw > 0 else 0.0
+    fo_lost = [rid for rid in range(n_mm) if rid not in fo_outs]
+    fo_diverged = [rid for rid in fo_outs
+                   if fo_outs[rid] != dd_outs.get(rid)]
+    print_fn(f"serving_bench,replica_failover,replicas=2,n={n_mm},"
+             f"{tps_rk:.1f}tok/s,faultfree={tps_rw:.1f}tok/s,"
+             f"failovers={gw_k.stats.failovers},"
+             f"migrated={gw_k.stats.failover_requests}")
+    print_fn(f"serving_bench,replica_failover_vs_faultfree,"
+             f"{failover_ratio:.2f}x")
+    if gw_k.stats.failovers < 1:
+        raise RuntimeError(
+            "replica-failover bench: the injected replica kill produced no "
+            "failover — the health state machine did not fire")
+    if fo_lost:
+        raise RuntimeError(
+            f"replica-failover bench lost requests {fo_lost}: every "
+            f"in-flight request must survive a replica death")
+    if fo_diverged:
+        raise RuntimeError(
+            f"replica-failover bench: requests {fo_diverged} diverged from "
+            f"their dedicated fault-free engines — migration must be "
+            f"token-identical")
+    if not smoke and failover_ratio < REPLICA_GATE:
+        raise RuntimeError(
+            f"replica-failover throughput collapsed: {failover_ratio:.2f}x "
+            f"the warm fault-free 2-replica baseline (need "
+            f">= {REPLICA_GATE}x)")
+
     result = {"bench": "serving", "smoke": smoke, "batch_slots": B,
               "model": cfg.name, "backend": jax.default_backend(), "hw": hw,
               "alpha_dtype": alpha_dtype,
@@ -608,6 +680,18 @@ def run(print_fn=print, smoke: bool = False,
                   "streams_identical": not mismatches,
                   "step_shapes": len(mm_eng.core.step_shapes),
                   "stacked_param_bytes": param_bytes(mm_eng.params)},
+              "replica_failover": {
+                  "replicas": 2,
+                  "n_requests": n_mm,
+                  "faults": ["fail:step=2"],
+                  "failover_tok_s": tps_rk,
+                  "fault_free_tok_s": tps_rw,
+                  "throughput_ratio_vs_fault_free": failover_ratio,
+                  "failovers": gw_k.stats.failovers,
+                  "migrated_requests": gw_k.stats.failover_requests,
+                  "replicas_dead": gw_k.stats.replicas_dead,
+                  "lost_requests": len(fo_lost),
+                  "streams_identical": not fo_diverged},
               "latency": lat}
     if json_path:
         with open(json_path, "w") as f:

@@ -10,6 +10,12 @@ save can never be mistaken for a complete checkpoint. ``save_async`` hands the
 Restore maps leaves back by tree path and ``jax.device_put``s them with the
 *target* mesh's NamedShardings — a checkpoint written on a 256-chip mesh
 restores onto 512 or 8 chips unchanged (elastic resharding).
+
+Every saved leaf carries a CRC32 in the manifest; ``restore(verify=True)``
+re-checksums the bytes read back and refuses a silently-corrupted file
+(the same bit-rot defence the serving registry's alpha-bank scrub applies
+to RESIDENT weights — see ``repro.serving.model_registry``). Manifests
+from before this field verify trivially (no stored CRC, nothing to check).
 """
 from __future__ import annotations
 
@@ -17,6 +23,7 @@ import json
 import os
 import shutil
 import threading
+import zlib
 from typing import Any, Optional
 
 import jax
@@ -47,7 +54,8 @@ def save(tree: Any, directory: str, step: int) -> str:
         np.save(os.path.join(tmp, fn), arr)
         manifest["leaves"].append(
             {"path": name, "file": fn, "shape": list(arr.shape),
-             "dtype": str(arr.dtype)})
+             "dtype": str(arr.dtype),
+             "crc32": zlib.crc32(np.ascontiguousarray(arr).tobytes())})
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
     if os.path.exists(final):
@@ -88,10 +96,13 @@ def latest_step(directory: str) -> Optional[int]:
 
 
 def restore(directory: str, step: Optional[int] = None, *,
-            template: Any = None, shardings: Any = None) -> tuple[Any, int]:
+            template: Any = None, shardings: Any = None,
+            verify: bool = False) -> tuple[Any, int]:
     """Load a checkpoint. With ``template`` (pytree of like-structured leaves)
     the arrays are mapped back into that structure by tree path; with
-    ``shardings`` each leaf is device_put onto the current mesh (elastic)."""
+    ``shardings`` each leaf is device_put onto the current mesh (elastic).
+    ``verify=True`` re-checksums every leaf against the manifest's CRC32
+    and raises ``ValueError`` on a mismatch (on-disk bit rot)."""
     if step is None:
         step = latest_step(directory)
         if step is None:
@@ -99,8 +110,18 @@ def restore(directory: str, step: Optional[int] = None, *,
     path = os.path.join(directory, f"step_{step:08d}")
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
-    by_path = {e["path"]: np.load(os.path.join(path, e["file"]))
-               for e in manifest["leaves"]}
+    by_path = {}
+    for e in manifest["leaves"]:
+        arr = np.load(os.path.join(path, e["file"]))
+        if verify and "crc32" in e:
+            crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+            if crc != e["crc32"]:
+                raise ValueError(
+                    f"checkpoint restore: leaf {e['path']!r} in {path} "
+                    f"failed its CRC32 check (stored {e['crc32']:#010x}, "
+                    f"read {crc:#010x}) — the file rotted on disk; restore "
+                    "an older step or re-save")
+        by_path[e["path"]] = arr
     if template is None:
         return by_path, step
 

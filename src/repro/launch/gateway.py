@@ -15,15 +15,36 @@ group is evicted when a load would exceed it, and a model that cannot be
 made resident is refused with 503 (``model_evicted``), never silently
 queued cold.
 
+Fleet fault tolerance:
+
+* ``--replicas N`` runs every engine group as N replicas sharing the same
+  resident alpha bank; ``--degraded-after``/``--dead-after`` set the
+  health thresholds (a DEAD replica drains and its in-flight requests
+  fail over to survivors token-identically).
+* ``--scrub-every K`` arms the alpha-bank integrity scrub every K gateway
+  steps; an injected ``flip`` fault (``--inject flip:step=3``) corrupts
+  the resident bank so the scrub has a real bit-flip to detect and repair.
+* ``--breaker-after M`` arms per-model circuit breakers at the front door
+  (M consecutive error completions -> 503 + Retry-After, half-open probe
+  after ``--breaker-cooldown`` seconds).
+* The server always exposes the admin surface: ``POST /admin/models``
+  (hot ADD via this launcher's model factory), ``DELETE
+  /admin/models/<id>``, ``POST /admin/drain`` (graceful drain), ``GET
+  /admin/health``.
+
 ``--self-test N`` starts the server on an ephemeral port, drives N
 concurrent HTTP requests round-robin across the registered models (mixed
 greedy/sampled, one streaming, plus one deliberate unknown-model request
-that must 404) and exits non-zero unless every response is well-formed and
-every finish reason is attributable to what this invocation configured —
-the CI gateway smoke rides exactly this contract. ``--inject`` faults are
-scoped to ``--inject-model``'s engine only; the self-test additionally
-asserts the OTHER models' requests never see an error reason (per-model
-NaN quarantine isolation).
+that must 404), then exercises the client-error contract (malformed JSON
+and bad sampling params must 400, never 500), the hot ADD/REMOVE admin
+routes, and a graceful drain — and exits non-zero unless every response
+is well-formed, every finish reason is attributable to what this
+invocation configured, and ZERO requests were lost. With ``--replicas 2
+--dead-after 1 --inject fail:step=5`` the self-test additionally requires
+at least one replica failover; with ``--scrub-every K --inject
+flip:step=S`` it requires the scrub to have detected and repaired the
+injected corruption. The CI fleet-chaos smoke rides exactly this
+contract.
 """
 from __future__ import annotations
 
@@ -38,7 +59,7 @@ import jax
 from repro.configs import get_config, get_smoke_config
 from repro.models import registry as R
 from repro.runtime.faults import FaultPlan
-from repro.serving import ModelRegistry, hw_names
+from repro.serving import HealthPolicy, ModelRegistry, hw_names
 from repro.serving.gateway import GatewayHTTPServer, ServingGateway
 from repro.serving.model_registry import (dense_fp32_bytes,
                                           make_alpha_variant)
@@ -66,63 +87,155 @@ def parse_models(spec: str) -> list:
     return out
 
 
+def _make_loader(arch: str, cfg, seed: int, k: int):
+    """Loader that re-materialises params bit-identically: occurrence k of
+    an architecture is its seeded base init for k == 0 and a deterministic
+    alpha perturbation of that base for k > 0. Bit-identical re-loads are
+    what make scrub REPAIR possible (the ledger must verify)."""
+    def loader():
+        base = R.model_init(jax.random.PRNGKey(seed), cfg)
+        if k == 0:
+            return base
+        return make_alpha_variant(base, seed=seed + k)
+    return loader
+
+
 def build_registry(models: list, smoke: bool, seed: int,
                    budget_bytes=None) -> ModelRegistry:
-    """Registry whose loaders re-materialise params bit-identically:
-    occurrence k of an architecture is its seeded base init for k == 0 and
-    a deterministic alpha perturbation of that base for k > 0."""
     reg = ModelRegistry(budget_bytes=budget_bytes)
     for arch, alias, k in models:
         cfg = get_smoke_config(arch) if smoke else get_config(arch)
-
-        def loader(_arch=arch, _cfg=cfg, _k=k):
-            base = R.model_init(jax.random.PRNGKey(seed), _cfg)
-            if _k == 0:
-                return base
-            return make_alpha_variant(base, seed=seed + _k)
-
-        reg.register(alias, cfg, loader, tags=(arch, f"variant-{k}"))
+        reg.register(alias, cfg, _make_loader(arch, cfg, seed, k),
+                     tags=(arch, f"variant-{k}"))
     return reg
 
 
+def make_model_factory(smoke: bool, seed: int):
+    """``POST /admin/models`` body -> (name, cfg, loader, tags). The body
+    is ``{"arch": ..., "id": ..., "variant": k}``; KeyError/ValueError
+    surface as HTTP 400."""
+    def factory(spec: dict):
+        arch = spec["arch"]                   # KeyError -> 400
+        name = spec.get("id") or arch
+        k = spec.get("variant", 0)
+        if isinstance(k, bool) or not isinstance(k, int) or k < 0:
+            raise ValueError("'variant' must be a non-negative integer")
+        if not isinstance(name, str) or not name:
+            raise ValueError("'id' must be a non-empty string")
+        try:
+            cfg = get_smoke_config(arch) if smoke else get_config(arch)
+        except KeyError:
+            raise ValueError(f"unknown architecture {arch!r}")
+        return (name, cfg, _make_loader(arch, cfg, seed, k),
+                (arch, f"variant-{k}", "hot-added"))
+    return factory
+
+
 async def _http(host: str, port: int, method: str, path: str,
-                body=None) -> tuple:
-    """One HTTP exchange; returns (status, parsed-JSON-or-SSE-events)."""
+                body=None, raw_body: bytes = None) -> tuple:
+    """One HTTP exchange; returns (status, parsed-JSON-or-SSE-events,
+    headers)."""
     reader, writer = await asyncio.open_connection(host, port)
-    payload = b"" if body is None else json.dumps(body).encode()
+    if raw_body is not None:
+        payload = raw_body
+    else:
+        payload = b"" if body is None else json.dumps(body).encode()
     writer.write((f"{method} {path} HTTP/1.1\r\nHost: {host}\r\n"
                   f"Content-Length: {len(payload)}\r\n"
                   "Connection: close\r\n\r\n").encode() + payload)
     await writer.drain()
     status_line = await reader.readline()
     status = int(status_line.split()[1])
-    ctype = ""
+    headers: dict = {}
     while True:
         h = await reader.readline()
         if h in (b"\r\n", b"\n", b""):
             break
         k, _, v = h.decode().partition(":")
-        if k.strip().lower() == "content-type":
-            ctype = v.strip()
+        headers[k.strip().lower()] = v.strip()
     raw = await reader.read()
     writer.close()
     try:
         await writer.wait_closed()
     except Exception:
         pass
-    if "event-stream" in ctype:
+    if "event-stream" in headers.get("content-type", ""):
         events = []
         for line in raw.decode().splitlines():
             if line.startswith("data: "):
                 data = line[len("data: "):]
                 events.append(data if data == "[DONE]" else json.loads(data))
-        return status, events
+        return status, events, headers
     body_txt = raw.split(b"\r\n\r\n")[-1] if b"\r\n\r\n" in raw else raw
-    return status, json.loads(body_txt or b"{}")
+    return status, json.loads(body_txt or b"{}"), headers
+
+
+async def _check_client_errors(host: str, port: int, model: str) -> None:
+    """Client bugs must map to 400 with an OpenAI-style error object —
+    never 500 — and every 503 must carry Retry-After."""
+    status, body, _ = await _http(host, port, "POST", "/v1/completions",
+                                  raw_body=b"{not json!")
+    if status != 400 or body["error"]["type"] != "invalid_request_error":
+        raise SystemExit(f"[gateway] FAILED: malformed JSON -> {status} "
+                         f"{body} (want 400 invalid_request_error)")
+    for bad in ({"temperature": "hot"}, {"max_tokens": 0},
+                {"top_k": -1}, {"prompt": {"oops": 1}},
+                {"stream": "yes"}, {"deadline_s": -2}):
+        req = {"model": model, "prompt": [1]}
+        req.update(bad)
+        status, body, _ = await _http(host, port, "POST",
+                                      "/v1/completions", req)
+        if status != 400:
+            raise SystemExit(f"[gateway] FAILED: bad param {bad} -> "
+                             f"{status} {body} (want 400)")
+    print("[gateway] client-error contract OK (400s, never 500s)")
+
+
+async def _check_admin(srv: GatewayHTTPServer, arch: str,
+                       injected: set) -> None:
+    """Hot ADD -> serve -> duplicate 409 -> REMOVE -> 404 contract."""
+    host, port = srv.host, srv.port
+    spec = {"arch": arch, "id": "hot-add-test", "variant": 9}
+    status, body, _ = await _http(host, port, "POST", "/admin/models", spec)
+    if status != 200 or body.get("id") != "hot-add-test":
+        raise SystemExit(f"[gateway] FAILED: hot ADD -> {status} {body}")
+    status, models, _ = await _http(host, port, "GET", "/v1/models")
+    listed = [m["id"] for m in models["data"]]
+    if "hot-add-test" not in listed:
+        raise SystemExit(f"[gateway] FAILED: hot model not listed: {listed}")
+    # the hot model must actually serve (it joined arch's engine group)
+    group = srv.gateway.registry.entries["hot-add-test"].group
+    allowed = {"eos", "length"}
+    if any(srv.gateway.registry.entries[n].group == group
+           for n in injected if srv.gateway.registry.get(n)):
+        allowed.add("error")
+    status, resp, _ = await _http(host, port, "POST", "/v1/completions",
+                                  {"model": "hot-add-test",
+                                   "prompt": [7, 11, 13], "max_tokens": 4})
+    reason = resp.get("choices", [{}])[0].get("finish_reason")
+    if status != 200 or reason not in allowed:
+        raise SystemExit(f"[gateway] FAILED: hot model completion -> "
+                         f"{status} {reason}")
+    status, body, _ = await _http(host, port, "POST", "/admin/models", spec)
+    if status != 409:
+        raise SystemExit(f"[gateway] FAILED: duplicate ADD -> {status} "
+                         f"(want 409)")
+    status, body, _ = await _http(host, port, "DELETE",
+                                  "/admin/models/hot-add-test")
+    if status != 200:
+        raise SystemExit(f"[gateway] FAILED: hot REMOVE -> {status} {body}")
+    status, body, _ = await _http(host, port, "DELETE",
+                                  "/admin/models/hot-add-test")
+    if status != 404:
+        raise SystemExit(f"[gateway] FAILED: double REMOVE -> {status} "
+                         f"(want 404)")
+    print("[gateway] admin hot ADD/REMOVE OK (200 -> serve -> 409 -> 404)")
 
 
 async def self_test(srv: GatewayHTTPServer, names: list, n: int,
-                    injected: set, max_new: int) -> None:
+                    injected: set, max_new: int, arch0: str,
+                    expect_failover: bool = False,
+                    expect_scrub: bool = False) -> None:
     """Concurrent client drive of the just-started server (see module
     docstring for the pass criteria). Raises SystemExit on violation."""
     host, port = srv.host, srv.port
@@ -135,8 +248,8 @@ async def self_test(srv: GatewayHTTPServer, names: list, n: int,
                 "temperature": 0.8 if sampled else 0.0,
                 "top_k": 20 if sampled else 0, "seed": i,
                 "stream": i == 1}
-        status, resp = await _http(host, port, "POST", "/v1/completions",
-                                   body)
+        status, resp, _ = await _http(host, port, "POST", "/v1/completions",
+                                      body)
         if i == 1:   # streaming: fold SSE events into a completion-like dict
             toks = [e["choices"][0]["token"] for e in resp
                     if e != "[DONE]" and e["choices"][0].get("token")
@@ -150,7 +263,7 @@ async def self_test(srv: GatewayHTTPServer, names: list, n: int,
         return (model, status, ch.get("token_ids", []),
                 ch.get("finish_reason"))
 
-    status, models = await _http(host, port, "GET", "/v1/models")
+    status, models, _ = await _http(host, port, "GET", "/v1/models")
     listed = sorted(m["id"] for m in models.get("data", []))
     if status != 200 or listed != sorted(names):
         raise SystemExit(f"[gateway] FAILED: /v1/models -> {status} {listed}")
@@ -159,7 +272,7 @@ async def self_test(srv: GatewayHTTPServer, names: list, n: int,
         *[completion(i) for i in range(n)],
         _http(host, port, "POST", "/v1/completions",
               {"model": "no-such-model", "prompt": [1]}))
-    nf_status, nf_body = results[-1]
+    nf_status, nf_body, _ = results[-1]
     if nf_status != 404 or nf_body["error"]["code"] != "model_not_found":
         raise SystemExit(f"[gateway] FAILED: unknown model -> {nf_status} "
                          f"{nf_body}")
@@ -174,8 +287,51 @@ async def self_test(srv: GatewayHTTPServer, names: list, n: int,
             bad.append((model, status, f"{len(toks)} tokens"))
     if bad:
         raise SystemExit(f"[gateway] FAILED: bad completions: {bad}")
+    # ZERO lost requests: every submitted completion came back terminal
     print(f"[gateway] self-test OK: {n} completions + 404 + streaming "
           f"(quarantine scope: {sorted(injected) or 'none'})")
+
+    s = srv.gateway.stats
+    if expect_failover and s.failovers < 1:
+        raise SystemExit(
+            f"[gateway] FAILED: expected a replica failover under the "
+            f"injected kill (failovers={s.failovers}, "
+            f"replicas_dead={s.replicas_dead})")
+    if expect_failover:
+        print(f"[gateway] failover OK: {s.failovers} failover(s), "
+              f"{s.failover_requests} request(s) migrated, zero lost")
+    if expect_scrub and (s.corruptions_injected < 1 or s.scrub_repairs < 1):
+        raise SystemExit(
+            f"[gateway] FAILED: expected the scrub to detect+repair the "
+            f"injected flip (injected={s.corruptions_injected}, "
+            f"caught={s.scrub_corruptions}, repaired={s.scrub_repairs})")
+    if expect_scrub:
+        print(f"[gateway] scrub OK: {s.corruptions_injected} flip(s) "
+              f"injected, {s.scrub_corruptions} caught, "
+              f"{s.scrub_repairs} repaired bitwise")
+
+    status, health, _ = await _http(host, port, "GET", "/admin/health")
+    if status != 200 or "models" not in health:
+        raise SystemExit(f"[gateway] FAILED: /admin/health -> {status}")
+    await _check_client_errors(host, port, names[0])
+    await _check_admin(srv, arch0, injected)
+
+    # graceful drain: stop admission (503 + Retry-After), finish live
+    # work, and fire the drained event the launcher exits 0 on
+    status, body, _ = await _http(host, port, "POST", "/admin/drain")
+    if status != 200:
+        raise SystemExit(f"[gateway] FAILED: /admin/drain -> {status}")
+    status, body, hdrs = await _http(host, port, "POST", "/v1/completions",
+                                     {"model": names[0], "prompt": [1]})
+    if status != 503 or "retry-after" not in hdrs:
+        raise SystemExit(f"[gateway] FAILED: draining admission -> {status} "
+                         f"headers={sorted(hdrs)} (want 503 + Retry-After)")
+    try:
+        await asyncio.wait_for(srv.drained.wait(), timeout=60)
+    except asyncio.TimeoutError:
+        raise SystemExit("[gateway] FAILED: drain never completed")
+    print("[gateway] graceful drain OK (admission 503 + Retry-After, "
+          "live work finished)")
 
 
 def main(argv=None) -> None:
@@ -192,14 +348,31 @@ def main(argv=None) -> None:
     ap.add_argument("--alpha-budget-mb", type=float, default=None,
                     help="registry byte budget; LRU groups evict past it "
                          "and unloadable models are refused with 503")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="engine replicas per model group (shared alpha "
+                         "bank; health-checked failover between them)")
+    ap.add_argument("--degraded-after", type=int, default=1,
+                    help="incident points before a replica is DEGRADED")
+    ap.add_argument("--dead-after", type=int, default=3,
+                    help="incident points before a replica is DEAD "
+                         "(drained + failed over)")
+    ap.add_argument("--scrub-every", type=int, default=0, metavar="K",
+                    help="alpha-bank CRC scrub cadence in gateway steps "
+                         "(0 = off)")
+    ap.add_argument("--breaker-after", type=int, default=0, metavar="M",
+                    help="per-model circuit breaker: M consecutive error "
+                         "completions -> 503 + Retry-After (0 = off)")
+    ap.add_argument("--breaker-cooldown", type=float, default=2.0,
+                    help="seconds an open breaker waits before half-open")
     ap.add_argument("--host", default="127.0.0.1")
     ap.add_argument("--port", type=int, default=8080,
                     help="0 = ephemeral (printed at startup)")
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--inject", action="append", default=[],
                     metavar="KIND:KEY=V,...",
-                    help="deterministic faults for --inject-model's engine "
-                         "only (same grammar as repro.launch.serve)")
+                    help="deterministic faults for --inject-model only "
+                         "(same grammar as repro.launch.serve, plus "
+                         "flip:step=N[,leaf=L,bit=B] bank corruption)")
     ap.add_argument("--inject-model", default=None,
                     help="model alias the --inject plan is scoped to "
                          "(default: the first registered model)")
@@ -216,45 +389,66 @@ def main(argv=None) -> None:
 
     faults = None
     injected: set = set()
+    plan = FaultPlan()
     if args.inject:
         target = args.inject_model or names[0]
         if target not in names:
             raise SystemExit(f"--inject-model {target!r} not in {names}")
         plan = FaultPlan.parse(args.inject, seed=args.seed)
         faults = {target: plan}
-        # quarantine scope = the target's whole engine (its arch group)
-        group = reg.entries[target].group
-        injected = {n for n in names if reg.entries[n].group == group}
+        # quarantine scope = the target's whole engine (its arch group) —
+        # flip faults corrupt only the registry bank (scrub repairs them
+        # before they reach a served token), so they don't widen the scope
+        if any(f.kind in ("nan", "fail", "delay") for f in plan.faults):
+            group = reg.entries[target].group
+            injected = {n for n in names if reg.entries[n].group == group}
         print(f"[gateway] chaos: {len(plan.faults)} injector(s) on "
-              f"{target!r} (engine scope: {sorted(injected)})")
+              f"{target!r} (engine scope: {sorted(injected) or 'registry'})")
 
-    gw = ServingGateway(reg, batch_slots=args.slots, buffer_len=args.buffer,
-                        chunk_size=args.chunk_size, hw=args.hw,
-                        faults=faults)
+    gw = ServingGateway(
+        reg, batch_slots=args.slots, buffer_len=args.buffer,
+        chunk_size=args.chunk_size, hw=args.hw, faults=faults,
+        replicas=args.replicas,
+        health=HealthPolicy(degraded_after=args.degraded_after,
+                            dead_after=args.dead_after),
+        scrub_every=args.scrub_every)
     largest = max(dense_fp32_bytes(e.cfg) for e in reg.entries.values())
     print(f"[gateway] {len(names)} models in "
-          f"{len(reg.groups())} engine group(s): {names}")
+          f"{len(reg.groups())} engine group(s) x {args.replicas} "
+          f"replica(s): {names}")
     print(f"[gateway] budget="
           + (f"{budget/2**20:.1f}MB" if budget else "unbounded")
           + f" dense-fp32(largest)={largest/2**20:.2f}MB")
 
+    expect_failover = (args.replicas > 1 and args.dead_after == 1
+                       and any(f.kind == "fail" for f in plan.faults))
+    expect_scrub = (args.scrub_every > 0
+                    and any(f.kind == "flip" for f in plan.faults))
+
     async def run() -> None:
-        srv = GatewayHTTPServer(gw, host=args.host,
-                                port=0 if args.self_test else args.port)
+        srv = GatewayHTTPServer(
+            gw, host=args.host, port=0 if args.self_test else args.port,
+            breaker_after=args.breaker_after,
+            breaker_cooldown_s=args.breaker_cooldown,
+            model_factory=make_model_factory(args.smoke, args.seed))
         await srv.start()
         print(f"[gateway] listening on http://{srv.host}:{srv.port} "
-              f"(models: GET /v1/models, completions: POST /v1/completions)")
+              f"(completions: POST /v1/completions, admin: /admin/*)")
         if args.self_test:
             t0 = time.perf_counter()
             try:
                 await self_test(srv, names, args.self_test, injected,
-                                args.max_new)
+                                args.max_new, models[-1][0],
+                                expect_failover=expect_failover,
+                                expect_scrub=expect_scrub)
             finally:
                 await srv.stop()
             s = gw.stats
             print(f"[gateway] routed={dict(s.routed)} builds="
-                  f"{s.engine_builds} not_found={s.not_found} "
-                  f"evicted={s.evicted_refusals} "
+                  f"{s.engine_builds} replicas={s.replicas_built} "
+                  f"failovers={s.failovers} migrated={s.failover_requests} "
+                  f"scrubs={s.scrubs} repaired={s.scrub_repairs} "
+                  f"not_found={s.not_found} evicted={s.evicted_refusals} "
                   f"resident={gw.resident_bytes()/2**20:.2f}MB "
                   f"({time.perf_counter()-t0:.1f}s)")
             return

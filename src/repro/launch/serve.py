@@ -120,6 +120,11 @@ def main(argv=None) -> None:
     if args.paged and args.chunk_size is None:
         raise SystemExit("--paged requires --chunk-size")
     plan = FaultPlan.parse(args.inject, seed=args.seed)
+    if any(f.kind == "flip" for f in plan.faults):
+        raise SystemExit(
+            "--inject flip:... corrupts a RESIDENT registry bank, which a "
+            "single-engine launcher does not have; use repro.launch.gateway "
+            "with --scrub-every to exercise bank corruption + scrub repair")
     if plan:
         print(f"[serve] chaos: {len(plan.faults)} injector(s) armed "
               f"(seed={args.seed}): "

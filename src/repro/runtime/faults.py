@@ -17,7 +17,14 @@ survive:
               must rebuild the core and replay live slots via recompute);
 * ``delay`` — sleep ``delay_s`` inside step ``step`` (straggler / stuck
               step; trips the engine's soft step-timeout watchdog and the
-              training supervisor's straggler detector).
+              training supervisor's straggler detector);
+* ``flip``  — flip bit ``bit`` of alpha-bank leaf index ``leaf`` in the
+              TARGET MODEL'S resident registry copy (silent in-memory
+              corruption / cosmic ray; the gateway's CRC scrub must detect
+              the flip and repair the bank bitwise). ``flip`` is applied by
+              the serving *gateway* at its own step counter — engine-level
+              consumers (``poison_row``/``raise_or_delay``) and the
+              training adapter ignore it.
 
 Faults fire either at one deterministic ``step`` (optionally recurring
 ``every`` steps after it) or probabilistically with per-step probability
@@ -38,6 +45,8 @@ CLI syntax (``--inject`` on ``repro.launch.serve``)::
     fail:step=7,every=50  ... and every 50 steps after
     delay:step=5,s=0.2    sleep 200ms inside step 5
     delay:p=0.1,s=0.002   2ms stall on 10% of steps
+    flip:step=3           flip bit 0 of alpha-bank leaf 0 at gateway step 3
+    flip:step=3,leaf=2,bit=17   ... leaf 2, bit 17
 """
 from __future__ import annotations
 
@@ -49,7 +58,7 @@ import numpy as np
 
 __all__ = ["Fault", "FaultPlan", "InjectedFault", "parse_fault"]
 
-_KINDS = ("nan", "fail", "delay")
+_KINDS = ("nan", "fail", "delay", "flip")
 
 
 class InjectedFault(RuntimeError):
@@ -59,12 +68,14 @@ class InjectedFault(RuntimeError):
 @dataclasses.dataclass(frozen=True)
 class Fault:
     """One injector. Exactly one of ``step`` (>= 0) or ``p`` (> 0) arms it."""
-    kind: str                   # "nan" | "fail" | "delay"
+    kind: str                   # "nan" | "fail" | "delay" | "flip"
     step: int = -1              # fire at this step index (-1 = probabilistic)
     every: int = 0              # with step >= 0: recur every N steps after
     p: float = 0.0              # per-step firing probability (seed-driven)
     slot: int = 0               # nan: the slot whose logits are poisoned
     delay_s: float = 0.0        # delay: injected latency
+    leaf: int = 0               # flip: alpha-bank leaf index (flatten order)
+    bit: int = 0                # flip: bit offset within the leaf's raw bytes
 
     def __post_init__(self):
         if self.kind not in _KINDS:
@@ -95,7 +106,8 @@ def parse_fault(spec: str) -> Fault:
     kw: dict = {}
     keys = {"step": ("step", int), "every": ("every", int),
             "p": ("p", float), "slot": ("slot", int),
-            "s": ("delay_s", float)}
+            "s": ("delay_s", float),
+            "leaf": ("leaf", int), "bit": ("bit", int)}
     for part in filter(None, rest.split(",")):
         k, _, v = part.partition("=")
         if k not in keys or not v:
@@ -166,12 +178,13 @@ class FaultPlan:
         restore-and-replay — a pure step-keyed raise would livelock the
         restore loop. Each (fault, step) therefore fires at most once per
         injector instance: the node dies once, the replay succeeds. Still
-        deterministic run-to-run for a fixed plan."""
+        deterministic run-to-run for a fixed plan. ``flip`` faults are
+        gateway-only and ignored here too."""
         fired: set = set()
 
         def injector(step: int) -> None:
             live = [(i, f) for i, f in enumerate(self.faults)
-                    if f.kind != "nan" and (i, step) not in fired
+                    if f.kind not in ("nan", "flip") and (i, step) not in fired
                     and f.fires_at(step, self.seed, i)]
             for i, f in live:
                 fired.add((i, step))

@@ -6,15 +6,19 @@ banks, cross-config continuous batching, the async HTTP front door — is
 ``repro.serving.model_registry``).
 """
 from repro.runtime.faults import Fault, FaultPlan, InjectedFault, parse_fault
-from repro.serving.api import (FINISH_EOS, FINISH_ERROR, FINISH_EVICTED,
-                               FINISH_LENGTH, FINISH_PREEMPTED,
-                               FINISH_REJECTED, FINISH_SHED, FINISH_TIMEOUT,
-                               HWTarget, Request, RequestOutput,
-                               SamplingParams, hw_by_name, hw_names,
-                               register_hw, resolve_hw)
+from repro.serving.api import (FINISH_CANCELLED, FINISH_EOS, FINISH_ERROR,
+                               FINISH_EVICTED, FINISH_LENGTH,
+                               FINISH_PREEMPTED, FINISH_REJECTED, FINISH_SHED,
+                               FINISH_TIMEOUT, HWTarget, Request,
+                               RequestOutput, SamplingParams, hw_by_name,
+                               hw_names, register_hw, resolve_hw)
 from repro.serving.core import EngineCore, StepOutput
 from repro.serving.engine import EngineStats, LLMEngine
-from repro.serving.gateway import GatewayStats, ServingGateway
+from repro.serving.gateway import (BudgetExceeded, GatewayRejection,
+                                   GatewayStats, ModelInFlight,
+                                   ServingGateway)
+from repro.serving.health import (DEAD, DEGRADED, HEALTHY, CircuitBreaker,
+                                  HealthPolicy, ReplicaHealth)
 from repro.serving.kvcache import PagedKVCache, pages_for
 from repro.serving.model_registry import (ModelEntry, ModelRegistry,
                                           VariantSet, alpha_bank_bytes,
@@ -30,7 +34,7 @@ __all__ = [
     "SamplingParams", "Request", "RequestOutput",
     "FINISH_LENGTH", "FINISH_EOS", "FINISH_REJECTED",
     "FINISH_TIMEOUT", "FINISH_SHED", "FINISH_ERROR", "FINISH_PREEMPTED",
-    "FINISH_EVICTED",
+    "FINISH_EVICTED", "FINISH_CANCELLED",
     "Fault", "FaultPlan", "InjectedFault", "parse_fault",
     "HWTarget", "hw_by_name", "hw_names", "register_hw", "resolve_hw",
     "FCFSScheduler", "PrefillGroup", "PrefillAssignment", "ChunkTask",
@@ -38,6 +42,9 @@ __all__ = [
     "PackedStep", "pack_bucket", "pack_step", "unpack_step",
     "EngineCore", "LLMEngine", "EngineStats",
     "ServingGateway", "GatewayStats",
+    "GatewayRejection", "BudgetExceeded", "ModelInFlight",
+    "HEALTHY", "DEGRADED", "DEAD",
+    "HealthPolicy", "ReplicaHealth", "CircuitBreaker",
     "ModelRegistry", "ModelEntry", "VariantSet",
     "alpha_bank_bytes", "param_bytes", "dense_fp32_bytes",
     "make_alpha_variant",

@@ -35,7 +35,7 @@ __all__ = [
     "SamplingParams", "Request", "RequestOutput",
     "FINISH_LENGTH", "FINISH_EOS", "FINISH_REJECTED",
     "FINISH_TIMEOUT", "FINISH_SHED", "FINISH_ERROR", "FINISH_PREEMPTED",
-    "FINISH_EVICTED",
+    "FINISH_EVICTED", "FINISH_CANCELLED",
     "HWTarget", "HW", "hw_by_name", "hw_names", "register_hw", "resolve_hw",
 ]
 
@@ -54,6 +54,9 @@ FINISH_EVICTED = "evicted"      # gateway: the target model's weights are
                                 # within the byte budget — a distinct
                                 # backpressure signal, never a silent queue
                                 # against a cold model
+FINISH_CANCELLED = "cancelled"  # caller abandoned the request (e.g. SSE
+                                # client disconnect): the slot and its KV
+                                # pages are released immediately
 
 
 @dataclasses.dataclass(frozen=True)

@@ -70,7 +70,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.runtime.faults import FaultPlan
-from repro.serving.api import (FINISH_EOS, FINISH_ERROR, FINISH_LENGTH,
+from repro.serving.api import (FINISH_CANCELLED, FINISH_EOS, FINISH_ERROR,
+                               FINISH_LENGTH,
                                FINISH_PREEMPTED, FINISH_REJECTED,
                                FINISH_SHED, FINISH_TIMEOUT, Request,
                                RequestOutput, SamplingParams, resolve_hw)
@@ -108,6 +109,7 @@ class EngineStats:
     shed: int = 0                 # load-shed + dropped-preempt (FINISH_SHED
                                   # / FINISH_PREEMPTED)
     errors: int = 0               # quarantined non-finite-logits requests
+    cancelled: int = 0            # caller-cancelled (FINISH_CANCELLED)
     prefill_s: float = 0.0        # per-phase wall time (legacy prefill)
     decode_s: float = 0.0         # pure fused decode steps
     mixed_s: float = 0.0          # fused window steps (chunks + decode)
@@ -361,6 +363,8 @@ class LLMEngine:
             st.shed += 1
         elif r == FINISH_ERROR:
             st.errors += 1
+        elif r == FINISH_CANCELLED:
+            st.cancelled += 1
         if req.on_finish is not None and not req._notified:
             req._notified = True
             req.on_finish(out)
@@ -503,12 +507,13 @@ class LLMEngine:
             if req is not None and req.expired:
                 self._finish(i, FINISH_TIMEOUT)
 
-    def _requeue_slot(self, i: int, *, preempt: bool) -> None:
-        """Evict slot ``i`` and re-enqueue its request for recompute: stash
+    def _stash_slot(self, i: int) -> Request:
+        """Evict slot ``i`` recompute-style and return its request: stash
         the PRNG key (sampled streams resume exactly), rewrite the prompt to
         original + generated tokens (chunked prefill rebuilds the context),
-        reset prefill progress. ``preempt=True`` books it as a preemption;
-        recovery requeues are not preemptions."""
+        reset prefill progress, release KV pages. The caller decides where
+        the request goes next — this scheduler (requeue), another replica
+        (failover ``adopt``), or nowhere."""
         req = self.slots[i]
         self.slots[i] = None
         self.core.clear_sampling(i)
@@ -526,6 +531,13 @@ class LLMEngine:
                 [np.asarray(req.prompt, np.int32),
                  np.asarray(new_tail, np.int32)])
         req.resume_key = np.array(self.core.keys[i])
+        return req
+
+    def _requeue_slot(self, i: int, *, preempt: bool) -> None:
+        """``_stash_slot`` + re-enqueue on this engine's own scheduler.
+        ``preempt=True`` books it as a preemption; recovery requeues are
+        not preemptions."""
+        req = self._stash_slot(i)
         if preempt:
             req.preemptions += 1
             self.stats.preemptions += 1
@@ -533,6 +545,56 @@ class LLMEngine:
             self.scheduler.requeue(req)
         else:                           # legacy scheduler: re-admit FCFS
             self.scheduler.add(req)
+
+    # -- fleet-level hooks (gateway failover / drain / cancellation) --------
+
+    def adopt(self, req: Request) -> None:
+        """Accept a request migrated from another replica (failover) or
+        displaced by a group rebuild. Bypasses admission — the request was
+        already admitted by an identically-configured engine and its total
+        cache need (original prompt + max_new) is unchanged under the
+        recompute prompt rewrite."""
+        if hasattr(self.scheduler, "requeue"):
+            self.scheduler.requeue(req)
+        else:
+            self.scheduler.add(req)
+        self._drain_shed()
+
+    def drain_requests(self) -> list:
+        """Strip every live request off this engine — running slots are
+        evicted recompute-style (token-identical resume elsewhere), then the
+        waiting queue is appended in priority-FCFS order. Used by the
+        gateway to fail over a DEAD replica or rebuild a group after an
+        alpha-bank repair; the drained engine is left empty but usable."""
+        out = [self._stash_slot(i) for i in range(self.B)
+               if self.slots[i] is not None]
+        if hasattr(self.scheduler, "pop_all"):
+            out.extend(self.scheduler.pop_all())
+        else:                           # legacy scheduler: pop FCFS groups
+            while len(self.scheduler):
+                pg = self.scheduler.next_group(self.B)
+                if pg is None:
+                    break
+                out.extend(pg.requests)
+        return out
+
+    def cancel(self, req: Request) -> bool:
+        """Cancel one in-flight request (e.g. the SSE client disconnected):
+        a running request is finished as FINISH_CANCELLED — releasing its
+        slot and KV pages immediately — and a queued one is withdrawn.
+        Returns False when the request is not live here (already finished
+        or routed elsewhere)."""
+        if req.done:
+            return False
+        for i in range(self.B):
+            if self.slots[i] is req:
+                self._finish(i, FINISH_CANCELLED)
+                return True
+        if hasattr(self.scheduler, "remove") and self.scheduler.remove(req):
+            req.finish_reason = FINISH_CANCELLED
+            self._finalize(req)
+            return True
+        return False
 
     def _recover(self) -> None:
         """Watchdog recovery: requeue every live slot recompute-style, then

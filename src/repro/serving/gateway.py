@@ -1,4 +1,4 @@
-"""Multi-model serving gateway: one front door over a pool of LLMEngines.
+"""Multi-model serving gateway: replicated engine groups behind one door.
 
 The gateway routes per-request ``Request.model`` names onto engines built
 from a :class:`~repro.serving.model_registry.ModelRegistry`:
@@ -10,27 +10,53 @@ from a :class:`~repro.serving.model_registry.ModelRegistry`:
   tokens route through its model's alpha bank inside the same fused jit'd
   step (multi-LoRA-style), so cross-model batching costs no extra compiles
   beyond the single-model step shapes.
-* **Distinct architectures round-robin across pool engines** — each group
-  gets its own engine; ``step()`` advances them round-robin under the
-  shared admission/deadline policy the gateway was constructed with.
+* **Replicated groups + health-checked failover** — each group runs
+  ``replicas=N`` engine replicas over the SAME stacked params (on-the-fly
+  generation makes replicas nearly free: they share the resident alpha
+  bank; only per-replica KV/slot state is private). After every replica
+  step the gateway books that replica's ``EngineStats`` deltas (watchdog
+  recoveries, stalls, NaN quarantines) into a
+  :class:`~repro.serving.health.ReplicaHealth` state machine; a replica
+  that reaches DEAD is drained — its running slots evicted via the
+  engine's preempt-and-recompute stash (prompt rewrite + PRNG-key stash) —
+  and every in-flight request is adopted by the least-loaded survivor, so
+  resumed streams are token-identical to the fault-free run, greedy AND
+  sampled, packed AND window. When the last replica of a group dies, a
+  replacement is rebuilt in place (the engine-level watchdog story lifted
+  to fleet level).
+* **Alpha-bank integrity scrub** — every ``scrub_every`` gateway steps one
+  resident group is re-checksummed against the CRC32 ledger captured at
+  load. A mismatch (e.g. an injected ``flip`` fault, applied by the
+  gateway to the registry's resident copy at its own step counter)
+  triggers repair: the group drains, its params re-materialise from their
+  loaders (verified bitwise against the ledger), engines rebuild, and the
+  drained requests resume via recompute. Cheap by construction — only
+  compressed coefficients are resident.
 * **Byte-budget residency** — engines exist exactly for resident groups.
-  ``add_request`` on an evicted model triggers reload-within-budget
-  (evicting the LRU unpinned group, engines dropped with their
-  weight-cache buckets); when the budget cannot be met the request is
-  refused with the distinct ``FINISH_EVICTED`` backpressure reason — never
-  a silent queue against a cold model.
+  ``add_request`` on an evicted model triggers reload-within-budget; when
+  the budget cannot be met the request is refused with the distinct
+  ``FINISH_EVICTED`` backpressure reason. :meth:`ServingGateway.add_model`
+  / :meth:`remove_model` hot-add and hot-remove models on a live pool
+  (budget misses raise :class:`BudgetExceeded`, in-flight removals
+  :class:`ModelInFlight` — the HTTP layer's 409s).
 * **HTTP front door** — :class:`GatewayHTTPServer` is a minimal stdlib
   ``asyncio`` server exposing OpenAI-compatible ``GET /v1/models`` and
   ``POST /v1/completions`` (non-streaming JSON, or SSE streaming with
-  ``"stream": true``); unknown models get a 404, evicted-and-unloadable
-  models a 503. The engine pump runs in a background thread; token
-  callbacks cross back into the event loop via ``call_soon_threadsafe``.
+  ``"stream": true``), plus admin routes: ``POST /admin/models`` /
+  ``DELETE /admin/models/<id>`` (hot add/remove), ``POST /admin/drain``
+  (stop admission, finish live work), ``GET /admin/health`` (replica
+  states + scrub counters). Malformed bodies and bad sampling params get
+  400s with OpenAI-style error objects; every 503 (evicted, breaker-open,
+  draining) carries ``Retry-After``. A per-model
+  :class:`~repro.serving.health.CircuitBreaker` trips after repeated
+  FINISH_ERROR completions; an SSE client disconnect cancels the
+  underlying request, releasing its slot and KV pages immediately.
 
-Compile-count note: every model of a group shares the group engine's jit
+Compile-count note: every model of a group shares the group engines' jit
 traces (the stacked alpha leaves are one traced argument; ``model_ids``
-routing is data, not shape), so a gateway serving N same-architecture
-models compiles exactly as many step shapes as ONE chunked engine —
-``("window", W)`` and ``("decode", 1)``.
+routing is data, not shape; replicas share the lru-cached step fns), so a
+gateway serving N same-architecture models over R replicas compiles
+exactly as many step shapes as ONE chunked engine.
 """
 from __future__ import annotations
 
@@ -39,16 +65,34 @@ import dataclasses
 import itertools
 import json
 import threading
-from typing import Optional
+from typing import Any, Callable, Optional
 
 import numpy as np
 
 from repro.serving.api import FINISH_EVICTED, Request, SamplingParams
 from repro.serving.engine import LLMEngine
+from repro.serving.health import (DEAD, HEALTHY, CircuitBreaker, HealthPolicy,
+                                  ReplicaHealth)
 from repro.serving.model_registry import (ModelRegistry, param_bytes,
                                           stack_variants)
 
-__all__ = ["ServingGateway", "GatewayStats", "GatewayHTTPServer"]
+__all__ = ["ServingGateway", "GatewayStats", "GatewayHTTPServer",
+           "GatewayRejection", "BudgetExceeded", "ModelInFlight"]
+
+
+class GatewayRejection(RuntimeError):
+    """Admission conflict on a live pool (the HTTP layer's 409)."""
+    code = "conflict"
+
+
+class BudgetExceeded(GatewayRejection):
+    """Hot-added model cannot be made resident within the byte budget."""
+    code = "budget_exceeded"
+
+
+class ModelInFlight(GatewayRejection):
+    """Hot remove refused: the model still has in-flight requests."""
+    code = "model_in_flight"
 
 
 @dataclasses.dataclass
@@ -57,30 +101,71 @@ class GatewayStats:
     routed: dict = dataclasses.field(default_factory=dict)  # model -> count
     not_found: int = 0              # unknown model names
     evicted_refusals: int = 0       # FINISH_EVICTED backpressure responses
-    engine_builds: int = 0          # engines constructed (first build + re)
-    engines_dropped: int = 0        # engines dropped by eviction
-    reloads: int = 0                # engine rebuilds after a prior eviction
+    engine_builds: int = 0          # group builds (first build + rebuilds)
+    engines_dropped: int = 0        # group drops (eviction / removal)
+    reloads: int = 0                # group rebuilds after a prior eviction
+    # fleet fault tolerance
+    replicas_built: int = 0         # individual engine replicas constructed
+    replicas_dead: int = 0          # replicas declared DEAD and drained
+    failovers: int = 0              # dead-replica failover events
+    failover_requests: int = 0      # in-flight requests migrated by failover
+    cancelled: int = 0              # requests cancelled via gateway.cancel
+    # integrity scrub
+    scrubs: int = 0                 # per-entry scrub passes
+    corruptions_injected: int = 0   # flip faults applied
+    scrub_corruptions: int = 0      # entries caught with a CRC mismatch
+    scrub_repairs: int = 0          # entries repaired bitwise from loaders
+
+
+@dataclasses.dataclass
+class ReplicaSet:
+    """One arch group's replica pool. ``engines[r] is None`` = DEAD slot.
+    ``snapshots[r]`` holds the last-seen incident counters of replica r's
+    EngineStats (survives engine replacement: a fresh replica starts a
+    fresh snapshot)."""
+    group: str
+    engines: list
+    health: list
+    snapshots: list
+
+    def alive(self) -> list:
+        return [r for r, e in enumerate(self.engines) if e is not None]
+
+
+_INCIDENTS = (("recovery", "recoveries"), ("stall", "stalls"),
+              ("quarantine", "errors"))
 
 
 class ServingGateway:
-    """Multi-model router over per-group LLMEngines (see module docstring).
+    """Multi-model router over replicated per-group LLMEngines.
 
     ``engine_kw`` is forwarded to every engine the gateway builds — the
     shared admission/deadline policy (``admission``, ``max_waiting``,
     ``step_timeout_s``, ``packed``, ...). ``chunk_size`` is mandatory:
     multi-model steps serve prompts via chunk tasks, and a uniform step
     style keeps the pool's compile budget predictable. ``faults`` maps a
-    model name to a :class:`~repro.runtime.faults.FaultPlan` wired into
-    that model's (group) engine only — chaos in one engine cannot reach
-    another model's pool sibling."""
+    model name to a :class:`~repro.runtime.faults.FaultPlan`: its
+    nan/fail/delay faults wire into replica 0 of that model's group only
+    (chaos in one replica cannot reach another model's pool sibling, and
+    survivors stay clean for failover); its ``flip`` faults are applied by
+    the GATEWAY at its own step counter, corrupting the registry's
+    resident alpha bank so the scrub has something real to catch.
+
+    ``replicas`` sets the per-group replica count, ``health`` the
+    incident thresholds (:class:`HealthPolicy`), and ``scrub_every`` the
+    integrity-scrub cadence in gateway steps (0 = off)."""
 
     def __init__(self, registry: ModelRegistry, *, batch_slots: int = 4,
                  buffer_len: int = 128, chunk_size: int = 16,
                  eos_id: Optional[int] = None, hw="cpu",
-                 faults: Optional[dict] = None, **engine_kw):
+                 faults: Optional[dict] = None, replicas: int = 1,
+                 health: Optional[HealthPolicy] = None,
+                 scrub_every: int = 0, **engine_kw):
         if chunk_size is None:
             raise ValueError("the gateway serves prompts via chunked steps; "
                              "chunk_size must be set")
+        if replicas < 1:
+            raise ValueError(f"replicas must be >= 1, got {replicas}")
         self.registry = registry
         self._engine_kw = dict(batch_slots=batch_slots,
                                buffer_len=buffer_len,
@@ -90,28 +175,43 @@ class ServingGateway:
         for n in self._faults:
             if self.registry.get(n) is None:
                 raise KeyError(f"fault plan targets unregistered model {n!r}")
-        self._engines: dict = {}        # group signature -> LLMEngine
-        self._rr = 0                    # round-robin cursor over engines
+        self.replicas = replicas
+        self.health_policy = health or HealthPolicy()
+        self.scrub_every = scrub_every
+        self._groups: dict = {}         # group signature -> ReplicaSet
+        self._routes: dict = {}         # id(req) -> (group, replica idx)
+        self._rr = 0                    # round-robin cursor over replicas
+        self._step_idx = 0              # gateway step counter (flip faults,
+                                        # scrub cadence)
+        self._scrub_cursor = 0
         self._finished: list = []
         self.stats = GatewayStats()
 
     # -- engine lifecycle ---------------------------------------------------
 
-    def _drop_engine(self, group: str) -> None:
-        eng = self._engines.pop(group, None)
-        if eng is not None:
-            # the evicted model's resident dense-W decompressions go with it
-            eng._ops.clear_weight_cache(eng.model_label)
+    def _drop_group(self, group: str) -> None:
+        """Drop a group's whole replica set (eviction callback / rebuild).
+        The caller guarantees no live requests (pins checked, or the set
+        was drained first)."""
+        rs = self._groups.pop(group, None)
+        if rs is not None:
+            for eng in rs.engines:
+                if eng is not None:
+                    # the model's resident dense-W decompressions go with it
+                    eng._ops.clear_weight_cache(eng.model_label)
             self.stats.engines_dropped += 1
 
-    def _build_engine(self, group: str) -> None:
+    def _make_replica(self, group: str, r: int, *, with_faults: bool
+                      ) -> LLMEngine:
         members = self.registry.group_members(group)
         entries = [self.registry.entries[n] for n in members]
         cfg = entries[0].cfg
         label = "+".join(members)
+        if self.replicas > 1:
+            label = f"{label}@r{r}"
         kw = dict(self._engine_kw)
         plans = [self._faults[n] for n in members if n in self._faults]
-        if plans:
+        if plans and with_faults:
             kw["faults"] = plans[0]
         if len(members) == 1:
             eng = LLMEngine(entries[0].params, cfg, model_label=label, **kw)
@@ -120,23 +220,48 @@ class ServingGateway:
                 [(n, e.params) for n, e in zip(members, entries)], cfg)
             eng = LLMEngine(vset.params, cfg, variants=vset.M,
                             model_index=vset.index, model_label=label, **kw)
-        self._engines[group] = eng
+        self.stats.replicas_built += 1
+        return eng
+
+    def _build_group(self, group: str) -> None:
+        entries = [self.registry.entries[n]
+                   for n in self.registry.group_members(group)]
+        # injected engine faults live on replica 0 ONLY: survivors must be
+        # clean or failover would re-kill the adopted work
+        engines = [self._make_replica(group, r, with_faults=(r == 0))
+                   for r in range(self.replicas)]
+        self._groups[group] = ReplicaSet(
+            group=group, engines=engines,
+            health=[ReplicaHealth(self.health_policy)
+                    for _ in range(self.replicas)],
+            snapshots=[{attr: 0 for _k, attr in _INCIDENTS}
+                       for _ in range(self.replicas)])
         self.stats.engine_builds += 1
         if any(e.evictions for e in entries):
             self.stats.reloads += 1
 
-    def _ensure_engine(self, group: str) -> bool:
-        """Engine-for-group invariant: an engine exists exactly when its
-        group is resident (``_drop_engine`` rides the eviction callback)."""
-        if group in self._engines:
+    def _ensure_group(self, group: str) -> bool:
+        """Engines-for-group invariant: a replica set exists exactly when
+        its group is resident (``_drop_group`` rides the eviction
+        callback)."""
+        if group in self._groups:
             return True
         if not self.registry.ensure_resident_group(
-                group, on_evict=self._drop_engine):
+                group, on_evict=self._drop_group):
             return False
-        self._build_engine(group)
+        self._build_group(group)
         return True
 
     # -- request intake -----------------------------------------------------
+
+    def _pick_replica(self, rs: ReplicaSet) -> int:
+        """Least-loaded alive replica; HEALTHY beats DEGRADED; ties go to
+        the lowest index — fully deterministic, so two identical runs
+        route identically (the stream-identity tests depend on it)."""
+        alive = rs.alive()
+        return min(alive, key=lambda r: (
+            0 if rs.health[r].state == HEALTHY else 1,
+            rs.engines[r]._remaining(), r))
 
     def add_request(self, req: Request) -> tuple:
         """Route ``req.model``; returns ``(admitted, info)`` where info is
@@ -149,7 +274,7 @@ class ServingGateway:
             self.stats.not_found += 1
             raise KeyError(f"unknown model {req.model!r}; registered: "
                            f"{sorted(self.registry.names())}")
-        if not self._ensure_engine(entry.group):
+        if not self._ensure_group(entry.group):
             self.stats.evicted_refusals += 1
             req.finish_reason = FINISH_EVICTED
             out = req.output()
@@ -162,43 +287,260 @@ class ServingGateway:
         self.registry.touch(name)
         self.registry.pin(name)        # in-flight requests block eviction
         prev = req.on_finish
+        key = id(req)
 
-        def _fin(out, _n=name, _prev=prev):
+        def _fin(out, _n=name, _prev=prev, _k=key):
             self.registry.unpin(_n)
+            self._routes.pop(_k, None)
             self._finished.append(out)
             if _prev is not None:
                 _prev(out)
 
         req.on_finish = _fin
         self.stats.routed[name] = self.stats.routed.get(name, 0) + 1
-        return self._engines[entry.group].add_request(req)
+        rs = self._groups[entry.group]
+        r = self._pick_replica(rs)
+        self._routes[key] = (entry.group, r)
+        return rs.engines[r].add_request(req)
+
+    def cancel(self, req: Request) -> bool:
+        """Cancel one in-flight request wherever it is routed (slot or
+        queue): its slot and KV pages free immediately and ``on_finish``
+        fires with FINISH_CANCELLED. False when already finished."""
+        route = self._routes.get(id(req))
+        if route is None:
+            return False
+        group, r = route
+        rs = self._groups.get(group)
+        if rs is None:
+            return False
+        eng = rs.engines[r]
+        if eng is not None and eng.cancel(req):
+            self.stats.cancelled += 1
+            return True
+        return False
 
     # -- the step loop ------------------------------------------------------
 
     @property
     def pending(self) -> int:
         """Occupied slots + queued waiters across the pool."""
-        return sum(e._remaining() for e in self._engines.values())
+        return sum(e._remaining() for rs in self._groups.values()
+                   for e in rs.engines if e is not None)
 
     def step(self) -> int:
-        """Advance every pool engine one scheduler iteration, round-robin
-        order rotating across calls so no engine systematically steps last.
-        Returns the remaining work across the pool."""
-        engines = list(self._engines.values())
-        if not engines:
+        """One gateway iteration: apply scheduled ``flip`` faults, run the
+        scrub cadence, then advance every alive replica one scheduler
+        iteration (round-robin order rotating across calls so no replica
+        systematically steps last), health-checking each replica as it
+        goes. Returns the remaining work across the pool."""
+        idx = self._step_idx
+        self._step_idx += 1
+        self._apply_flips(idx)
+        if self.scrub_every and (idx + 1) % self.scrub_every == 0:
+            self._scrub_tick()
+        pairs = [(g, r) for g, rs in self._groups.items()
+                 for r in range(len(rs.engines))]
+        if not pairs:
             return 0
-        n = len(engines)
-        total = 0
+        n = len(pairs)
         for k in range(n):
-            total += engines[(self._rr + k) % n].step()
+            g, r = pairs[(self._rr + k) % n]
+            rs = self._groups.get(g)
+            if rs is None or r >= len(rs.engines):
+                continue                # group rebuilt/removed mid-iteration
+            eng = rs.engines[r]
+            if eng is None:
+                continue                # already failed over this iteration
+            eng.step()
+            self._health_tick(g, r)
         self._rr = (self._rr + 1) % n
-        return total
+        return self.pending
 
     def run_until_drained(self, max_steps: int = 10_000) -> GatewayStats:
         for _ in range(max_steps):
             if self.step() == 0:
                 break
         return self.stats
+
+    # -- replica health + failover ------------------------------------------
+
+    def _health_tick(self, group: str, r: int) -> None:
+        """Book replica ``r``'s new incidents (EngineStats deltas since the
+        last tick) into its health state machine; a DEAD verdict triggers
+        failover immediately — in-flight work never waits on a dead
+        replica."""
+        rs = self._groups[group]
+        eng = rs.engines[r]
+        if eng is None:
+            return
+        snap = rs.snapshots[r]
+        h = rs.health[r]
+        clean = True
+        for kind, attr in _INCIDENTS:
+            cur = getattr(eng.stats, attr)
+            d = cur - snap[attr]
+            if d > 0:
+                h.record(kind, d)
+                clean = False
+            snap[attr] = cur
+        if clean:
+            h.ok_step()
+        if h.state == DEAD:
+            self._failover(group, r)
+
+    def _failover(self, group: str, r: int) -> None:
+        """Drain DEAD replica ``r`` and re-route its in-flight requests to
+        surviving replicas via the recompute path (token-identical resume).
+        The last replica of a group gets a fresh replacement instead —
+        losing every replica must not strand admitted work."""
+        rs = self._groups[group]
+        eng = rs.engines[r]
+        rs.engines[r] = None
+        self.stats.replicas_dead += 1
+        self.stats.failovers += 1
+        reqs = eng.drain_requests()
+        eng._ops.clear_weight_cache(eng.model_label)
+        if not rs.alive():
+            # replacement replica: clean (no fault plan — the plan died
+            # with the replica) and health-fresh
+            rs.engines[r] = self._make_replica(group, r, with_faults=False)
+            rs.health[r] = ReplicaHealth(self.health_policy)
+            rs.snapshots[r] = {attr: 0 for _k, attr in _INCIDENTS}
+        for req in reqs:
+            t = self._pick_replica(rs)
+            self._routes[id(req)] = (group, t)
+            rs.engines[t].adopt(req)
+            self.stats.failover_requests += 1
+
+    def _drain_group(self, group: str) -> list:
+        """Strip every in-flight request off a group's replicas (rebuild /
+        hot add/remove / scrub repair), preserving priority-FCFS order per
+        replica."""
+        rs = self._groups.get(group)
+        if rs is None:
+            return []
+        out: list = []
+        for eng in rs.engines:
+            if eng is not None:
+                out.extend(eng.drain_requests())
+        return out
+
+    def _resubmit(self, req: Request) -> None:
+        """Re-adopt a drained request after its group was rebuilt."""
+        entry = self.registry.get(req.model)
+        if entry is None or not self._ensure_group(entry.group):
+            # the model vanished mid-drain (hot remove of a sibling should
+            # never strand work; treat like eviction backpressure)
+            req.finish_reason = FINISH_EVICTED
+            self.stats.evicted_refusals += 1
+            out = req.output()
+            if req.on_finish is not None and not req._notified:
+                req._notified = True
+                req.on_finish(out)
+            return
+        rs = self._groups[entry.group]
+        t = self._pick_replica(rs)
+        self._routes[id(req)] = (entry.group, t)
+        rs.engines[t].adopt(req)
+
+    # -- integrity scrub + flip faults --------------------------------------
+
+    def _apply_flips(self, idx: int) -> None:
+        """Fire scheduled ``flip`` faults: corrupt the target model's
+        RESIDENT registry bank (the scrub's ground-truth copy). Engines
+        hold their own stacked pytrees, so live streams keep serving
+        clean weights while the scrub detects and repairs the bank —
+        exactly the silent-corruption scenario a background scrub exists
+        for."""
+        for name, plan in self._faults.items():
+            for f in plan.at(idx):
+                if f.kind != "flip":
+                    continue
+                e = self.registry.get(name)
+                if e is not None and e.resident:
+                    self.registry.corrupt(name, leaf=f.leaf, bit=f.bit)
+                    self.stats.corruptions_injected += 1
+
+    def _scrub_tick(self) -> None:
+        """Scrub ONE resident group (round-robin across ticks — constant
+        per-step cost regardless of pool size). On any CRC mismatch the
+        whole group is repaired: drain, bitwise re-residency from loaders
+        (verified against the ledger), engine rebuild, recompute resume."""
+        groups = [g for g, rs in self._groups.items() if rs.alive()]
+        if not groups:
+            return
+        g = groups[self._scrub_cursor % len(groups)]
+        self._scrub_cursor += 1
+        bad = 0
+        for n in self.registry.group_members(g):
+            self.stats.scrubs += 1
+            if self.registry.scrub(n):
+                bad += 1
+        if not bad:
+            return
+        self.stats.scrub_corruptions += bad
+        migrated = self._drain_group(g)
+        self._drop_group(g)
+        self.registry.repair_group(g)
+        self.stats.scrub_repairs += bad
+        self._build_group(g)
+        for req in migrated:
+            self._resubmit(req)
+
+    # -- hot model add / remove ---------------------------------------------
+
+    def add_model(self, name: str, cfg, loader: Callable[[], Any],
+                  tags: tuple = ()):
+        """Hot ADD: register + make resident on the live pool. A
+        same-architecture group gains a stacked variant (its engines
+        rebuild; in-flight work resumes via recompute). Raises
+        ``ValueError`` on a duplicate name and :class:`BudgetExceeded` —
+        with the registration rolled back — when the byte budget cannot
+        admit the group."""
+        entry = self.registry.register(name, cfg, loader, tags=tags)
+        group = entry.group
+        migrated = []
+        had_engines = group in self._groups
+        if had_engines:
+            # engines restack with the new member on rebuild; residency of
+            # the existing members is untouched
+            migrated = self._drain_group(group)
+            self._drop_group(group)
+        if not self.registry.ensure_resident_group(
+                group, on_evict=self._drop_group):
+            self.registry.unregister(name)
+            if migrated:                # restore the pre-add group
+                self.registry.ensure_resident_group(
+                    group, on_evict=self._drop_group)
+                for req in migrated:
+                    self._resubmit(req)
+            raise BudgetExceeded(
+                f"model {name!r} cannot be made resident within the byte "
+                "budget")
+        for req in migrated:
+            self._resubmit(req)
+        return entry
+
+    def remove_model(self, name: str):
+        """Hot REMOVE: unregister + drop from the live pool. Raises
+        ``KeyError`` for unknown names and :class:`ModelInFlight` while
+        requests are live. Sibling variants' in-flight work migrates to
+        the restacked group."""
+        entry = self.registry.entries[name]     # KeyError -> HTTP 404
+        if entry.pinned:
+            raise ModelInFlight(
+                f"model {name!r} has {entry.pinned} in-flight request(s); "
+                "drain first")
+        group = entry.group
+        migrated = []
+        if group in self._groups:
+            migrated = self._drain_group(group)
+            self._drop_group(group)
+        self.registry.unregister(name)
+        for req in migrated:       # siblings rebuild without the member
+            self._resubmit(req)
+        return entry
 
     # -- introspection ------------------------------------------------------
 
@@ -207,46 +549,119 @@ class ServingGateway:
         return list(self._finished)
 
     def resident_bytes(self) -> int:
-        """ACTUAL resident params footprint: the sum over pool engines of
-        their (stacked) pytree bytes — what the serving bench's raising
-        gate compares against one dense-fp32 copy of the largest model."""
-        return sum(param_bytes(e.params) for e in self._engines.values())
+        """ACTUAL resident params footprint: the sum over groups of their
+        (stacked) pytree bytes — replicas share the same resident alpha
+        bank (the paper's premise is what makes replication cheap), so a
+        group is charged once regardless of replica count."""
+        total = 0
+        for rs in self._groups.values():
+            alive = rs.alive()
+            if alive:
+                total += param_bytes(rs.engines[alive[0]].params)
+        return total
 
     def engine_for(self, name: str) -> Optional[LLMEngine]:
+        """First alive replica of the model's group (primary)."""
         entry = self.registry.get(name)
         if entry is None:
             return None
-        return self._engines.get(entry.group)
+        rs = self._groups.get(entry.group)
+        if rs is None:
+            return None
+        alive = rs.alive()
+        return rs.engines[alive[0]] if alive else None
+
+    def health_of(self, name: str) -> list:
+        """Replica health states of the model's group (``[]`` = no
+        engines)."""
+        entry = self.registry.get(name)
+        if entry is None or entry.group not in self._groups:
+            return []
+        rs = self._groups[entry.group]
+        return [rs.health[r].state if rs.engines[r] is not None else DEAD
+                for r in range(len(rs.engines))]
 
 
 # ---------------------------------------------------------------------------
 # The async HTTP front door (stdlib asyncio only — no new dependencies)
 # ---------------------------------------------------------------------------
 
-_REASONS = {200: "OK", 404: "Not Found", 500: "Internal Server Error",
-            503: "Service Unavailable"}
+_REASONS = {200: "OK", 400: "Bad Request", 404: "Not Found",
+            409: "Conflict", 500: "Internal Server Error",
+            501: "Not Implemented", 503: "Service Unavailable"}
+
+
+class _BadRequest(ValueError):
+    """Client error in a /v1/completions body (mapped to HTTP 400)."""
+
+    def __init__(self, message: str, param: Optional[str] = None):
+        super().__init__(message)
+        self.param = param
+
+
+def _vet_int(spec: dict, key: str, default: int, minimum: int) -> int:
+    v = spec.get(key, default)
+    if isinstance(v, bool) or not isinstance(v, int):
+        raise _BadRequest(f"{key!r} must be an integer", param=key)
+    if v < minimum:
+        raise _BadRequest(f"{key!r} must be >= {minimum}", param=key)
+    return v
+
+
+def _vet_num(spec: dict, key: str, default: float) -> float:
+    v = spec.get(key, default)
+    if isinstance(v, bool) or not isinstance(v, (int, float)):
+        raise _BadRequest(f"{key!r} must be a number", param=key)
+    return float(v)
 
 
 class GatewayHTTPServer:
     """Minimal OpenAI-compatible HTTP server over a :class:`ServingGateway`.
 
     Routes:
-      ``GET /v1/models``        registered models + residency
-      ``POST /v1/completions``  token-id completions; ``"stream": true``
-                                emits SSE chunks (one per committed token)
+      ``GET /v1/models``           registered models + residency
+      ``POST /v1/completions``     token-id completions; ``"stream": true``
+                                   emits SSE chunks (one per committed token)
+      ``POST /admin/models``       hot ADD (requires ``model_factory``)
+      ``DELETE /admin/models/<id>``hot REMOVE (409 while in flight)
+      ``POST /admin/drain``        graceful drain: stop admission, finish
+                                   live work, then ``drained`` is set
+      ``GET /admin/health``        replica states, breaker states, scrub +
+                                   failover counters
 
     There is no tokenizer in this repo: ``prompt`` is a list of token ids
     (a string prompt is mapped deterministically onto ids via char codes
     modulo the model's vocab). The engine pump runs in ONE background
-    thread — engines are not thread-safe, so intake (``add_request``) and
-    stepping share ``self._lock``; token/finish callbacks hop back into
-    the event loop via ``call_soon_threadsafe``."""
+    thread — engines are not thread-safe, so intake (``add_request``),
+    cancellation, and stepping share ``self._lock``; token/finish
+    callbacks hop back into the event loop via ``call_soon_threadsafe``.
+
+    ``breaker_after > 0`` arms a per-model :class:`CircuitBreaker`:
+    ``breaker_after`` consecutive FINISH_ERROR completions trip the model
+    to 503 + ``Retry-After`` for ``breaker_cooldown_s``; then one probe
+    request is admitted — success re-closes, failure re-opens.
+
+    ``model_factory(spec)`` (from the launcher) maps a ``POST
+    /admin/models`` JSON body to ``(name, cfg, loader, tags)``; without
+    one the route answers 501."""
 
     def __init__(self, gateway: ServingGateway, host: str = "127.0.0.1",
-                 port: int = 8080):
+                 port: int = 8080, *, breaker_after: int = 0,
+                 breaker_cooldown_s: float = 2.0, breaker_probes: int = 1,
+                 retry_after_s: int = 1,
+                 model_factory: Optional[Callable[[dict], tuple]] = None):
         self.gateway = gateway
         self.host = host
         self.port = port
+        self.breaker_after = breaker_after
+        self.breaker_cooldown_s = breaker_cooldown_s
+        self.breaker_probes = breaker_probes
+        self.retry_after_s = max(1, int(retry_after_s))
+        self.model_factory = model_factory
+        self._breakers: dict = {}       # model name -> CircuitBreaker
+        self.breaker_rejections = 0
+        self.draining = False
+        self.drained: Optional[asyncio.Event] = None
         self._lock = threading.Lock()
         self._stop = threading.Event()
         self._pump_thread: Optional[threading.Thread] = None
@@ -258,6 +673,7 @@ class GatewayHTTPServer:
 
     async def start(self) -> None:
         self.loop = asyncio.get_running_loop()
+        self.drained = asyncio.Event()
         self._server = await asyncio.start_server(self._handle, self.host,
                                                   self.port)
         self.port = self._server.sockets[0].getsockname()[1]  # resolve :0
@@ -278,12 +694,42 @@ class GatewayHTTPServer:
 
     def _pump(self) -> None:
         """Background step loop: drains the pool whenever any engine has
-        work; idles on a short wait otherwise."""
+        work; idles on a short wait otherwise. Completes the graceful
+        drain: once draining is requested and the pool is empty, the
+        ``drained`` event fires (the launcher exits 0 on it)."""
         while not self._stop.is_set():
             with self._lock:
-                work = self.gateway.step() if self.gateway.pending else 0
+                pending = self.gateway.pending
+                work = self.gateway.step() if pending else 0
+            if self.draining and not work and not pending:
+                self.loop.call_soon_threadsafe(self.drained.set)
+                return
             if not work:
                 self._stop.wait(0.002)
+
+    # -- per-model circuit breakers -----------------------------------------
+
+    def _breaker(self, model: str) -> Optional[CircuitBreaker]:
+        if self.breaker_after <= 0 or model is None:
+            return None
+        br = self._breakers.get(model)
+        if br is None:
+            br = CircuitBreaker(trip_after=self.breaker_after,
+                                cooldown_s=self.breaker_cooldown_s,
+                                probes=self.breaker_probes)
+            self._breakers[model] = br
+        return br
+
+    def _note_finish(self, model: str, out) -> None:
+        """Feed a completion's terminal reason to the model's breaker
+        (runs on the event loop — breakers are not thread-safe)."""
+        br = self._breaker(model)
+        if br is None:
+            return
+        if out.finish_reason == "error":
+            br.record_failure()
+        elif out.finish_reason in ("eos", "length"):
+            br.record_success()
 
     # -- HTTP plumbing ------------------------------------------------------
 
@@ -312,6 +758,15 @@ class GatewayHTTPServer:
                 await self._models(writer)
             elif method == "POST" and path == "/v1/completions":
                 await self._completions(writer, body)
+            elif method == "POST" and path == "/admin/models":
+                await self._admin_add(writer, body)
+            elif method == "DELETE" and path.startswith("/admin/models/"):
+                await self._admin_remove(writer,
+                                         path[len("/admin/models/"):])
+            elif method == "POST" and path == "/admin/drain":
+                await self._admin_drain(writer)
+            elif method == "GET" and path == "/admin/health":
+                await self._admin_health(writer)
             else:
                 await self._error(writer, 404, f"no route {method} {path}",
                                   code="not_found")
@@ -328,19 +783,31 @@ class GatewayHTTPServer:
             except Exception:
                 pass
 
-    async def _json(self, writer, status: int, obj) -> None:
+    async def _json(self, writer, status: int, obj,
+                    headers: Optional[dict] = None) -> None:
         data = json.dumps(obj).encode()
+        extra = "".join(f"{k}: {v}\r\n" for k, v in (headers or {}).items())
         writer.write((f"HTTP/1.1 {status} {_REASONS.get(status, 'OK')}\r\n"
                       "Content-Type: application/json\r\n"
                       f"Content-Length: {len(data)}\r\n"
+                      f"{extra}"
                       "Connection: close\r\n\r\n").encode() + data)
         await writer.drain()
 
     async def _error(self, writer, status: int, message: str,
-                     code: str = "error") -> None:
-        await self._json(writer, status,
-                         {"error": {"message": message, "type": code,
-                                    "code": code}})
+                     code: str = "error", param: Optional[str] = None,
+                     retry_after: Optional[int] = None) -> None:
+        # OpenAI-style error object; every 503 carries Retry-After so
+        # clients can back off instead of hammering a cold/broken model
+        err = {"message": message, "type": code, "code": code}
+        if param is not None:
+            err["param"] = param
+        headers = None
+        if status == 503:
+            headers = {"Retry-After": str(retry_after
+                                          if retry_after is not None
+                                          else self.retry_after_s)}
+        await self._json(writer, status, {"error": err}, headers=headers)
 
     # -- routes -------------------------------------------------------------
 
@@ -351,43 +818,95 @@ class GatewayHTTPServer:
                 for n in self.gateway.registry.names()]
         await self._json(writer, 200, {"object": "list", "data": data})
 
+    def _parse_completion(self, spec: dict, entry) -> dict:
+        """Validate a completions body; raises :class:`_BadRequest` with
+        the offending param (the 400 path — client bugs must not surface
+        as 500s)."""
+        prompt = spec.get("prompt", [])
+        if isinstance(prompt, str):
+            prompt = [ord(c) % entry.cfg.vocab for c in prompt]
+        elif isinstance(prompt, list):
+            if not all(isinstance(t, int) and not isinstance(t, bool)
+                       for t in prompt):
+                raise _BadRequest("'prompt' list must contain token ids "
+                                  "(integers)", param="prompt")
+        else:
+            raise _BadRequest("'prompt' must be a string or a list of "
+                              "token ids", param="prompt")
+        if not prompt:
+            prompt = [1]
+        stream = spec.get("stream", False)
+        if not isinstance(stream, bool):
+            raise _BadRequest("'stream' must be a boolean", param="stream")
+        deadline = spec.get("deadline_s")
+        if deadline is not None and (isinstance(deadline, bool)
+                                     or not isinstance(deadline, (int, float))
+                                     or deadline <= 0):
+            raise _BadRequest("'deadline_s' must be a positive number",
+                              param="deadline_s")
+        return dict(
+            prompt=prompt, stream=stream, deadline_s=deadline,
+            max_tokens=_vet_int(spec, "max_tokens", 16, 1),
+            temperature=_vet_num(spec, "temperature", 0.0),
+            top_k=_vet_int(spec, "top_k", 0, 0),
+            seed=_vet_int(spec, "seed", 0, -(2 ** 63)))
+
     async def _completions(self, writer, body: bytes) -> None:
+        if self.draining:
+            return await self._error(
+                writer, 503, "gateway is draining; no new admissions",
+                code="draining")
         try:
             spec = json.loads(body or b"{}")
+            if not isinstance(spec, dict):
+                raise _BadRequest("request body must be a JSON object")
         except json.JSONDecodeError as exc:
-            return await self._error(writer, 500, f"bad JSON body: {exc}",
-                                     code="invalid_request")
+            return await self._error(writer, 400, f"bad JSON body: {exc}",
+                                     code="invalid_request_error")
+        except _BadRequest as exc:
+            return await self._error(writer, 400, str(exc),
+                                     code="invalid_request_error")
         model = spec.get("model")
         entry = self.gateway.registry.get(model)
         if entry is None:
             return await self._error(
                 writer, 404, f"model {model!r} not found",
                 code="model_not_found")
-        prompt = spec.get("prompt", [])
-        if isinstance(prompt, str):
-            prompt = [ord(c) % entry.cfg.vocab for c in prompt]
-        if not prompt:
-            prompt = [1]
-        stream = bool(spec.get("stream", False))
+        br = self._breaker(model)
+        if br is not None and not br.allow():
+            self.breaker_rejections += 1
+            return await self._error(
+                writer, 503,
+                f"model {model!r} is failing (circuit breaker open); "
+                "retry later", code="breaker_open",
+                retry_after=br.retry_after_s())
+        try:
+            fields = self._parse_completion(spec, entry)
+        except _BadRequest as exc:
+            return await self._error(writer, 400, str(exc),
+                                     code="invalid_request_error",
+                                     param=exc.param)
         rid = next(self._rids)
         q: asyncio.Queue = asyncio.Queue()
         loop = self.loop
+        stream = fields["stream"]
 
         def on_tok(_rid, tok):
             loop.call_soon_threadsafe(q.put_nowait, ("tok", int(tok)))
 
-        def on_fin(out):
+        def on_fin(out, _m=model):
+            loop.call_soon_threadsafe(self._note_finish, _m, out)
             loop.call_soon_threadsafe(q.put_nowait, ("fin", out))
 
         req = Request(
-            rid, np.asarray(prompt, np.int32),
-            max_new_tokens=int(spec.get("max_tokens", 16)),
+            rid, np.asarray(fields["prompt"], np.int32),
+            max_new_tokens=fields["max_tokens"],
             model=model,
             sampling=SamplingParams(
-                temperature=float(spec.get("temperature", 0.0)),
-                top_k=int(spec.get("top_k", 0)),
-                seed=int(spec.get("seed", 0))),
-            deadline_s=spec.get("deadline_s"),
+                temperature=fields["temperature"],
+                top_k=fields["top_k"],
+                seed=fields["seed"]),
+            deadline_s=fields["deadline_s"],
             stream=on_tok if stream else None,
             on_finish=on_fin)
 
@@ -411,6 +930,30 @@ class GatewayHTTPServer:
         # Any other refusal (rejected/shed) already finalized the request:
         # the "fin" event is queued and the loops below return immediately.
         if stream:
+            return await self._stream_sse(writer, q, rid, model, req)
+        out = None
+        while out is None:
+            kind, val = await q.get()
+            if kind == "fin":
+                out = val
+        payload = {"id": f"cmpl-{rid}", "object": "text_completion",
+                   "model": model,
+                   "choices": [{"index": 0,
+                                "text": " ".join(str(t) for t in out.tokens),
+                                "token_ids": list(out.tokens),
+                                "finish_reason": out.finish_reason}],
+                   "usage": {"prompt_tokens": out.prompt_len,
+                             "completion_tokens": out.n_tokens,
+                             "total_tokens": out.prompt_len + out.n_tokens}}
+        await self._json(writer, 200, payload)
+
+    async def _stream_sse(self, writer, q: asyncio.Queue, rid: int,
+                          model: str, req: Request) -> None:
+        """SSE streaming with disconnect-cancellation: when the client
+        goes away mid-stream, the underlying request is cancelled —
+        releasing its slot and KV pages for live traffic — instead of
+        burning the rest of its token budget into a dead socket."""
+        try:
             writer.write(b"HTTP/1.1 200 OK\r\n"
                          b"Content-Type: text/event-stream\r\n"
                          b"Cache-Control: no-cache\r\n"
@@ -418,6 +961,8 @@ class GatewayHTTPServer:
             await writer.drain()
             while True:
                 kind, val = await q.get()
+                if writer.is_closing():
+                    raise ConnectionResetError("SSE client went away")
                 if kind == "tok":
                     chunk = {"id": f"cmpl-{rid}", "object": "text_completion",
                              "model": model,
@@ -437,18 +982,95 @@ class GatewayHTTPServer:
                                  + b"\n\ndata: [DONE]\n\n")
                     await writer.drain()
                     return
-        out = None
-        while out is None:
-            kind, val = await q.get()
-            if kind == "fin":
-                out = val
-        payload = {"id": f"cmpl-{rid}", "object": "text_completion",
-                   "model": model,
-                   "choices": [{"index": 0,
-                                "text": " ".join(str(t) for t in out.tokens),
-                                "token_ids": list(out.tokens),
-                                "finish_reason": out.finish_reason}],
-                   "usage": {"prompt_tokens": out.prompt_len,
-                             "completion_tokens": out.n_tokens,
-                             "total_tokens": out.prompt_len + out.n_tokens}}
-        await self._json(writer, 200, payload)
+        except (ConnectionResetError, BrokenPipeError,
+                ConnectionAbortedError):
+            def _cancel():
+                with self._lock:
+                    return self.gateway.cancel(req)
+            await self.loop.run_in_executor(None, _cancel)
+
+    # -- admin routes -------------------------------------------------------
+
+    async def _admin_add(self, writer, body: bytes) -> None:
+        if self.model_factory is None:
+            return await self._error(
+                writer, 501, "hot model ADD needs a model_factory (the "
+                "launcher provides one)", code="not_implemented")
+        try:
+            spec = json.loads(body or b"{}")
+            if not isinstance(spec, dict):
+                raise ValueError("body must be a JSON object")
+        except (json.JSONDecodeError, ValueError) as exc:
+            return await self._error(writer, 400, f"bad JSON body: {exc}",
+                                     code="invalid_request_error")
+        try:
+            name, cfg, loader, tags = self.model_factory(spec)
+        except (KeyError, ValueError) as exc:
+            return await self._error(writer, 400, str(exc),
+                                     code="invalid_request_error")
+
+        def _add():
+            with self._lock:
+                return self.gateway.add_model(name, cfg, loader, tags=tags)
+
+        try:
+            entry = await self.loop.run_in_executor(None, _add)
+        except BudgetExceeded as exc:
+            return await self._error(writer, 409, str(exc),
+                                     code=BudgetExceeded.code)
+        except ValueError as exc:       # duplicate registration
+            return await self._error(writer, 409, str(exc),
+                                     code="model_exists")
+        await self._json(writer, 200, {
+            "id": entry.name, "object": "model", "ready": entry.resident,
+            "tags": list(entry.tags)})
+
+    async def _admin_remove(self, writer, name: str) -> None:
+        def _remove():
+            with self._lock:
+                return self.gateway.remove_model(name)
+
+        try:
+            await self.loop.run_in_executor(None, _remove)
+        except KeyError:
+            return await self._error(writer, 404,
+                                     f"model {name!r} not found",
+                                     code="model_not_found")
+        except ModelInFlight as exc:
+            return await self._error(writer, 409, str(exc),
+                                     code=ModelInFlight.code)
+        await self._json(writer, 200, {"id": name, "deleted": True})
+
+    async def _admin_drain(self, writer) -> None:
+        """Graceful drain: stop admitting, let the pump finish live work,
+        then fire ``drained`` (the launcher awaits it and exits 0)."""
+        self.draining = True
+        with self._lock:
+            pending = self.gateway.pending
+        if pending == 0:
+            # pump may already be parked; don't make the caller wait on it
+            self.drained.set()
+        await self._json(writer, 200,
+                         {"status": "draining", "pending": pending})
+
+    async def _admin_health(self, writer) -> None:
+        gw = self.gateway
+        models = {}
+        for n in gw.registry.names():
+            models[n] = {
+                "replicas": gw.health_of(n),
+                "breaker": (self._breakers[n].state
+                            if n in self._breakers else "closed"),
+            }
+        s = gw.stats
+        await self._json(writer, 200, {
+            "draining": self.draining,
+            "models": models,
+            "failovers": s.failovers,
+            "failover_requests": s.failover_requests,
+            "replicas_dead": s.replicas_dead,
+            "scrubs": s.scrubs,
+            "scrub_corruptions": s.scrub_corruptions,
+            "scrub_repairs": s.scrub_repairs,
+            "cancelled": s.cancelled,
+        })

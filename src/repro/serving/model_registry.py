@@ -26,10 +26,19 @@ owns that residency:
 * :func:`make_alpha_variant` — derive a same-architecture variant by
   deterministically perturbing ONLY the alpha banks (the "fine-tune
   touched the alphas" story), guaranteed stackable with its source.
+* **Integrity scrub** — registration/load captures a CRC32-per-leaf ledger
+  of the alpha bank (:func:`alpha_crc_ledger`); :meth:`ModelRegistry.scrub`
+  re-checksums a resident entry against it, and
+  :meth:`ModelRegistry.repair_group` re-materialises a corrupted group from
+  its loaders, *verifying* the reload is bitwise what the ledger recorded.
+  Because only compressed coefficients are resident, a scrub pass and a
+  repair cost kilobytes-to-megabytes — the paper's memory-wall trick doing
+  double duty as a reliability trick.
 """
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Any, Callable, Optional
 
 import jax
@@ -67,6 +76,27 @@ def alpha_bank_bytes(params: Any) -> int:
     return sum(int(np.dtype(l.dtype).itemsize) * int(np.size(l))
                for path, l in flat
                if _path_leaf_key(path) in _ALPHA_BANK_KEYS)
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", k)) for k in path)
+
+
+def _alpha_bank_leaves(params: Any) -> list:
+    """``(path_str, leaf)`` for every alpha-bank leaf, in flatten order —
+    the deterministic leaf indexing shared by the CRC ledger, ``scrub``,
+    and the ``flip`` fault injector."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    return [(_path_str(path), leaf) for path, leaf in flat
+            if _path_leaf_key(path) in _ALPHA_BANK_KEYS]
+
+
+def alpha_crc_ledger(params: Any) -> dict:
+    """CRC32 per alpha-bank leaf (path string -> checksum of raw bytes).
+    The integrity ground truth captured at load time; cheap because only
+    the compressed representation is covered."""
+    return {p: zlib.crc32(np.asarray(leaf).tobytes())
+            for p, leaf in _alpha_bank_leaves(params)}
 
 
 def dense_fp32_bytes(cfg: ModelConfig) -> int:
@@ -187,6 +217,12 @@ class ModelEntry:
     pinned: int = 0                 # in-flight requests (eviction guard)
     loads: int = 0
     evictions: int = 0
+    # integrity scrub state: CRC32 per alpha-bank leaf, captured at FIRST
+    # load (the bitwise ground truth every reload must reproduce)
+    crc_ledger: dict = dataclasses.field(default_factory=dict)
+    scrubs: int = 0                 # scrub passes over this entry
+    corruptions: int = 0            # scrubs that found a CRC mismatch
+    repairs: int = 0                # verified bitwise re-residencies
 
     @property
     def resident(self) -> bool:
@@ -271,6 +307,88 @@ class ModelRegistry:
         e.bytes = param_bytes(e.params)
         e.alpha_bytes = alpha_bank_bytes(e.params)
         e.loads += 1
+        if not e.crc_ledger:    # first load: capture the integrity ledger
+            e.crc_ledger = alpha_crc_ledger(e.params)
+
+    # -- integrity scrub ----------------------------------------------------
+
+    def scrub(self, name: str) -> list:
+        """Re-checksum one resident entry's alpha bank against its ledger.
+        Returns the corrupted leaf paths ([] = clean or not resident)."""
+        e = self.entries[name]
+        if not e.resident:
+            return []
+        e.scrubs += 1
+        current = alpha_crc_ledger(e.params)
+        bad = [p for p, crc in e.crc_ledger.items()
+               if current.get(p) != crc]
+        bad += [p for p in current if p not in e.crc_ledger]
+        if bad:
+            e.corruptions += 1
+        return bad
+
+    def corrupt(self, name: str, leaf: int = 0, bit: int = 0) -> str:
+        """Flip one bit of alpha-bank leaf index ``leaf`` (flatten order,
+        wrapped) in the resident params — the ``flip`` fault injector.
+        Dtype-agnostic: the flip lands in the leaf's raw byte buffer, so
+        fp32, int8, and packed int4 banks are all fair game. Returns the
+        corrupted leaf's path."""
+        e = self.entries[name]
+        if not e.resident:
+            raise ValueError(f"model {name!r} is not resident")
+        flat, treedef = jax.tree_util.tree_flatten_with_path(e.params)
+        bank = [i for i, (path, _l) in enumerate(flat)
+                if _path_leaf_key(path) in _ALPHA_BANK_KEYS]
+        i = bank[leaf % len(bank)]
+        path, old = flat[i]
+        raw = np.asarray(old)
+        buf = bytearray(raw.tobytes())
+        b = (bit // 8) % len(buf)
+        buf[b] ^= 1 << (bit % 8)
+        new = np.frombuffer(bytes(buf), raw.dtype).reshape(raw.shape)
+        leaves = [l for _p, l in flat]
+        leaves[i] = jnp.asarray(new)
+        e.params = jax.tree_util.tree_unflatten(treedef, leaves)
+        return _path_str(path)
+
+    def repair(self, name: str) -> None:
+        """Re-materialise one entry from its loader and VERIFY the reload
+        is bitwise what the ledger recorded at first load — a repair that
+        silently changed the bank would corrupt token streams instead of
+        fixing them. Raises RuntimeError when the source itself no longer
+        matches (checkpoint rot: operator intervention required)."""
+        e = self.entries[name]
+        fresh = e.loader()
+        if alpha_crc_ledger(fresh) != e.crc_ledger:
+            raise RuntimeError(
+                f"repair of {name!r} failed verification: the loader no "
+                "longer reproduces the registered alpha bank bitwise")
+        e.params = fresh
+        e.bytes = param_bytes(fresh)
+        e.alpha_bytes = alpha_bank_bytes(fresh)
+        e.loads += 1
+        e.repairs += 1
+
+    def repair_group(self, group: str) -> list:
+        """Bitwise re-residency of every resident member of ``group``
+        (stacked variants rebuild together). Returns the repaired names."""
+        done = []
+        for n in self.group_members(group):
+            if self.entries[n].resident:
+                self.repair(n)
+                done.append(n)
+        return done
+
+    def unregister(self, name: str) -> ModelEntry:
+        """Remove a model (hot REMOVE). Refuses while requests are in
+        flight — the caller drains first."""
+        e = self.entries[name]
+        if e.pinned:
+            raise RuntimeError(
+                f"model {name!r} has {e.pinned} in-flight request(s)")
+        e.params = None
+        del self.entries[name]
+        return e
 
     def evict_group(self, group: str, on_evict: Optional[Callable] = None
                     ) -> None:

@@ -393,6 +393,22 @@ class FCFSScheduler:
         self.waiting.append(req)
         return True
 
+    def remove(self, req: Request) -> bool:
+        """Withdraw one queued request (cancellation): True iff it was
+        waiting. The caller owns finalization — no finish reason is set."""
+        try:
+            self.waiting.remove(req)
+            return True
+        except ValueError:
+            return False
+
+    def pop_all(self) -> list[Request]:
+        """Drain the whole waiting queue in priority-FCFS order (replica
+        drain / failover: the requests are adopted by another scheduler)."""
+        out = sorted(self.waiting, key=self._key)
+        self.waiting = []
+        return out
+
     def pop_expired(self, now: float) -> list[Request]:
         """Remove and return waiting requests whose deadline has passed
         (marked FINISH_TIMEOUT; the engine finalizes their outputs)."""
