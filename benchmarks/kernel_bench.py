@@ -126,8 +126,8 @@ def run(print_fn=print, smoke: bool = False,
         payload = {"bench": "kernels", "smoke": smoke,
                    "shape": dict(M=M, d_in=d_in, d_out=d_out, rho=rho),
                    "backend": jax.default_backend(), "rows": rows}
-        with open(json_path, "w") as f:
-            json.dump(payload, f, indent=2)
+        from repro.checkpoint.ckpt import atomic_write_json
+        atomic_write_json(json_path, payload, indent=2)
         print_fn(f"kernel_bench,json,{json_path}")
     return rows
 

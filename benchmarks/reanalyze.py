@@ -37,6 +37,8 @@ def main() -> None:
         rec["analysis"] = st.merged()
         with open(jf + ".tmp", "w") as f:
             json.dump(rec, f, indent=1, default=float)
+            f.flush()
+            os.fsync(f.fileno())    # durable before the rename lands
         os.replace(jf + ".tmp", jf)
         n += 1
         print(f"reanalyzed {os.path.basename(jf)}: "

@@ -52,6 +52,14 @@ Three comparisons, all written to ``BENCH_serving.json``:
   single-model engine run of the same request (greedy and sampled) —
   cross-model batching is free of numerics drift. The cross-model step
   must also hold the single-model compile bound.
+* **crash restart (durability)**: the staggered chunked workload with the
+  write-ahead request journal armed, vs non-durable — the journal
+  group-commits one fsync per engine step, so full mode RAISES below
+  0.9x. Then a journaled run is abandoned mid-stream (unflushed tail
+  discarded, the in-process kill -9) and a fresh engine recovers from the
+  on-disk segments: zero lost requests and token streams identical to the
+  fault-free run raise in EVERY mode; time-to-first-recovered-token is
+  the reported restart-latency metric.
 * **replica failover**: the multi-model workload on a 2-replica group with
   replica 0 killed mid-run by an injected step crash (``dead_after=1``).
   The health state machine must mark the replica DEAD and migrate its
@@ -70,7 +78,9 @@ from __future__ import annotations
 
 import json
 import os
+import shutil
 import sys
+import tempfile
 import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -86,7 +96,8 @@ import dataclasses
 from repro.configs import get_smoke_config
 from repro.models import registry as R
 from repro.serving import (FaultPlan, HealthPolicy, LLMEngine, ModelRegistry,
-                           Request, SamplingParams, ServingGateway)
+                           Request, RequestJournal, SamplingParams,
+                           ServingGateway)
 from repro.serving.model_registry import (alpha_bank_bytes, dense_fp32_bytes,
                                           make_alpha_variant, param_bytes)
 
@@ -107,6 +118,12 @@ REPLICA_GATE = 0.7       # failover throughput floor vs a warm fault-free
                          # mid-run costs migration + recompute, not a
                          # collapse. Lost requests or stream divergence
                          # raise in EVERY mode.
+CRASH_RESTART_GATE = 0.9     # journaled throughput floor vs non-durable
+                             # (full mode): the write-ahead journal is an
+                             # fsync per engine step (group commit), not a
+                             # per-token stall. Lost requests or stream
+                             # divergence after the mid-run kill raise in
+                             # EVERY mode.
 PAGE_SIZE = 16           # paged-capacity bench page size (tokens/page)
 MM_RHO = 0.25            # multi-model bench compression ratio: M=2 resident
                          # banks at rho=0.25 keep the aggregate well under
@@ -607,6 +624,98 @@ def run(print_fn=print, smoke: bool = False,
             f"the warm fault-free 2-replica baseline (need "
             f">= {REPLICA_GATE}x)")
 
+    # -- crash restart: write-ahead journal overhead + recovery -------------
+    # (a) Durable vs non-durable throughput on the staggered chunked
+    # workload: the journal fsyncs once per engine step (group commit), so
+    # full mode RAISES below 0.9x. (b) A journaled run is abandoned
+    # mid-stream with its unflushed tail discarded — the in-process
+    # equivalent of kill -9 — and a fresh engine rebuilt from the on-disk
+    # segments must finish every request with token streams IDENTICAL to
+    # the non-durable baseline (both gates raise in every mode);
+    # time-to-first-recovered-token (journal replay + engine rebuild +
+    # compile + steps until a recovered request emits a NEW token) is the
+    # reported restart-latency metric.
+    def time_journal(journal):
+        eng = LLMEngine(params, cfg, batch_slots=B, buffer_len=buf, hw=hw,
+                        chunk_size=chunk_size, journal=journal)
+        for r in _staggered_requests(cfg, n_mixed, lo=lo, hi=hi):
+            eng.submit(r)
+        t0 = time.perf_counter()
+        stats = eng.run_until_drained()
+        return eng, stats, time.perf_counter() - t0
+
+    jroot = tempfile.mkdtemp(prefix="serving_bench_journal_")
+    try:
+        eng_nd, stats_nd, dt_nd = time_journal(None)   # warm (post-chaos)
+        tps_nd = stats_nd.tokens_out / dt_nd
+        nd_outs = {o.rid: tuple(o.tokens) for o in eng_nd.outputs()}
+        eng_jd, stats_jd, dt_jd = time_journal(
+            RequestJournal(os.path.join(jroot, "overhead")))
+        tps_jd = stats_jd.tokens_out / dt_jd
+        durable_ratio = tps_jd / tps_nd if tps_nd > 0 else 0.0
+        print_fn(f"serving_bench,crash_restart_overhead,"
+                 f"durable={tps_jd:.1f}tok/s,nondurable={tps_nd:.1f}tok/s,"
+                 f"ratio={durable_ratio:.2f}x")
+
+        kdir = os.path.join(jroot, "kill")
+        jk = RequestJournal(kdir)
+        eng_k = LLMEngine(params, cfg, batch_slots=B, buffer_len=buf, hw=hw,
+                          chunk_size=chunk_size, journal=jk)
+        for r in _staggered_requests(cfg, n_mixed, lo=lo, hi=hi):
+            eng_k.submit(r)
+        kill_after = 4
+        for _ in range(kill_after):
+            if eng_k.step() == 0:
+                break
+        jk.close()      # abandon engine + journal: the unflushed tail is
+        del eng_k       # lost, exactly as under kill -9
+
+        t0 = time.perf_counter()
+        jr = RequestJournal(kdir)
+        eng_r = LLMEngine(params, cfg, batch_slots=B, buffer_len=buf, hw=hw,
+                          chunk_size=chunk_size, journal=jr)
+        recovered = eng_r.recover_from_journal()
+        base = {r.rid: len(r.out_tokens) for r in recovered}
+        ttfrt = None
+        while True:
+            remaining = eng_r.step()
+            if ttfrt is None and any(
+                    len(r.out_tokens) > base[r.rid] for r in recovered):
+                ttfrt = time.perf_counter() - t0
+            if remaining == 0:
+                break
+        rec_outs = {rid: tuple(e.tokens) for rid, e in jr.entries.items()}
+        cr_lost = [rid for rid in nd_outs
+                   if not (rid in jr.entries and jr.entries[rid].done)]
+        cr_diverged = [rid for rid in nd_outs
+                       if rec_outs.get(rid) != nd_outs[rid]]
+        print_fn(f"serving_bench,crash_restart,killed_after={kill_after},"
+                 f"recovered={len(recovered)},"
+                 f"ttfrt={ttfrt if ttfrt is not None else -1:.3f}s")
+        if not recovered:
+            raise RuntimeError(
+                "crash-restart bench: the mid-run kill left no live "
+                "journaled requests to recover — the kill landed after "
+                "drain, the bench proves nothing")
+        if cr_lost:
+            raise RuntimeError(
+                f"crash-restart bench lost requests {cr_lost}: every "
+                f"journaled request must reach a terminal state exactly "
+                f"once across the restart")
+        if cr_diverged:
+            raise RuntimeError(
+                f"crash-restart bench: requests {cr_diverged} diverged "
+                f"from the fault-free run — journal recovery must be "
+                f"token-identical")
+        if not smoke and durable_ratio < CRASH_RESTART_GATE:
+            raise RuntimeError(
+                f"write-ahead journaling costs too much: {durable_ratio:.2f}"
+                f"x the non-durable throughput (need >= "
+                f"{CRASH_RESTART_GATE}x — the journal must group-commit "
+                f"per step, not stall per token)")
+    finally:
+        shutil.rmtree(jroot, ignore_errors=True)
+
     result = {"bench": "serving", "smoke": smoke, "batch_slots": B,
               "model": cfg.name, "backend": jax.default_backend(), "hw": hw,
               "alpha_dtype": alpha_dtype,
@@ -692,10 +801,22 @@ def run(print_fn=print, smoke: bool = False,
                   "replicas_dead": gw_k.stats.replicas_dead,
                   "lost_requests": len(fo_lost),
                   "streams_identical": not fo_diverged},
+              "crash_restart": {
+                  "n_requests": n_mixed,
+                  "killed_after_steps": kill_after,
+                  "durable_tok_s": tps_jd,
+                  "non_durable_tok_s": tps_nd,
+                  "throughput_ratio_vs_non_durable": durable_ratio,
+                  "recovered_requests": len(recovered),
+                  "time_to_first_recovered_token_s": ttfrt,
+                  "lost_requests": len(cr_lost),
+                  "streams_identical": not cr_diverged},
               "latency": lat}
     if json_path:
-        with open(json_path, "w") as f:
-            json.dump(result, f, indent=2)
+        # atomic: a crash mid-write must never leave a torn BENCH_*.json
+        # (the reanalyze/trajectory tooling trusts these files blindly)
+        from repro.checkpoint.ckpt import atomic_write_json
+        atomic_write_json(json_path, result, indent=2)
         print_fn(f"serving_bench,json,{json_path}")
     return result
 

@@ -5,8 +5,13 @@ Layout:  <dir>/step_<N>/
            <leaf-id>.npy      one file per leaf (host-gathered values)
 
 Writes go to ``step_<N>.tmp`` then os.rename -> crash-safe; an interrupted
-save can never be mistaken for a complete checkpoint. ``save_async`` hands the
-(host-copied) pytree to a writer thread so the train loop is not blocked.
+save can never be mistaken for a complete checkpoint. Every file is fsync'd
+before the rename and the parent directory entry after it, so a power loss
+(not just a process crash) can never surface a renamed-but-torn checkpoint.
+:func:`atomic_write_json` exports the same tmp+fsync+rename discipline for
+every other JSON artifact the repo persists (calibration tables, BENCH_*
+results). ``save_async`` hands the (host-copied) pytree to a writer thread
+so the train loop is not blocked.
 Restore maps leaves back by tree path and ``jax.device_put``s them with the
 *target* mesh's NamedShardings — a checkpoint written on a 256-chip mesh
 restores onto 512 or 8 chips unchanged (elastic resharding).
@@ -30,6 +35,33 @@ import jax
 import numpy as np
 
 
+def _fsync_path(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def fsync_dir(directory: str) -> None:
+    """fsync a directory entry (durability of renames/creates within it)."""
+    _fsync_path(directory or ".")
+
+
+def atomic_write_json(path: str, obj: Any, *, indent: Optional[int] = None
+                      ) -> None:
+    """Crash-safe JSON write: tmp file + flush + fsync + atomic rename +
+    parent-directory fsync. A crash at ANY point leaves either the old
+    complete file or the new complete file — never a torn one."""
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(obj, f, indent=indent)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    fsync_dir(os.path.dirname(os.path.abspath(path)))
+
+
 def _leaf_paths(tree: Any) -> list[tuple[str, Any]]:
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
     out = []
@@ -51,16 +83,22 @@ def save(tree: Any, directory: str, step: int) -> str:
     for i, (name, leaf) in enumerate(_leaf_paths(tree)):
         arr = np.asarray(leaf)
         fn = f"leaf_{i:05d}.npy"
-        np.save(os.path.join(tmp, fn), arr)
+        fp = os.path.join(tmp, fn)
+        np.save(fp, arr)
+        _fsync_path(fp)
         manifest["leaves"].append(
             {"path": name, "file": fn, "shape": list(arr.shape),
              "dtype": str(arr.dtype),
              "crc32": zlib.crc32(np.ascontiguousarray(arr).tobytes())})
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    fsync_dir(tmp)      # leaf/manifest dir entries durable before the rename
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
+    fsync_dir(directory)
     return final
 
 
@@ -97,12 +135,15 @@ def latest_step(directory: str) -> Optional[int]:
 
 def restore(directory: str, step: Optional[int] = None, *,
             template: Any = None, shardings: Any = None,
-            verify: bool = False) -> tuple[Any, int]:
+            verify: bool = True) -> tuple[Any, int]:
     """Load a checkpoint. With ``template`` (pytree of like-structured leaves)
     the arrays are mapped back into that structure by tree path; with
     ``shardings`` each leaf is device_put onto the current mesh (elastic).
-    ``verify=True`` re-checksums every leaf against the manifest's CRC32
-    and raises ``ValueError`` on a mismatch (on-disk bit rot)."""
+    ``verify=True`` (the DEFAULT — every loader path checks unless the
+    caller explicitly opts out, e.g. launch ``--no-verify-ckpt``)
+    re-checksums every leaf against the manifest's CRC32 and raises
+    ``ValueError`` naming the corrupt leaf on a mismatch (on-disk bit
+    rot). Manifests predating the CRC field verify trivially."""
     if step is None:
         step = latest_step(directory)
         if step is None:

@@ -45,6 +45,19 @@ at least one replica failover; with ``--scrub-every K --inject
 flip:step=S`` it requires the scrub to have detected and repaired the
 injected corruption. The CI fleet-chaos smoke rides exactly this
 contract.
+
+Durability (see ``docs/serving.md`` "Durability & crash recovery"):
+``--journal DIR`` arms the write-ahead request journal and crash-safe
+restart — the HTTP front door gains idempotency-key dedupe (exactly-once
+across retries AND crashes), SSE ``id:``/``Last-Event-ID`` stream resume,
+and journal replay on startup. ``--supervise`` (requires ``--journal``)
+runs the gateway as a child process under a restart loop and drives the
+crash-aware self-test client from THIS process: ``--inject die:step=N``
+hard-kills the child mid-step (``os._exit`` — no flush, no goodbye), the
+supervisor restarts it with the ``die`` injector stripped, and the client
+must see every request finish exactly once with zero lost and zero
+duplicated tokens, byte-identical to a fault-free run. The CI kill-9
+smoke rides exactly this contract.
 """
 from __future__ import annotations
 
@@ -52,14 +65,18 @@ import argparse
 import asyncio
 import dataclasses
 import json
+import socket
+import subprocess
+import sys
 import time
 
 import jax
 
 from repro.configs import get_config, get_smoke_config
 from repro.models import registry as R
-from repro.runtime.faults import FaultPlan
-from repro.serving import HealthPolicy, ModelRegistry, hw_names
+from repro.runtime.faults import DIE_EXIT_CODE, FaultPlan
+from repro.serving import (HealthPolicy, ModelRegistry, RequestJournal,
+                           hw_names)
 from repro.serving.gateway import GatewayHTTPServer, ServingGateway
 from repro.serving.model_registry import (dense_fp32_bytes,
                                           make_alpha_variant)
@@ -132,16 +149,21 @@ def make_model_factory(smoke: bool, seed: int):
 
 
 async def _http(host: str, port: int, method: str, path: str,
-                body=None, raw_body: bytes = None) -> tuple:
+                body=None, raw_body: bytes = None,
+                req_headers: dict = None) -> tuple:
     """One HTTP exchange; returns (status, parsed-JSON-or-SSE-events,
-    headers)."""
+    headers). SSE events carry their ``id:`` line (the absolute token
+    index, the ``Last-Event-ID`` resume cursor) as ``_sse_id``; truncated
+    trailing events (the server died mid-stream) are dropped, not raised —
+    the durable client retries and resumes past what it already has."""
     reader, writer = await asyncio.open_connection(host, port)
     if raw_body is not None:
         payload = raw_body
     else:
         payload = b"" if body is None else json.dumps(body).encode()
+    extra = "".join(f"{k}: {v}\r\n" for k, v in (req_headers or {}).items())
     writer.write((f"{method} {path} HTTP/1.1\r\nHost: {host}\r\n"
-                  f"Content-Length: {len(payload)}\r\n"
+                  f"Content-Length: {len(payload)}\r\n" + extra +
                   "Connection: close\r\n\r\n").encode() + payload)
     await writer.drain()
     status_line = await reader.readline()
@@ -161,10 +183,26 @@ async def _http(host: str, port: int, method: str, path: str,
         pass
     if "event-stream" in headers.get("content-type", ""):
         events = []
-        for line in raw.decode().splitlines():
-            if line.startswith("data: "):
+        sse_id = None
+        for line in raw.decode(errors="replace").splitlines():
+            if line.startswith("id: "):
+                try:
+                    sse_id = int(line[len("id: "):])
+                except ValueError:
+                    sse_id = None
+            elif line.startswith("data: "):
                 data = line[len("data: "):]
-                events.append(data if data == "[DONE]" else json.loads(data))
+                if data == "[DONE]":
+                    events.append(data)
+                    continue
+                try:
+                    ev = json.loads(data)
+                except ValueError:
+                    continue            # torn tail: server died mid-event
+                if isinstance(ev, dict):
+                    ev["_sse_id"] = sse_id
+                events.append(ev)
+                sse_id = None
         return status, events, headers
     body_txt = raw.split(b"\r\n\r\n")[-1] if b"\r\n\r\n" in raw else raw
     return status, json.loads(body_txt or b"{}"), headers
@@ -334,6 +372,246 @@ async def self_test(srv: GatewayHTTPServer, names: list, n: int,
           "live work finished)")
 
 
+def _free_port(host: str) -> int:
+    s = socket.socket()
+    s.bind((host, 0))
+    port = s.getsockname()[1]
+    s.close()
+    return port
+
+
+async def _retrying(fn, *, what: str, timeout_s: float = 240.0):
+    """Run one client exchange against a gateway that may be dead or mid-
+    restart underneath it: connection errors, torn responses, and 503s
+    retry until the supervisor brings the server back (or the deadline
+    passes — a real hang must still fail the smoke)."""
+    deadline = time.perf_counter() + timeout_s
+    while True:
+        try:
+            return await fn()
+        except (OSError, ValueError, KeyError, IndexError) as e:
+            if time.perf_counter() > deadline:
+                raise SystemExit(f"[supervise] FAILED: {what} never "
+                                 f"succeeded: {type(e).__name__}: {e}")
+            await asyncio.sleep(0.25)
+
+
+async def kill9_self_test(host: str, port: int, names: list, n: int,
+                          max_new: int) -> None:
+    """The crash-aware client of the kill-9 smoke, driven from the
+    SUPERVISOR process so it outlives the gateway's injected death: ``n``
+    durable completions with idempotency keys (one streaming, resumed via
+    ``Last-Event-ID``), retried across the crash, then the durability
+    contracts:
+
+    * zero lost — every request reaches eos/length exactly once;
+    * zero duplicates — no SSE token id is delivered twice, ids are
+      gapless from 0 across reconnects;
+    * exactly-once — re-POSTing each key replays the SAME tokens; reusing
+      a key with a different body is 409 ``idempotency_conflict``;
+    * byte identity — a fresh fault-free re-run of every prompt (new
+      keys, post-restart, die injector stripped) matches the streams that
+      crossed the crash.
+    """
+    def body_for(i: int) -> dict:
+        sampled = i % 3 == 2
+        return {"model": names[i % len(names)], "prompt": [2 + i, 3, 5 + i],
+                "max_tokens": max_new,
+                "temperature": 0.8 if sampled else 0.0,
+                "top_k": 20 if sampled else 0, "seed": i}
+
+    async def post(body, hdrs=None) -> tuple:
+        status, resp, _ = await _http(host, port, "POST", "/v1/completions",
+                                      body, req_headers=hdrs)
+        if status == 503:
+            raise OSError("gateway restarting/draining (503)")
+        return status, resp
+
+    async def durable(i: int) -> tuple:
+        body = dict(body_for(i), idempotency_key=f"kill9-{i}")
+
+        async def once():
+            status, resp = await post(body)
+            if status != 200:
+                raise SystemExit(f"[supervise] FAILED: request {i} -> "
+                                 f"{status} {resp}")
+            ch = resp["choices"][0]
+            return list(ch.get("token_ids", [])), ch.get("finish_reason")
+
+        return await _retrying(once, what=f"completion {i}")
+
+    async def durable_stream(i: int) -> tuple:
+        body = dict(body_for(i), idempotency_key=f"kill9-{i}", stream=True)
+        toks: dict = {}                   # absolute SSE token id -> token
+        state = {"last": -1, "fin": None, "dups": 0}
+
+        async def once():
+            status, events = await post(
+                body, hdrs={"Last-Event-ID": str(state["last"])})
+            if status != 200:
+                raise SystemExit(f"[supervise] FAILED: stream {i} -> "
+                                 f"{status} {events}")
+            for ev in events:
+                if ev == "[DONE]":
+                    continue
+                ch = ev["choices"][0]
+                if ch.get("token") is not None:
+                    sid = ev.get("_sse_id")
+                    if sid is None:
+                        raise SystemExit(f"[supervise] FAILED: stream {i} "
+                                         f"token without an id: {ev}")
+                    if sid in toks:
+                        state["dups"] += 1
+                    toks[sid] = ch["token"]
+                    state["last"] = max(state["last"], sid)
+                elif ch.get("finish_reason"):
+                    state["fin"] = ch["finish_reason"]
+            if state["fin"] is None:      # stream cut mid-flight: resume
+                raise OSError("stream severed before finish (server died)")
+
+        await _retrying(once, what=f"stream {i}")
+        ids = sorted(toks)
+        if state["dups"] or ids != list(range(len(ids))):
+            raise SystemExit(f"[supervise] FAILED: stream {i} token ids "
+                             f"duplicated or gapped: dups={state['dups']} "
+                             f"ids={ids}")
+        return [toks[k] for k in ids], state["fin"]
+
+    t0 = time.perf_counter()
+    results = await asyncio.gather(
+        *[durable_stream(i) if i == 1 else durable(i) for i in range(n)])
+    bad = [(i, r[1]) for i, r in enumerate(results)
+           if r[1] not in ("eos", "length")]
+    if bad:
+        raise SystemExit(f"[supervise] FAILED: bad finish reasons: {bad}")
+    print(f"[supervise] {n} durable completions survived the kill "
+          f"({time.perf_counter() - t0:.1f}s, zero lost, "
+          f"zero duplicated)")
+
+    # exactly-once: replaying every key must serve the durable record
+    # (identical tokens), never start a second execution
+    for i in range(n):
+        async def replay(b=dict(body_for(i), idempotency_key=f"kill9-{i}")):
+            status, resp = await post(b)
+            if status != 200:
+                raise SystemExit(f"[supervise] FAILED: idempotent replay "
+                                 f"-> {status} {resp}")
+            return resp
+        resp = await _retrying(replay, what=f"idempotent replay {i}")
+        got = list(resp["choices"][0].get("token_ids", []))
+        if got != list(results[i][0]):
+            raise SystemExit(f"[supervise] FAILED: idempotent replay {i} "
+                             f"diverged: {got} != {results[i][0]}")
+
+    # reusing a key with a DIFFERENT body must 409, never execute
+    async def conflict():
+        return await post(dict(body_for(0), prompt=[9, 9, 9],
+                               idempotency_key="kill9-0"))
+    status, resp = await _retrying(conflict, what="conflict check")
+    if status != 409 or resp.get("error", {}).get("code") != \
+            "idempotency_conflict":
+        raise SystemExit(f"[supervise] FAILED: key reuse with different "
+                         f"body -> {status} {resp} (want 409)")
+
+    # byte identity: fresh keys re-run every prompt fault-free (the die
+    # injector is stripped post-restart) — the reference the recovered
+    # streams must match exactly
+    for i in range(n):
+        async def fresh(b=dict(body_for(i), idempotency_key=f"ref-{i}")):
+            status, resp = await post(b)
+            if status != 200:
+                raise SystemExit(f"[supervise] FAILED: reference {i} -> "
+                                 f"{status} {resp}")
+            return resp
+        resp = await _retrying(fresh, what=f"reference {i}")
+        ref = list(resp["choices"][0].get("token_ids", []))
+        if ref != list(results[i][0]):
+            raise SystemExit(f"[supervise] FAILED: recovered stream {i} is "
+                             f"not byte-identical to the fault-free "
+                             f"reference: {results[i][0]} vs {ref}")
+    print("[supervise] exactly-once replay + 409 conflict + byte-identity "
+          "vs fault-free reference OK")
+
+
+def _supervised_main(args, raw_argv: list) -> None:
+    """``--supervise``: run the gateway as a child process under a restart
+    loop and drive the crash-aware client from THIS process (the client
+    must outlive the gateway's injected ``os._exit``)."""
+    from repro.launch.supervise import MAX_RESTARTS, die_armed, strip_die
+    if not args.journal:
+        raise SystemExit("--supervise requires --journal: a crash without "
+                         "a journal loses every live request")
+    names = [alias for _, alias, _ in parse_models(args.models)]
+    port = args.port or _free_port(args.host)
+    child: list = []
+    skip = False
+    for a in raw_argv:                  # child serves forever on a fixed
+        if skip:                        # port; the client runs up here
+            skip = False
+            continue
+        if a == "--supervise":
+            continue
+        if a in ("--self-test", "--port"):
+            skip = True
+            continue
+        if a.startswith("--self-test=") or a.startswith("--port="):
+            continue
+        child.append(a)
+    child += ["--port", str(port)]
+    n = args.self_test or 6
+    armed = die_armed(child)
+    state = {"argv": child, "proc": None, "restarts": 0, "done": False}
+
+    def spawn():
+        state["proc"] = subprocess.Popen(
+            [sys.executable, "-m", "repro.launch.gateway"] + state["argv"])
+
+    async def monitor():
+        while not state["done"]:
+            rc = state["proc"].poll()
+            if rc is None:
+                await asyncio.sleep(0.05)
+                continue
+            if rc == DIE_EXIT_CODE and state["restarts"] < MAX_RESTARTS:
+                state["restarts"] += 1
+                state["argv"] = strip_die(state["argv"])
+                print(f"[supervise] gateway hard-killed (injected die, "
+                      f"exit {rc}); restart #{state['restarts']} with die "
+                      f"injector stripped")
+                spawn()
+                continue
+            raise SystemExit(f"[supervise] FAILED: gateway exited {rc} "
+                             f"mid-test")
+
+    async def drive() -> None:
+        spawn()
+        mon = asyncio.ensure_future(monitor())
+        client = asyncio.ensure_future(
+            kill9_self_test(args.host, port, names, n, args.max_new))
+        try:
+            done, _ = await asyncio.wait(
+                {mon, client}, return_when=asyncio.FIRST_COMPLETED)
+            for t in done:
+                if t.exception() is not None:
+                    raise t.exception()
+        finally:
+            state["done"] = True
+            for t in (mon, client):
+                t.cancel()
+            await asyncio.gather(mon, client, return_exceptions=True)
+            if state["proc"] is not None and state["proc"].poll() is None:
+                state["proc"].terminate()
+                state["proc"].wait()
+
+    asyncio.run(drive())
+    if armed and state["restarts"] < 1:
+        raise SystemExit("[supervise] FAILED: a die fault was armed but "
+                         "the gateway never died — the kill-9 smoke "
+                         "proved nothing")
+    print(f"[supervise] kill-9 smoke OK: {state['restarts']} restart(s), "
+          f"{n} requests exactly once across the crash")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--models", required=True,
@@ -379,7 +657,20 @@ def main(argv=None) -> None:
     ap.add_argument("--self-test", type=int, default=0, metavar="N",
                     help="serve, drive N concurrent HTTP requests, verify "
                          "the exit contract, and exit (CI smoke mode)")
+    ap.add_argument("--journal", default="",
+                    help="write-ahead request journal directory: arms "
+                         "crash-safe restart, idempotency-key dedupe, and "
+                         "SSE Last-Event-ID resume")
+    ap.add_argument("--supervise", action="store_true",
+                    help="restart-supervisor mode (requires --journal): "
+                         "the gateway runs as a child, an injected die "
+                         "fault kills it for real, and the crash-aware "
+                         "self-test client must see exactly-once results")
     args = ap.parse_args(argv)
+
+    if args.supervise:
+        _supervised_main(args, list(sys.argv[1:] if argv is None else argv))
+        return
 
     models = parse_models(args.models)
     names = [alias for _, alias, _ in models]
@@ -405,13 +696,14 @@ def main(argv=None) -> None:
         print(f"[gateway] chaos: {len(plan.faults)} injector(s) on "
               f"{target!r} (engine scope: {sorted(injected) or 'registry'})")
 
+    journal = RequestJournal(args.journal) if args.journal else None
     gw = ServingGateway(
         reg, batch_slots=args.slots, buffer_len=args.buffer,
         chunk_size=args.chunk_size, hw=args.hw, faults=faults,
         replicas=args.replicas,
         health=HealthPolicy(degraded_after=args.degraded_after,
                             dead_after=args.dead_after),
-        scrub_every=args.scrub_every)
+        scrub_every=args.scrub_every, journal=journal)
     largest = max(dense_fp32_bytes(e.cfg) for e in reg.entries.values())
     print(f"[gateway] {len(names)} models in "
           f"{len(reg.groups())} engine group(s) x {args.replicas} "
@@ -432,6 +724,13 @@ def main(argv=None) -> None:
             breaker_cooldown_s=args.breaker_cooldown,
             model_factory=make_model_factory(args.smoke, args.seed))
         await srv.start()
+        if journal is not None:
+            nrec = await srv.recover()
+            ndone = sum(1 for e in journal.entries.values() if e.done)
+            if nrec or ndone:
+                print(f"[gateway] journal: {nrec} live request(s) "
+                      f"recovered mid-stream, {ndone} terminal entries "
+                      f"replayable (exactly-once history)")
         print(f"[gateway] listening on http://{srv.host}:{srv.port} "
               f"(completions: POST /v1/completions, admin: /admin/*)")
         if args.self_test:

@@ -25,11 +25,22 @@ exercise preemption-and-recompute, ``--max-waiting``/``--deadline`` bound
 the queue and request lifetimes. The launcher exits non-zero if any request
 that was NOT deliberately poisoned fails to complete — the CI chaos smoke
 rides exactly this contract.
+
+Durability (see ``docs/serving.md`` "Durability & crash recovery"):
+``--journal DIR`` arms the write-ahead request journal — admissions, token
+batches, and finishes are fsync'd to DIR, and a restarted launcher pointed
+at the same DIR recovers every non-terminal request token-identically
+instead of re-submitting it. ``--supervise`` runs the launcher as a child
+under a restart loop so ``--inject die:step=N`` (a hard ``os._exit``
+mid-run, nothing catchable) exercises a real process death: the supervisor
+restarts the child with the ``die`` injector stripped and the exit
+contract must still hold — every request terminal exactly once.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import sys
 import time
 
 import jax
@@ -38,7 +49,8 @@ import numpy as np
 from repro.configs import get_config, get_smoke_config
 from repro.models import registry as R
 from repro.runtime.faults import FaultPlan
-from repro.serving import LLMEngine, Request, SamplingParams, hw_names
+from repro.serving import (LLMEngine, Request, RequestJournal, SamplingParams,
+                           hw_names)
 
 
 def main(argv=None) -> None:
@@ -99,7 +111,27 @@ def main(argv=None) -> None:
                          "the calibrated re-plan")
     ap.add_argument("--calibration-out", default="",
                     help="write the calibration table JSON here")
+    ap.add_argument("--journal", default="",
+                    help="write-ahead request journal directory: every "
+                         "admission/token/finish is fsync'd there, and on "
+                         "startup non-terminal journaled requests are "
+                         "recovered token-identically (crash durability)")
+    ap.add_argument("--supervise", action="store_true",
+                    help="run this launcher as a supervised child process: "
+                         "an injected die fault (--inject die:step=N) "
+                         "hard-kills it and the supervisor restarts it to "
+                         "recover via --journal (the CI kill-9 smoke)")
     args = ap.parse_args(argv)
+
+    if args.supervise:
+        from repro.launch.supervise import supervise
+        raw = list(sys.argv[1:] if argv is None else argv)
+        if not args.journal:
+            raise SystemExit("--supervise requires --journal: a crash "
+                             "without a journal loses every live request")
+        supervise("repro.launch.serve",
+                  [a for a in raw if a != "--supervise"])
+        return
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if args.alpha_dtype:
@@ -129,6 +161,7 @@ def main(argv=None) -> None:
         print(f"[serve] chaos: {len(plan.faults)} injector(s) armed "
               f"(seed={args.seed}): "
               + ", ".join(f.kind for f in plan.faults))
+    journal = RequestJournal(args.journal) if args.journal else None
     eng = LLMEngine(params, cfg, batch_slots=args.slots,
                     buffer_len=args.buffer, hw=args.hw,
                     bucketed_prefill=not args.no_bucketing,
@@ -138,12 +171,21 @@ def main(argv=None) -> None:
                     calibrate=args.calibrate,
                     max_waiting=args.max_waiting,
                     step_timeout_s=args.step_timeout,
-                    faults=plan if plan else None)
+                    faults=plan if plan else None,
+                    journal=journal)
+    if journal is not None and journal.entries:
+        recovered = eng.recover_from_journal()
+        ndone = sum(1 for e in journal.entries.values() if e.done)
+        print(f"[serve] journal: {len(recovered)} live request(s) recovered "
+              f"mid-stream, {ndone} already terminal (replayed, not re-run)")
     rng = np.random.default_rng(args.seed)
     for rid in range(args.requests):
         plen = int(rng.integers(4, args.buffer // 4))
+        prompt = rng.integers(0, cfg.vocab, plen, dtype=np.int32)
+        if journal is not None and rid in journal.entries:
+            continue    # journaled before the crash: recovered or terminal
         admitted, bp = eng.add_request(Request(
-            rid, rng.integers(0, cfg.vocab, plen, dtype=np.int32),
+            rid, prompt,
             max_new_tokens=args.max_new,
             deadline_s=args.deadline,
             sampling=SamplingParams(temperature=args.temperature,
@@ -210,6 +252,12 @@ def main(argv=None) -> None:
     # (nan injection -> error, --deadline -> timeout, bounded queue /
     # preempt admission -> shed/preempted).
     outs = {o.rid: o for o in eng.outputs()}
+    if journal is not None:
+        # requests that went terminal BEFORE the crash live only in the
+        # journal; they count as finished (exactly once — not re-run)
+        for rid, e in journal.entries.items():
+            if e.done and rid not in outs:
+                outs[rid] = e
     allowed = {"eos", "length", "rejected"}
     if any(f.kind == "nan" for f in plan.faults):
         allowed.add("error")

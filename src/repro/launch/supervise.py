@@ -1,0 +1,103 @@
+"""Process-level restart supervisor for the serving launchers.
+
+``--supervise`` on ``repro.launch.serve`` / ``repro.launch.gateway`` runs
+the launcher as a CHILD process under this loop. An injected ``die`` fault
+(``--inject die:step=5``) hard-kills the child mid-step with
+:data:`~repro.runtime.faults.DIE_EXIT_CODE`; the supervisor restarts it —
+with the ``die`` injector STRIPPED from the child argv, because the fault
+step counter resets across the process boundary and a pinned kill would
+otherwise re-fire forever — and the restarted child replays its
+write-ahead journal (``--journal``) to finish every request exactly once.
+
+Any other non-zero exit is a real failure and propagates; if a ``die``
+fault was armed but the child never died, the supervisor fails loudly (the
+chaos smoke must actually have crossed the process boundary to prove
+anything).
+"""
+from __future__ import annotations
+
+import subprocess
+import sys
+from typing import Callable
+
+from repro.runtime.faults import DIE_EXIT_CODE
+
+MAX_RESTARTS = 5
+
+
+def _spec_kind(spec: str) -> str:
+    return spec.split(":", 1)[0].strip()
+
+
+def die_armed(argv: list) -> bool:
+    """True if the argv arms at least one ``die`` injector."""
+    return any(_spec_kind(s) == "die" for s in inject_specs(argv))
+
+
+def inject_specs(argv: list) -> list:
+    """The fault specs an ``--inject``-style argv arms."""
+    out, grab = [], False
+    for a in argv:
+        if grab:
+            out.append(a)
+            grab = False
+        elif a == "--inject":
+            grab = True
+        elif a.startswith("--inject="):
+            out.append(a[len("--inject="):])
+    return out
+
+
+def strip_die(argv: list) -> list:
+    """Argv with every ``--inject die:...`` pair/flag removed (restart
+    semantics: the injected kill already happened; the step counter of the
+    restarted process starts over, so keeping the spec would kill it again
+    at the same step, forever)."""
+    out, grab = [], False
+    for a in argv:
+        if grab:
+            grab = False
+            if _spec_kind(a) == "die":
+                out.pop()               # drop the preceding --inject
+                continue
+            out.append(a)
+        elif a == "--inject":
+            out.append(a)
+            grab = True
+        elif (a.startswith("--inject=")
+              and _spec_kind(a[len("--inject="):]) == "die"):
+            continue
+        else:
+            out.append(a)
+    return out
+
+
+def supervise(module: str, child_argv: list, *,
+              max_restarts: int = MAX_RESTARTS,
+              log: Callable[[str], None] = print) -> int:
+    """Run ``python -m module child_argv`` under the restart loop; returns
+    the number of restarts. Raises SystemExit on real (non-``die``) child
+    failure, on restart exhaustion, and on a ``die`` injector that never
+    fired."""
+    armed = die_armed(child_argv)
+    restarts = 0
+    argv = list(child_argv)
+    while True:
+        rc = subprocess.call([sys.executable, "-m", module] + argv)
+        if rc == DIE_EXIT_CODE:
+            if restarts >= max_restarts:
+                raise SystemExit(f"[supervise] FAILED: {restarts} restarts "
+                                 f"exhausted and the child still dies")
+            restarts += 1
+            argv = strip_die(argv)
+            log(f"[supervise] child hard-killed (injected die, exit {rc}); "
+                f"restart #{restarts} with die injector stripped")
+            continue
+        break
+    if armed and restarts < 1:
+        raise SystemExit("[supervise] FAILED: a die fault was armed but the "
+                         "child never died — the chaos smoke proved nothing")
+    if rc != 0:
+        raise SystemExit(rc)
+    log(f"[supervise] child exited 0 after {restarts} restart(s)")
+    return restarts

@@ -40,6 +40,9 @@ def main(argv=None) -> None:
     ap.add_argument("--data-par", type=int, default=1)
     ap.add_argument("--model-par", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-verify-ckpt", action="store_true",
+                    help="skip the per-leaf CRC check on checkpoint "
+                         "restore (verification is the default)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -78,7 +81,8 @@ def main(argv=None) -> None:
         return jax.device_put(b, batch_sh)
 
     scfg = supervisor.SupervisorConfig(ckpt_dir=args.ckpt,
-                                       save_every=args.save_every)
+                                       save_every=args.save_every,
+                                       verify_ckpt=not args.no_verify_ckpt)
     state, report = supervisor.run(fn, state, batch_at, args.steps, scfg,
                                    state_shardings=state_sh)
     print(f"[train] done: steps={report.steps_run} failures={report.failures} "

@@ -118,8 +118,10 @@ class CalibrationTable:
         return t
 
     def save(self, path: str) -> None:
-        with open(path, "w") as f:
-            json.dump(self.to_json(), f, indent=2)
+        # Crash-safe: a table feeding later planning sessions must never be
+        # half-written (tmp + fsync + rename, see checkpoint.ckpt).
+        from repro.checkpoint.ckpt import atomic_write_json
+        atomic_write_json(path, self.to_json(), indent=2)
 
     @classmethod
     def load(cls, path: str) -> "CalibrationTable":

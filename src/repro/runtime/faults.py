@@ -24,7 +24,16 @@ survive:
               the flip and repair the bank bitwise). ``flip`` is applied by
               the serving *gateway* at its own step counter — engine-level
               consumers (``poison_row``/``raise_or_delay``) and the
-              training adapter ignore it.
+              training adapter ignore it;
+* ``die``   — hard-kill the PROCESS mid-step via ``os._exit`` (exit code
+              :data:`DIE_EXIT_CODE`): a ``kill -9`` / OOM-killer / machine
+              loss. Nothing in-process can catch it — no watchdog, no
+              finally, no atexit — so only durable state (the write-ahead
+              request journal, ``serving.journal``) survives. The restart
+              supervisors in ``launch.serve``/``launch.gateway`` respawn
+              the process and assert recovery. Ignored by the training
+              adapter (the training supervisor restores from checkpoints;
+              its crash path is ``fail``).
 
 Faults fire either at one deterministic ``step`` (optionally recurring
 ``every`` steps after it) or probabilistically with per-step probability
@@ -47,18 +56,25 @@ CLI syntax (``--inject`` on ``repro.launch.serve``)::
     delay:p=0.1,s=0.002   2ms stall on 10% of steps
     flip:step=3           flip bit 0 of alpha-bank leaf 0 at gateway step 3
     flip:step=3,leaf=2,bit=17   ... leaf 2, bit 17
+    die:step=5            os._exit the whole process at step 5
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import Iterable, Optional
 
 import numpy as np
 
-__all__ = ["Fault", "FaultPlan", "InjectedFault", "parse_fault"]
+__all__ = ["Fault", "FaultPlan", "InjectedFault", "parse_fault",
+           "DIE_EXIT_CODE"]
 
-_KINDS = ("nan", "fail", "delay", "flip")
+_KINDS = ("nan", "fail", "delay", "flip", "die")
+
+#: Exit code of a ``die`` fault — distinctive so restart supervisors can
+#: tell an injected kill (restart + recover) from an organic failure.
+DIE_EXIT_CODE = 86
 
 
 class InjectedFault(RuntimeError):
@@ -154,13 +170,18 @@ class FaultPlan:
         return poison
 
     def raise_or_delay(self, step: int) -> None:
-        """Apply ``fail``/``delay`` faults for ``step`` (nan is handled by
-        ``poison_row`` at the logits). ``delay`` sleeps first so a step can
-        be both slow and fatal."""
+        """Apply ``fail``/``delay``/``die`` faults for ``step`` (nan is
+        handled by ``poison_row`` at the logits). ``delay`` sleeps first so
+        a step can be both slow and fatal; ``die`` hard-kills the process
+        (``os._exit`` — unflushable, uncatchable) so only fsync'd journal
+        state survives into the restarted process."""
         fired = self.at(step)
         for f in fired:
             if f.kind == "delay":
                 time.sleep(f.delay_s)
+        for f in fired:
+            if f.kind == "die":
+                os._exit(DIE_EXIT_CODE)
         for f in fired:
             if f.kind == "fail":
                 raise InjectedFault(f"injected step failure at step {step}")
@@ -179,12 +200,13 @@ class FaultPlan:
         restore loop. Each (fault, step) therefore fires at most once per
         injector instance: the node dies once, the replay succeeds. Still
         deterministic run-to-run for a fixed plan. ``flip`` faults are
-        gateway-only and ignored here too."""
+        gateway-only and ``die`` faults serving-only; both ignored here."""
         fired: set = set()
 
         def injector(step: int) -> None:
             live = [(i, f) for i, f in enumerate(self.faults)
-                    if f.kind not in ("nan", "flip") and (i, step) not in fired
+                    if f.kind not in ("nan", "flip", "die")
+                    and (i, step) not in fired
                     and f.fires_at(step, self.seed, i)]
             for i, f in live:
                 fired.add((i, step))

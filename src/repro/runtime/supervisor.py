@@ -35,6 +35,10 @@ class SupervisorConfig:
     max_failures: int = 8
     straggler_factor: float = 3.0
     log_every: int = 10
+    # per-leaf CRC verification on every restore (catches torn/corrupt
+    # checkpoints before they poison a replayed run); launchers expose
+    # --no-verify-ckpt to opt out
+    verify_ckpt: bool = True
 
 
 @dataclasses.dataclass
@@ -75,7 +79,8 @@ def run(train_step: Callable, state: Any, batch_at: Callable[[int], Any],
     step = 0
     if start is not None:
         state, step = ckpt.restore(cfg.ckpt_dir, template=state_template,
-                                   shardings=state_shardings)
+                                   shardings=state_shardings,
+                                   verify=cfg.verify_ckpt)
         report.restores += 1
         log(f"[supervisor] resumed from step {step}")
 
@@ -123,7 +128,8 @@ def run(train_step: Callable, state: Any, batch_at: Callable[[int], Any],
                     "state in memory")
                 continue
             state, step = ckpt.restore(cfg.ckpt_dir, template=state_template,
-                                       shardings=state_shardings)
+                                       shardings=state_shardings,
+                                       verify=cfg.verify_ckpt)
             report.restores += 1
             log(f"[supervisor] restored step {step}, replaying")
 

@@ -19,6 +19,8 @@ from repro.serving.gateway import (BudgetExceeded, GatewayRejection,
                                    ServingGateway)
 from repro.serving.health import (DEAD, DEGRADED, HEALTHY, CircuitBreaker,
                                   HealthPolicy, ReplicaHealth)
+from repro.serving.journal import (JournalEntry, RequestJournal,
+                                   body_fingerprint, key_after)
 from repro.serving.kvcache import PagedKVCache, pages_for
 from repro.serving.model_registry import (ModelEntry, ModelRegistry,
                                           VariantSet, alpha_bank_bytes,
@@ -49,4 +51,5 @@ __all__ = [
     "alpha_bank_bytes", "param_bytes", "dense_fp32_bytes",
     "make_alpha_variant",
     "PagedKVCache", "pages_for",
+    "RequestJournal", "JournalEntry", "key_after", "body_fingerprint",
 ]

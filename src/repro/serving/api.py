@@ -106,6 +106,12 @@ class Request:
     stream: Optional[Callable[[int, int], None]] = None
     priority: int = 0                   # higher = more urgent
     deadline_s: Optional[float] = None  # seconds after t_submit
+    # exactly-once client semantics: a client-chosen retry-dedup key. The
+    # journal persists it with the admission record and the gateway maps it
+    # to the request's durable result, so retrying the same key — across
+    # any number of process crashes — attaches to or replays the ONE
+    # execution instead of starting another (see serving.journal).
+    idempotency_key: Optional[str] = None
     # called exactly once with the final RequestOutput (any finish reason)
     on_finish: Optional[Callable[["RequestOutput"], None]] = None
     out_tokens: list = dataclasses.field(default_factory=list)

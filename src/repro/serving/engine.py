@@ -158,7 +158,8 @@ class LLMEngine:
                  step_timeout_s: Optional[float] = None,
                  faults: Optional[FaultPlan] = None,
                  variants: int = 0, model_index=None,
-                 model_label: Optional[str] = None):
+                 model_label: Optional[str] = None,
+                 journal=None):
         self._base_cfg = cfg
         self.hw = hw
         self.hw_label = resolve_hw(hw).name
@@ -243,6 +244,11 @@ class LLMEngine:
         self.calibrate = calibrate
         from repro.runtime.calibrate import CalibrationTable
         self.calibration = CalibrationTable()
+        # Durability (serving.journal): admissions/tokens/finishes append to
+        # the write-ahead log; flush() group-commits once per step. None =
+        # non-durable (the default). A broken journal degrades silently to
+        # None-like behaviour — it never blocks the step loop.
+        self.journal = journal
 
     # The fused decode+sample callable; kept assignable for instrumentation.
     @property
@@ -273,6 +279,12 @@ class LLMEngine:
         it would overflow the cache buffer under the scheduler's admission
         policy, or was load-shed from a full bounded queue)."""
         req.t_submit = time.perf_counter()
+        if self.journal is not None:
+            # WAL rule: the admission record precedes any effect of the
+            # request (idempotent by rid — failover/recovery re-admission
+            # never double-journals). A rejected request still gets its
+            # terminal `fin` record via _finalize below.
+            self.journal.admit_request(req)
         admitted = self.scheduler.add(req)
         if not admitted:
             self._finalize(req)
@@ -365,6 +377,11 @@ class LLMEngine:
             st.errors += 1
         elif r == FINISH_CANCELLED:
             st.cancelled += 1
+        if self.journal is not None:
+            # The terminal record is fsync'd BEFORE on_finish surfaces the
+            # result: anything a client may have observed is durable, so a
+            # crash can never re-execute an already-answered request.
+            self.journal.finish(req.rid, r)
         if req.on_finish is not None and not req._notified:
             req._notified = True
             req.on_finish(out)
@@ -434,6 +451,8 @@ class LLMEngine:
         stalled = (self.step_timeout_s is not None
                    and time.perf_counter() - t0 > self.step_timeout_s)
         self._commit(so, out)
+        if self.journal is not None:
+            self.journal.flush()    # group-commit this step's records
         if stalled:
             self.stats.stalls += 1
             self._recover()
@@ -560,6 +579,37 @@ class LLMEngine:
             self.scheduler.add(req)
         self._drain_shed()
 
+    def recover_from_journal(self, *, wire=None) -> list:
+        """Crash recovery: re-admit every non-terminal journaled request
+        through the preempt-and-recompute path and return them (adoption
+        order == original admission order, so recovered streams are
+        token-identical to the fault-free run — greedy AND sampled, the
+        resume key is re-derived from the seed).
+
+        A request whose deadline expired while the process was down is
+        finished as ``FINISH_TIMEOUT`` immediately — never silently
+        resumed — with its exactly-once ``on_finish`` firing here.
+
+        ``wire(req)``, when given, attaches callbacks (``stream`` /
+        ``on_finish``) to each rebuilt request before it is adopted or
+        finalized. The journal is compacted afterwards, so the replayed
+        segments collapse to one snapshot record per entry."""
+        if self.journal is None:
+            return []
+        recovered = []
+        for entry in self.journal.live_entries():
+            req = entry.to_request()
+            if wire is not None:
+                wire(req)
+            if req.expired:
+                req.finish_reason = FINISH_TIMEOUT
+                self._finalize(req)
+                continue
+            self.adopt(req)
+            recovered.append(req)
+        self.journal.compact()
+        return recovered
+
     def drain_requests(self) -> list:
         """Strip every live request off this engine — running slots are
         evicted recompute-style (token-identical resume elsewhere), then the
@@ -631,9 +681,15 @@ class LLMEngine:
         for i in out.bad_slots:
             self._finish(i, FINISH_ERROR)
         for i, tok in out.first_tokens.items():
+            # journal the token before any finish it may trigger, so the
+            # `tok` record always precedes its request's `fin` record
+            if self.journal is not None:
+                self.journal.tokens(self.slots[i].rid, (tok,))
             self._commit_first_token(i, self.slots[i], tok)
         for i, tok in out.decode_tokens.items():
             req = self.slots[i]
+            if self.journal is not None:
+                self.journal.tokens(req.rid, (tok,))
             req.emit(tok)
             self.stats.tokens_out += 1
             self.slot_remaining[i] -= 1

@@ -69,7 +69,9 @@ from typing import Any, Callable, Optional
 
 import numpy as np
 
-from repro.serving.api import FINISH_EVICTED, Request, SamplingParams
+from repro.serving.api import (FINISH_EVICTED, FINISH_TIMEOUT, Request,
+                               RequestOutput, SamplingParams)
+from repro.serving.journal import body_fingerprint
 from repro.serving.engine import LLMEngine
 from repro.serving.health import (DEAD, HEALTHY, CircuitBreaker, HealthPolicy,
                                   ReplicaHealth)
@@ -160,17 +162,22 @@ class ServingGateway:
                  eos_id: Optional[int] = None, hw="cpu",
                  faults: Optional[dict] = None, replicas: int = 1,
                  health: Optional[HealthPolicy] = None,
-                 scrub_every: int = 0, **engine_kw):
+                 scrub_every: int = 0, journal=None, **engine_kw):
         if chunk_size is None:
             raise ValueError("the gateway serves prompts via chunked steps; "
                              "chunk_size must be set")
         if replicas < 1:
             raise ValueError(f"replicas must be >= 1, got {replicas}")
         self.registry = registry
+        # ONE journal backs the whole pool: replica failover and group
+        # rebuilds move requests between engines without re-journaling
+        # (admissions are idempotent by rid), so durable state is
+        # process-scoped, exactly what crash recovery replays.
+        self.journal = journal
         self._engine_kw = dict(batch_slots=batch_slots,
                                buffer_len=buffer_len,
                                chunk_size=chunk_size, eos_id=eos_id,
-                               hw=hw, **engine_kw)
+                               hw=hw, journal=journal, **engine_kw)
         self._faults = dict(faults or {})
         for n in self._faults:
             if self.registry.get(n) is None:
@@ -319,6 +326,52 @@ class ServingGateway:
             self.stats.cancelled += 1
             return True
         return False
+
+    # -- crash recovery ------------------------------------------------------
+
+    def recover_from_journal(self, *, wire=None) -> list:
+        """Replay the write-ahead journal into the live pool: every
+        non-terminal journaled request is rebuilt mid-stream (prompt
+        rewrite + re-derived PRNG key — the preempt-and-recompute shape)
+        and re-routed through :meth:`add_request`, so recovered streams
+        resume token-identically past the journaled high-water mark.
+        Requests whose deadline expired while the process was down finish
+        as ``FINISH_TIMEOUT`` here — never silently resumed. ``wire(req)``
+        attaches client callbacks before routing. Returns the re-admitted
+        requests; the journal compacts afterwards."""
+        j = self.journal
+        if j is None:
+            return []
+        recovered = []
+        for entry in j.live_entries():
+            req = entry.to_request()
+            if wire is not None:
+                wire(req)
+            if req.expired:
+                req.finish_reason = FINISH_TIMEOUT
+                j.finish(req.rid, FINISH_TIMEOUT)
+                out = req.output()
+                self._finished.append(out)
+                if req.on_finish is not None and not req._notified:
+                    req._notified = True
+                    req.on_finish(out)
+                continue
+            try:
+                self.add_request(req)
+                recovered.append(req)
+            except KeyError:
+                # the journaled model is no longer registered (config
+                # change across the restart): surface eviction-style
+                # backpressure rather than stranding the client
+                req.finish_reason = FINISH_EVICTED
+                j.finish(req.rid, FINISH_EVICTED)
+                out = req.output()
+                self._finished.append(out)
+                if req.on_finish is not None and not req._notified:
+                    req._notified = True
+                    req.on_finish(out)
+        j.compact()
+        return recovered
 
     # -- the step loop ------------------------------------------------------
 
@@ -643,7 +696,24 @@ class GatewayHTTPServer:
 
     ``model_factory(spec)`` (from the launcher) maps a ``POST
     /admin/models`` JSON body to ``(name, cfg, loader, tags)``; without
-    one the route answers 501."""
+    one the route answers 501.
+
+    Durability & exactly-once (when the gateway carries a
+    ``serving.journal.RequestJournal``):
+
+    * a client-supplied **idempotency key** (``Idempotency-Key`` header or
+      ``idempotency_key`` body field) dedupes retries: a key already
+      executing attaches the new connection to the ONE in-flight request;
+      a key already finished replays the durable result; a key reused
+      with a *different* body gets 409 ``idempotency_conflict``. The map
+      survives crashes — it is rebuilt from the journal on startup.
+    * SSE chunks carry ``id: <token index>`` fields; a reconnecting client
+      sends ``Last-Event-ID`` and receives only the tokens past it (the
+      journaled prefix replays instantly, then the stream continues live).
+    * :meth:`recover` replays the journal into the pool on startup:
+      non-terminal requests resume token-identically mid-stream, expired
+      ones finish FINISH_TIMEOUT, and new rids start past the journaled
+      high-water mark so rid-keyed state never collides."""
 
     def __init__(self, gateway: ServingGateway, host: str = "127.0.0.1",
                  port: int = 8080, *, breaker_after: int = 0,
@@ -668,12 +738,19 @@ class GatewayHTTPServer:
         self._server: Optional[asyncio.AbstractServer] = None
         self.loop: Optional[asyncio.AbstractEventLoop] = None
         self._rids = itertools.count()
+        # Exactly-once client state (loop-thread only): per-rid token
+        # records fan tokens out to every attached connection, and the
+        # idempotency map points retried keys at the one execution. Both
+        # are rebuilt from the journal after a crash.
+        self._records: dict = {}        # rid -> {tokens, out, queues}
+        self._ikeys: dict = {}          # key -> {fp, rid, state, result}
 
     # -- lifecycle ----------------------------------------------------------
 
     async def start(self) -> None:
         self.loop = asyncio.get_running_loop()
         self.drained = asyncio.Event()
+        self._restore_idempotency()
         self._server = await asyncio.start_server(self._handle, self.host,
                                                   self.port)
         self.port = self._server.sockets[0].getsockname()[1]  # resolve :0
@@ -706,6 +783,92 @@ class GatewayHTTPServer:
                 return
             if not work:
                 self._stop.wait(0.002)
+
+    # -- durability: journal restore + token fan-out -------------------------
+
+    def _restore_idempotency(self) -> None:
+        """Rebuild the idempotency map from the journal (crash restart):
+        finished entries replay their durable result to retrying clients;
+        live entries attach retries to the recovered execution. New rids
+        start past the journaled high-water mark."""
+        j = getattr(self.gateway, "journal", None)
+        if j is None:
+            return
+        for e in j.entries.values():
+            if not e.done:
+                # seed the journaled prefix BEFORE the socket binds, so a
+                # retry that attaches in the start()->recover() window
+                # still replays a continuous stream
+                self._record(e.rid)["tokens"] = list(e.tokens)
+            if not e.ikey:
+                continue
+            res = None
+            if e.done:
+                res = {"tokens": list(e.tokens),
+                       "finish_reason": e.finish_reason,
+                       "prompt_len": len(e.prompt)}
+            self._ikeys[e.ikey] = {"fp": e.fp, "rid": e.rid,
+                                   "state": "done" if e.done else "live",
+                                   "result": res}
+        self._rids = itertools.count(j.max_rid + 1)
+
+    async def recover(self) -> int:
+        """Crash recovery: replay the journal into the pool. Each rebuilt
+        request is wired into the server's token records before routing,
+        so SSE reconnects (``Last-Event-ID``) and idempotent retries see
+        one continuous stream spanning the crash. Runs on the event loop
+        (startup; the pump contends only on ``self._lock``). Returns the
+        number of re-admitted requests."""
+        loop = self.loop
+
+        def wire(req):
+            rid = req.rid
+            rec = self._record(rid)
+            rec["tokens"] = list(req.out_tokens)    # journaled prefix
+            model, ikey = req.model, req.idempotency_key
+
+            def on_tok(_r, tok, _rid=rid):
+                loop.call_soon_threadsafe(self._push_tok, _rid, int(tok))
+
+            def on_fin(out, _rid=rid, _m=model, _k=ikey):
+                loop.call_soon_threadsafe(self._push_fin, _rid, _m, _k, out)
+
+            req.stream = on_tok
+            req.on_finish = on_fin
+
+        with self._lock:
+            return len(self.gateway.recover_from_journal(wire=wire))
+
+    def _record(self, rid: int) -> dict:
+        rec = self._records.get(rid)
+        if rec is None:
+            rec = {"tokens": [], "out": None, "queues": []}
+            self._records[rid] = rec
+        return rec
+
+    def _push_tok(self, rid: int, tok: int) -> None:
+        """Commit one token to the rid's record and fan it out to every
+        attached connection (loop thread only — no locking needed)."""
+        rec = self._record(rid)
+        idx = len(rec["tokens"])
+        rec["tokens"].append(tok)
+        for q in rec["queues"]:
+            q.put_nowait(("tok", idx, tok))
+
+    def _push_fin(self, rid: int, model: Optional[str],
+                  ikey: Optional[str], out) -> None:
+        self._note_finish(model, out)
+        rec = self._record(rid)
+        rec["out"] = out
+        for q in rec["queues"]:
+            q.put_nowait(("fin", out))
+        rec["queues"] = []
+        if ikey is not None and ikey in self._ikeys:
+            self._ikeys[ikey].update(
+                state="done",
+                result={"tokens": list(out.tokens),
+                        "finish_reason": out.finish_reason,
+                        "prompt_len": out.prompt_len})
 
     # -- per-model circuit breakers -----------------------------------------
 
@@ -757,7 +920,7 @@ class GatewayHTTPServer:
             if method == "GET" and path == "/v1/models":
                 await self._models(writer)
             elif method == "POST" and path == "/v1/completions":
-                await self._completions(writer, body)
+                await self._completions(writer, body, headers)
             elif method == "POST" and path == "/admin/models":
                 await self._admin_add(writer, body)
             elif method == "DELETE" and path.startswith("/admin/models/"):
@@ -851,7 +1014,21 @@ class GatewayHTTPServer:
             top_k=_vet_int(spec, "top_k", 0, 0),
             seed=_vet_int(spec, "seed", 0, -(2 ** 63)))
 
-    async def _completions(self, writer, body: bytes) -> None:
+    @staticmethod
+    def _completion_payload(rid: int, model: Optional[str], out) -> dict:
+        return {"id": f"cmpl-{rid}", "object": "text_completion",
+                "model": model,
+                "choices": [{"index": 0,
+                             "text": " ".join(str(t) for t in out.tokens),
+                             "token_ids": list(out.tokens),
+                             "finish_reason": out.finish_reason}],
+                "usage": {"prompt_tokens": out.prompt_len,
+                          "completion_tokens": out.n_tokens,
+                          "total_tokens": out.prompt_len + out.n_tokens}}
+
+    async def _completions(self, writer, body: bytes,
+                           headers: Optional[dict] = None) -> None:
+        headers = headers or {}
         if self.draining:
             return await self._error(
                 writer, 503, "gateway is draining; no new admissions",
@@ -886,17 +1063,50 @@ class GatewayHTTPServer:
             return await self._error(writer, 400, str(exc),
                                      code="invalid_request_error",
                                      param=exc.param)
-        rid = next(self._rids)
-        q: asyncio.Queue = asyncio.Queue()
-        loop = self.loop
         stream = fields["stream"]
+        # SSE resume: a reconnecting client names the last event id it saw
+        # (== absolute token index); only tokens past it are (re)sent
+        try:
+            last = int(headers.get("last-event-id", -1))
+        except (TypeError, ValueError):
+            last = -1
+        # Exactly-once: dedupe by idempotency key against the (journal-
+        # durable) map — same body attaches/replays, different body 409s
+        ikey = spec.get("idempotency_key", headers.get("idempotency-key"))
+        if ikey is not None and (not isinstance(ikey, str) or not ikey):
+            return await self._error(
+                writer, 400, "'idempotency_key' must be a non-empty string",
+                code="invalid_request_error", param="idempotency_key")
+        fp = body_fingerprint(fields["prompt"], fields["max_tokens"],
+                              fields["temperature"], fields["top_k"],
+                              fields["seed"], model)
+        if ikey is not None:
+            known = self._ikeys.get(ikey)
+            if known is not None and known.get("rid") is None:
+                self._ikeys.pop(ikey, None)     # stale: intake never ran
+                known = None
+            if known is not None:
+                if known["fp"] != fp:
+                    return await self._error(
+                        writer, 409,
+                        f"idempotency key {ikey!r} was already used with a "
+                        "different request body", code="idempotency_conflict")
+                return await self._attach(writer, known, model, stream, last)
+            self._ikeys[ikey] = {"fp": fp, "rid": None, "state": "live",
+                                 "result": None}
+        rid = next(self._rids)
+        if ikey is not None:
+            self._ikeys[ikey]["rid"] = rid
+        rec = self._record(rid)
+        q: asyncio.Queue = asyncio.Queue()
+        rec["queues"].append(q)
+        loop = self.loop
 
-        def on_tok(_rid, tok):
-            loop.call_soon_threadsafe(q.put_nowait, ("tok", int(tok)))
+        def on_tok(_rid, tok, _r=rid):
+            loop.call_soon_threadsafe(self._push_tok, _r, int(tok))
 
-        def on_fin(out, _m=model):
-            loop.call_soon_threadsafe(self._note_finish, _m, out)
-            loop.call_soon_threadsafe(q.put_nowait, ("fin", out))
+        def on_fin(out, _r=rid, _m=model, _k=ikey):
+            loop.call_soon_threadsafe(self._push_fin, _r, _m, _k, out)
 
         req = Request(
             rid, np.asarray(fields["prompt"], np.int32),
@@ -907,7 +1117,8 @@ class GatewayHTTPServer:
                 top_k=fields["top_k"],
                 seed=fields["seed"]),
             deadline_s=fields["deadline_s"],
-            stream=on_tok if stream else None,
+            idempotency_key=ikey,
+            stream=on_tok,
             on_finish=on_fin)
 
         def _add():
@@ -919,10 +1130,12 @@ class GatewayHTTPServer:
             # off the event loop so concurrent requests still parse
             _admitted, info = await loop.run_in_executor(None, _add)
         except KeyError as exc:
+            self._ikeys.pop(ikey, None)     # nothing executed: retryable
             return await self._error(writer, 404, str(exc),
                                      code="model_not_found")
         if info == FINISH_EVICTED:
-            return await self._error(
+            self._ikeys.pop(ikey, None)     # backpressure, not a result:
+            return await self._error(       # a later retry should execute
                 writer, 503,
                 f"model {model!r} is evicted and cannot be made resident "
                 "within the byte budget; retry later",
@@ -933,26 +1146,66 @@ class GatewayHTTPServer:
             return await self._stream_sse(writer, q, rid, model, req)
         out = None
         while out is None:
-            kind, val = await q.get()
-            if kind == "fin":
-                out = val
-        payload = {"id": f"cmpl-{rid}", "object": "text_completion",
-                   "model": model,
-                   "choices": [{"index": 0,
-                                "text": " ".join(str(t) for t in out.tokens),
-                                "token_ids": list(out.tokens),
-                                "finish_reason": out.finish_reason}],
-                   "usage": {"prompt_tokens": out.prompt_len,
-                             "completion_tokens": out.n_tokens,
-                             "total_tokens": out.prompt_len + out.n_tokens}}
-        await self._json(writer, 200, payload)
+            item = await q.get()
+            if item[0] == "fin":
+                out = item[1]
+        await self._json(writer, 200,
+                         self._completion_payload(rid, model, out))
+
+    async def _attach(self, writer, known: dict, model: Optional[str],
+                      stream: bool, last: int) -> None:
+        """Serve a retried idempotency key from the ONE execution: replay
+        the durable result when it already finished, otherwise attach this
+        connection to the live request's token record (tokens past
+        ``last`` replay first, then the stream continues live)."""
+        rid = known["rid"]
+        if known["state"] == "done":
+            res = known["result"]
+            out = RequestOutput(rid=rid, prompt_len=res["prompt_len"],
+                                tokens=tuple(res["tokens"]),
+                                finish_reason=res["finish_reason"])
+            if not stream:
+                return await self._json(
+                    writer, 200, self._completion_payload(rid, model, out))
+            q: asyncio.Queue = asyncio.Queue()
+            for i, t in enumerate(out.tokens):
+                if i > last:
+                    q.put_nowait(("tok", i, int(t)))
+            q.put_nowait(("fin", out))
+            return await self._stream_sse(writer, q, rid, model, None)
+        rec = self._record(rid)
+        q = asyncio.Queue()
+        for i, t in enumerate(rec["tokens"]):
+            if i > last:
+                q.put_nowait(("tok", i, int(t)))
+        rec["queues"].append(q)
+        if stream:
+            # req=None: an attached retry must not cancel the shared
+            # execution when ITS connection drops — others may be watching
+            return await self._stream_sse(writer, q, rid, model, None)
+        out = None
+        while out is None:
+            item = await q.get()
+            if item[0] == "fin":
+                out = item[1]
+        await self._json(writer, 200,
+                         self._completion_payload(rid, model, out))
 
     async def _stream_sse(self, writer, q: asyncio.Queue, rid: int,
-                          model: str, req: Request) -> None:
+                          model: str, req: Optional[Request]) -> None:
         """SSE streaming with disconnect-cancellation: when the client
         goes away mid-stream, the underlying request is cancelled —
         releasing its slot and KV pages for live traffic — instead of
-        burning the rest of its token budget into a dead socket."""
+        burning the rest of its token budget into a dead socket.
+        ``req=None`` marks an attached/replayed connection (idempotent
+        retry, Last-Event-ID resume): its disconnect detaches the queue
+        but never cancels the shared execution.
+
+        Every token chunk carries an SSE ``id:`` field — the absolute
+        token index in the stream — so a client that reconnects after a
+        gateway crash sends ``Last-Event-ID`` and resumes exactly past
+        the last token it saw."""
+        rec = self._records.get(rid)
         try:
             writer.write(b"HTTP/1.1 200 OK\r\n"
                          b"Content-Type: text/event-stream\r\n"
@@ -960,34 +1213,43 @@ class GatewayHTTPServer:
                          b"Connection: close\r\n\r\n")
             await writer.drain()
             while True:
-                kind, val = await q.get()
+                item = await q.get()
                 if writer.is_closing():
                     raise ConnectionResetError("SSE client went away")
-                if kind == "tok":
+                if item[0] == "tok":
+                    _kind, idx, tok = item
                     chunk = {"id": f"cmpl-{rid}", "object": "text_completion",
                              "model": model,
-                             "choices": [{"index": 0, "text": f"{val} ",
-                                          "token": val,
+                             "choices": [{"index": 0, "text": f"{tok} ",
+                                          "token": tok,
                                           "finish_reason": None}]}
-                    writer.write(b"data: " + json.dumps(chunk).encode()
+                    writer.write(b"id: " + str(idx).encode()
+                                 + b"\ndata: " + json.dumps(chunk).encode()
                                  + b"\n\n")
                     await writer.drain()
                 else:
+                    out = item[1]
                     chunk = {"id": f"cmpl-{rid}", "object": "text_completion",
                              "model": model,
                              "choices": [{"index": 0, "text": "",
                                           "finish_reason":
-                                          val.finish_reason}]}
+                                          out.finish_reason}]}
                     writer.write(b"data: " + json.dumps(chunk).encode()
                                  + b"\n\ndata: [DONE]\n\n")
                     await writer.drain()
                     return
         except (ConnectionResetError, BrokenPipeError,
                 ConnectionAbortedError):
+            if req is None:
+                return                  # attached retry: just detach below
+
             def _cancel():
                 with self._lock:
                     return self.gateway.cancel(req)
             await self.loop.run_in_executor(None, _cancel)
+        finally:
+            if rec is not None and q in rec["queues"]:
+                rec["queues"].remove(q)
 
     # -- admin routes -------------------------------------------------------
 

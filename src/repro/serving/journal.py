@@ -1,0 +1,451 @@
+"""Write-ahead request journal: durable serving across process crashes.
+
+The serving engines recompute everything from tiny state — that is the
+paper's whole premise (compressed alpha streams, not dense weights, are the
+artifact worth keeping) and PR 6/9 already exploit it for *in-process*
+failures (preempt-and-recompute, watchdog rebuilds, replica failover). This
+module extends the same recompute argument across the **process boundary**:
+a `kill -9` of the serving process must lose nothing, because every request
+is journaled at admission and every emitted token batch is journaled behind
+it, so a fresh process can replay the log and resume mid-stream
+token-identically.
+
+On-disk format — an append-only directory of segments::
+
+    <dir>/seg_00000000.wal
+    <dir>/seg_00000001.wal        (rotation = compaction, see below)
+
+Each segment is a sequence of CRC-framed records::
+
+    [u32 payload_len][u32 crc32(payload)][payload: UTF-8 JSON]
+
+(little-endian). Three record types:
+
+``admit``   one per request admission: rid, prompt token ids, SamplingParams
+            (temperature/top_k/seed), max_new_tokens, model, priority,
+            deadline_s, the **wall-clock** admit time (deadlines must keep
+            ticking while the process is down), the client idempotency key,
+            and a canonical body fingerprint (409-conflict detection).
+``tok``     one per request per engine step carrying the tokens committed
+            that step (usually one).
+``fin``     one per terminal finish reason. Flushed (fsync) *before* the
+            request's ``on_finish`` fires, so any client-visible result is
+            durable.
+
+Durability contract: ``flush()`` is called once per engine step (group
+commit) and synchronously on every ``fin``. Tokens that were emitted but not
+yet fsync'd when the process died are simply **regenerated** on recovery —
+recompute is deterministic (greedy AND sampled, see ``key_after``), so the
+recovered stream is byte-identical whether or not the tail made it to disk.
+
+Recovery state machine (see docs/serving.md "Durability & crash recovery"):
+
+1. ``RequestJournal(dir)`` replays every segment in order, stopping at the
+   first torn/corrupt record per segment (a crash mid-append leaves at most
+   one torn record at the tail of the newest segment).
+2. Each non-terminal entry is rebuilt as a live ``Request`` via
+   ``entry.to_request()`` — the exact prompt-rewrite shape the
+   preempt-and-recompute path uses: ``prompt = original + journaled
+   tokens``, ``prompt_len_orig`` preserved, and for sampled requests a
+   ``resume_key`` **re-derived** from the seed (``key_after``) so the
+   resumed stream continues exactly where the journaled high-water mark
+   left off. No PRNG key bytes are ever journaled.
+3. Entries whose deadline expired while the process was down finish as
+   ``FINISH_TIMEOUT`` immediately (never silently resumed).
+4. The journal then compacts: live entries are condensed into one snapshot
+   record each in a fresh segment and old segments are deleted.
+
+Failure policy: journal I/O errors (disk full, read-only fs) must **never**
+block the step loop — the journal marks itself ``broken``, emits one loud
+warning, and every later call is a no-op. Serving degrades to non-durable;
+it does not stop.
+
+PRNG determinism (why ``key_after`` works): ``core._sample_token`` advances
+a slot's key exactly once per *emitted* token — ``split(key)[0]`` is stored
+back — and greedy requests never consult their key for token choice. The
+key a crashed sampled request would have stashed at preemption is therefore
+a pure function of ``(seed, len(journaled tokens))``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import struct
+import time
+import warnings
+import zlib
+from typing import Optional
+
+import numpy as np
+
+__all__ = ["RequestJournal", "JournalEntry", "key_after",
+           "body_fingerprint"]
+
+_FRAME = struct.Struct("<II")      # payload length, crc32(payload)
+_SEG_FMT = "seg_{:08d}.wal"
+
+# Terminal reasons are stored verbatim; anything non-None is terminal.
+
+
+def key_after(seed: int, n_tokens: int) -> Optional[np.ndarray]:
+    """The PRNG key a sampled request holds after emitting ``n_tokens``.
+
+    ``EngineCore`` seeds slot keys as ``jax.random.PRNGKey(seed)`` and
+    commits ``jax.random.split(key)[0]`` back once per emitted token, so the
+    resume key is ``split`` iterated ``n_tokens`` times. Returns None for
+    ``n_tokens == 0`` (a fresh ``_set_sampling`` seeds identically).
+    """
+    if n_tokens <= 0:
+        return None
+    import jax
+    key = jax.random.PRNGKey(seed)
+    for _ in range(n_tokens):
+        key = jax.random.split(key)[0]
+    return np.asarray(key)
+
+
+def body_fingerprint(prompt, max_new_tokens: int, temperature: float,
+                     top_k: int, seed: int, model: Optional[str]) -> int:
+    """Canonical fingerprint of the request *body* for idempotency-key
+    conflict detection (two submissions under one key must carry the same
+    body, else the retry is a different request and gets a 409). Computed
+    identically from a parsed HTTP body and from a journaled admit record.
+    """
+    blob = json.dumps([
+        [int(t) for t in np.asarray(prompt).tolist()],
+        int(max_new_tokens), float(temperature), int(top_k), int(seed),
+        model,
+    ], separators=(",", ":")).encode()
+    return zlib.crc32(blob)
+
+
+@dataclasses.dataclass
+class JournalEntry:
+    """In-memory state of one journaled request (replayed or live)."""
+    rid: int
+    prompt: list                    # original prompt token ids
+    max_new_tokens: int
+    temperature: float
+    top_k: int
+    seed: int
+    model: Optional[str] = None
+    priority: int = 0
+    deadline_s: Optional[float] = None
+    wall: float = 0.0               # wall-clock admit time (time.time)
+    ikey: Optional[str] = None      # client idempotency key
+    fp: int = 0                     # canonical body fingerprint
+    tokens: list = dataclasses.field(default_factory=list)
+    finish_reason: Optional[str] = None
+
+    @property
+    def done(self) -> bool:
+        return self.finish_reason is not None
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+    def to_request(self):
+        """Rebuild a live :class:`~repro.serving.api.Request` mid-stream —
+        the preempt-and-recompute shape: prompt rewritten to ``original +
+        journaled tokens``, ``out_tokens`` pre-filled to the journaled
+        high-water mark (so only *new* tokens are emitted), sampled streams
+        resuming from the re-derived key, and ``t_submit`` back-dated by the
+        wall-clock downtime so deadlines kept ticking while the process was
+        dead."""
+        from repro.serving.api import Request, SamplingParams
+        sp = SamplingParams(temperature=self.temperature, top_k=self.top_k,
+                            seed=self.seed)
+        prompt = np.asarray(list(self.prompt) + list(self.tokens), np.int32)
+        req = Request(rid=self.rid, prompt=prompt,
+                      max_new_tokens=self.max_new_tokens, sampling=sp,
+                      model=self.model, priority=self.priority,
+                      deadline_s=self.deadline_s,
+                      idempotency_key=self.ikey)
+        req.out_tokens = list(self.tokens)
+        req.prompt_len_orig = len(self.prompt)
+        req.token_times = [time.perf_counter()] * len(self.tokens)
+        if not self.greedy:
+            req.resume_key = key_after(self.seed, len(self.tokens))
+        elapsed = max(0.0, time.time() - self.wall) if self.wall else 0.0
+        req.t_submit = time.perf_counter() - elapsed
+        return req
+
+    # -- (de)serialisation ---------------------------------------------------
+
+    def snapshot(self) -> dict:
+        """One condensed record holding the entry's full state (written by
+        compaction so a finished request costs O(1) records, not O(tokens))."""
+        d = {"t": "entry", "rid": self.rid, "prompt": self.prompt,
+             "max_new": self.max_new_tokens, "temp": self.temperature,
+             "top_k": self.top_k, "seed": self.seed, "wall": self.wall,
+             "fp": self.fp, "toks": list(self.tokens)}
+        if self.model is not None:
+            d["model"] = self.model
+        if self.priority:
+            d["priority"] = self.priority
+        if self.deadline_s is not None:
+            d["deadline_s"] = self.deadline_s
+        if self.ikey is not None:
+            d["ikey"] = self.ikey
+        if self.finish_reason is not None:
+            d["reason"] = self.finish_reason
+        return d
+
+    @classmethod
+    def from_snapshot(cls, d: dict) -> "JournalEntry":
+        return cls(rid=int(d["rid"]), prompt=list(d["prompt"]),
+                   max_new_tokens=int(d["max_new"]),
+                   temperature=float(d["temp"]), top_k=int(d["top_k"]),
+                   seed=int(d["seed"]), model=d.get("model"),
+                   priority=int(d.get("priority", 0)),
+                   deadline_s=d.get("deadline_s"),
+                   wall=float(d.get("wall", 0.0)), ikey=d.get("ikey"),
+                   fp=int(d.get("fp", 0)), tokens=list(d.get("toks", ())),
+                   finish_reason=d.get("reason"))
+
+
+def _frame(payload: bytes) -> bytes:
+    return _FRAME.pack(len(payload), zlib.crc32(payload)) + payload
+
+
+def _iter_records(raw: bytes):
+    """Yield decoded JSON payloads, stopping at the first torn/corrupt
+    record (a crash mid-append tears at most the final record; everything
+    after an undecodable frame is untrusted)."""
+    off, n = 0, len(raw)
+    while off + _FRAME.size <= n:
+        length, crc = _FRAME.unpack_from(raw, off)
+        start = off + _FRAME.size
+        end = start + length
+        if end > n:
+            return                  # torn tail: record written partially
+        payload = raw[start:end]
+        if zlib.crc32(payload) != crc:
+            return                  # corrupt frame: stop, tail untrusted
+        try:
+            yield json.loads(payload.decode())
+        except (UnicodeDecodeError, json.JSONDecodeError):
+            return
+        off = end
+
+
+class RequestJournal:
+    """Append-only, fsync'd, CRC-framed write-ahead log of serving requests.
+
+    One journal instance backs one serving *process* (all engines of a
+    gateway pool share it — replica failover moves a request between
+    engines without touching its journal entry). Appends buffer in memory;
+    :meth:`flush` group-commits them with one write+fsync per engine step.
+    """
+
+    def __init__(self, directory: str, *, segment_bytes: int = 4 << 20,
+                 sync: bool = True):
+        self.dir = directory
+        self.segment_bytes = int(segment_bytes)
+        self.sync = sync
+        self.broken = False
+        self._buf: list[bytes] = []
+        self._fh = None
+        self.appended = 0           # records appended this process (stats)
+        self.flushes = 0            # fsync group commits
+        os.makedirs(directory, exist_ok=True)
+        segs = self._segments()
+        #: replayed + live request state, rid -> JournalEntry (insertion
+        #: order == admission order, which recovery preserves)
+        self.entries: dict[int, JournalEntry] = {}
+        for path in segs:
+            self._replay_segment(path)
+        self._seg_index = (int(os.path.basename(segs[-1])[4:12]) + 1
+                           if segs else 0)
+        self._open_segment()
+
+    # -- replay --------------------------------------------------------------
+
+    def _segments(self) -> list:
+        try:
+            names = sorted(n for n in os.listdir(self.dir)
+                           if n.startswith("seg_") and n.endswith(".wal"))
+        except OSError:
+            names = []
+        return [os.path.join(self.dir, n) for n in names]
+
+    def _replay_segment(self, path: str) -> None:
+        try:
+            with open(path, "rb") as f:
+                raw = f.read()
+        except OSError:
+            return
+        for rec in _iter_records(raw):
+            t = rec.get("t")
+            if t == "admit" or t == "entry":
+                e = JournalEntry.from_snapshot(rec)
+                self.entries[e.rid] = e
+            elif t == "tok":
+                e = self.entries.get(int(rec["rid"]))
+                if e is not None:
+                    e.tokens.extend(int(x) for x in rec["toks"])
+            elif t == "fin":
+                e = self.entries.get(int(rec["rid"]))
+                if e is not None:
+                    e.finish_reason = rec["reason"]
+
+    def live_entries(self) -> list:
+        """Non-terminal entries in admission order (the recovery set)."""
+        return [e for e in self.entries.values() if not e.done]
+
+    def finished_entries(self) -> list:
+        return [e for e in self.entries.values() if e.done]
+
+    @property
+    def max_rid(self) -> int:
+        return max(self.entries, default=-1)
+
+    # -- append paths --------------------------------------------------------
+
+    def admit_request(self, req) -> None:
+        """Journal one admission (idempotent by rid: recovery re-admission
+        and replica failover never double-admit)."""
+        if self.broken or req.rid in self.entries:
+            return
+        prompt = [int(t) for t in np.asarray(req.prompt).tolist()]
+        # Journal the ORIGINAL prompt: a request re-admitted after an
+        # in-process preemption already carries generated tokens in its
+        # rewritten prompt; those live in `tok` records, not the admission.
+        if req.prompt_len_orig is not None:
+            prompt = prompt[:req.prompt_len_orig]
+        sp = req.sampling
+        e = JournalEntry(
+            rid=req.rid, prompt=prompt, max_new_tokens=req.max_new_tokens,
+            temperature=sp.temperature, top_k=sp.top_k, seed=sp.seed,
+            model=req.model, priority=req.priority,
+            deadline_s=req.deadline_s, wall=time.time(),
+            ikey=getattr(req, "idempotency_key", None),
+            fp=body_fingerprint(prompt, req.max_new_tokens, sp.temperature,
+                                sp.top_k, sp.seed, req.model))
+        self.entries[e.rid] = e
+        d = e.snapshot()
+        d["t"] = "admit"
+        self._append(d)
+
+    def tokens(self, rid: int, toks) -> None:
+        """Journal the tokens one request committed this step."""
+        if self.broken:
+            return
+        e = self.entries.get(rid)
+        if e is None:
+            return
+        toks = [int(t) for t in toks]
+        e.tokens.extend(toks)
+        self._append({"t": "tok", "rid": rid, "toks": toks})
+
+    def finish(self, rid: int, reason: str) -> None:
+        """Journal a terminal finish reason and flush synchronously — the
+        record must be durable before ``on_finish`` surfaces the result."""
+        if self.broken:
+            return
+        e = self.entries.get(rid)
+        if e is None:
+            return
+        e.finish_reason = reason
+        self._append({"t": "fin", "rid": rid, "reason": reason})
+        self.flush()
+
+    # -- durability ----------------------------------------------------------
+
+    def _append(self, payload: dict) -> None:
+        self._buf.append(_frame(json.dumps(
+            payload, separators=(",", ":")).encode()))
+        self.appended += 1
+
+    def flush(self) -> None:
+        """Group-commit buffered records: one write + one fsync. Journal
+        I/O failure (disk full, dead volume) degrades to non-durable with a
+        single loud warning — it never blocks or kills the step loop."""
+        if self.broken or not self._buf:
+            return
+        try:
+            self._fh.write(b"".join(self._buf))
+            self._fh.flush()
+            if self.sync:
+                os.fsync(self._fh.fileno())
+            self._buf.clear()
+            self.flushes += 1
+            if self._fh.tell() >= self.segment_bytes:
+                self.compact()
+        except OSError as err:
+            self._degrade(err)
+
+    def _degrade(self, err: Exception) -> None:
+        self.broken = True
+        self._buf.clear()
+        try:
+            if self._fh is not None:
+                self._fh.close()
+        except OSError:
+            pass
+        self._fh = None
+        warnings.warn(
+            f"request journal at {self.dir!r} failed ({err!r}): serving "
+            "DEGRADES TO NON-DURABLE — in-flight requests will not survive "
+            "a process crash until the journal directory is writable and "
+            "the process restarts", RuntimeWarning, stacklevel=3)
+
+    def _open_segment(self) -> None:
+        try:
+            path = os.path.join(self.dir, _SEG_FMT.format(self._seg_index))
+            self._fh = open(path, "ab")
+        except OSError as err:
+            self._degrade(err)
+
+    # -- compaction ----------------------------------------------------------
+
+    def compact(self, keep_finished: bool = True) -> None:
+        """Rewrite the journal as one condensed snapshot record per entry
+        in a fresh segment, then delete every older segment. A finished
+        request shrinks from O(tokens) records to one; ``keep_finished=
+        False`` additionally drops terminal entries from disk (the caller
+        then owns idempotency history). Called automatically on segment
+        rotation and after recovery replay."""
+        if self.broken:
+            return
+        old = self._segments()
+        self._seg_index += 1
+        try:
+            if self._fh is not None:
+                self._fh.close()
+            path = os.path.join(self.dir, _SEG_FMT.format(self._seg_index))
+            with open(path, "ab") as f:
+                for e in self.entries.values():
+                    if e.done and not keep_finished:
+                        continue
+                    f.write(_frame(json.dumps(
+                        e.snapshot(), separators=(",", ":")).encode()))
+                f.flush()
+                os.fsync(f.fileno())
+            # Directory entry durability: the rename-like transition (new
+            # segment exists before old ones vanish) must itself survive a
+            # crash, so fsync the directory between the two steps.
+            dfd = os.open(self.dir, os.O_RDONLY)
+            try:
+                os.fsync(dfd)
+            finally:
+                os.close(dfd)
+            for p in old:
+                os.unlink(p)
+            if not keep_finished:
+                self.entries = {rid: e for rid, e in self.entries.items()
+                                if not e.done}
+            self._fh = open(path, "ab")
+        except OSError as err:
+            self._degrade(err)
+
+    def close(self) -> None:
+        self.flush()
+        if self._fh is not None:
+            try:
+                self._fh.close()
+            except OSError:
+                pass
+            self._fh = None

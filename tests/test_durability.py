@@ -1,0 +1,499 @@
+"""Durable serving: write-ahead journal, crash recovery, exactly-once.
+
+The acceptance bar (ISSUE 10): a journaled run killed mid-stream recovers
+token-identically (greedy AND sampled, packed AND window, paged AND
+contiguous); every journaled request reaches a terminal state exactly
+once across the crash (a deadline that expired while the process was down
+finishes FINISH_TIMEOUT with ``on_finish`` fired exactly once); torn
+tails truncate cleanly; journal I/O failure degrades to non-durable
+without blocking the step loop; the HTTP front door dedupes idempotency
+keys across restarts (replay identical, conflicting bodies 409, SSE
+resume past ``Last-Event-ID``).
+"""
+import asyncio
+import glob
+import json
+import os
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import registry as R
+from repro.serving import (FINISH_TIMEOUT, LLMEngine, ModelRegistry, Request,
+                           RequestJournal, SamplingParams, ServingGateway,
+                           body_fingerprint, key_after)
+from repro.serving.gateway import GatewayHTTPServer
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_smoke_config("tinyllama_1_1b")
+    params = R.model_init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _req(rid, plen, max_new=6, vocab=512, **kw):
+    rng = np.random.default_rng(rid)
+    return Request(rid, rng.integers(0, vocab, plen, dtype=np.int32),
+                   max_new_tokens=max_new, **kw)
+
+
+def _mixed_requests(max_new=8):
+    """Two greedy + two sampled — every recovery test must cover both."""
+    return [
+        _req(0, 5, max_new=max_new),
+        _req(1, 9, max_new=max_new,
+             sampling=SamplingParams(temperature=0.8, top_k=8, seed=11)),
+        _req(2, 7, max_new=max_new,
+             sampling=SamplingParams(temperature=1.1, seed=3)),
+        _req(3, 6, max_new=max_new),
+    ]
+
+
+def _engine(params, cfg, journal=None, **kw):
+    return LLMEngine(params, cfg, batch_slots=4, buffer_len=64, hw="cpu",
+                     chunk_size=8, journal=journal, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Journal mechanics (no model needed)
+# ---------------------------------------------------------------------------
+
+def test_journal_roundtrip_replay(tmp_path):
+    d = str(tmp_path / "j")
+    j = RequestJournal(d)
+    j.admit_request(_req(0, 4, sampling=SamplingParams(
+        temperature=0.7, top_k=5, seed=9)))
+    j.admit_request(_req(1, 3))
+    j.tokens(0, (17, 23))
+    j.tokens(1, (5,))
+    j.finish(1, "eos")
+    j.tokens(0, (42,))
+    j.close()
+
+    j2 = RequestJournal(d)
+    assert sorted(j2.entries) == [0, 1]
+    e0, e1 = j2.entries[0], j2.entries[1]
+    assert e0.tokens == [17, 23, 42] and not e0.done
+    assert e0.temperature == 0.7 and e0.top_k == 5 and e0.seed == 9
+    assert e1.tokens == [5] and e1.finish_reason == "eos"
+    assert [e.rid for e in j2.live_entries()] == [0]
+    assert [e.rid for e in j2.finished_entries()] == [1]
+    assert j2.max_rid == 1
+
+
+def test_journal_admit_is_idempotent_by_rid(tmp_path):
+    j = RequestJournal(str(tmp_path))
+    r = _req(0, 4)
+    j.admit_request(r)
+    before = j.appended
+    j.admit_request(r)                  # failover/recovery re-admission
+    assert j.appended == before
+
+
+def test_torn_tail_truncates_cleanly(tmp_path):
+    d = str(tmp_path)
+    j = RequestJournal(d)
+    j.admit_request(_req(0, 4))
+    j.tokens(0, (7,))
+    j.close()
+    seg = sorted(glob.glob(os.path.join(d, "seg_*.wal")))[0]
+    with open(seg, "ab") as f:
+        f.write(b"\x99\x03")            # crash mid-append: torn frame
+    j2 = RequestJournal(d)
+    assert j2.entries[0].tokens == [7]  # everything before the tear
+
+
+def test_crc_corruption_drops_untrusted_tail(tmp_path):
+    d = str(tmp_path)
+    j = RequestJournal(d)
+    j.admit_request(_req(0, 4))
+    j.flush()
+    j.admit_request(_req(1, 4))
+    j.close()
+    seg = sorted(glob.glob(os.path.join(d, "seg_*.wal")))[0]
+    raw = bytearray(open(seg, "rb").read())
+    raw[-1] ^= 0xFF                     # bit rot inside the last record
+    open(seg, "wb").write(bytes(raw))
+    j2 = RequestJournal(d)
+    assert sorted(j2.entries) == [0]    # rid 1's frame fails its CRC
+
+
+def test_rotation_compacts_and_keep_finished_false_drops(tmp_path):
+    d = str(tmp_path)
+    j = RequestJournal(d, segment_bytes=256)
+    j.admit_request(_req(0, 4))
+    j.admit_request(_req(1, 4))
+    for i in range(40):                 # well past segment_bytes
+        j.tokens(0, (i,))
+        j.flush()
+    j.finish(1, "eos")
+    assert len(glob.glob(os.path.join(d, "seg_*.wal"))) == 1  # compacted
+    j.close()
+
+    j2 = RequestJournal(d)
+    assert j2.entries[0].tokens == list(range(40))
+    assert j2.entries[1].done            # exactly-once history kept
+    j2.compact(keep_finished=False)
+    j2.close()
+    j3 = RequestJournal(d)
+    assert sorted(j3.entries) == [0]     # terminal entry dropped from disk
+
+
+def test_journal_io_failure_degrades_non_durable(tmp_path):
+    j = RequestJournal(str(tmp_path))
+    j.admit_request(_req(0, 4))
+    j.flush()
+    os.close(j._fh.fileno())            # yank the volume out from under it
+    j.tokens(0, (1,))
+    with pytest.warns(RuntimeWarning, match="NON-DURABLE"):
+        j.flush()
+    assert j.broken
+    # every later call is a silent no-op — the step loop never blocks
+    j.tokens(0, (2,))
+    j.finish(0, "eos")
+    j.flush()
+    j.compact()
+    j.close()
+
+
+def test_key_after_matches_engine_key_schedule():
+    assert key_after(7, 0) is None      # fresh seed: _set_sampling re-seeds
+    key = jax.random.PRNGKey(7)
+    for _ in range(3):
+        key = jax.random.split(key)[0]
+    np.testing.assert_array_equal(key_after(7, 3), np.asarray(key))
+
+
+def test_body_fingerprint_is_canonical():
+    fp = body_fingerprint([1, 2, 3], 8, 0.0, 0, 0, "m")
+    assert fp == body_fingerprint(np.array([1, 2, 3]), 8, 0.0, 0, 0, "m")
+    assert fp != body_fingerprint([1, 2, 4], 8, 0.0, 0, 0, "m")
+    assert fp != body_fingerprint([1, 2, 3], 9, 0.0, 0, 0, "m")
+    assert fp != body_fingerprint([1, 2, 3], 8, 0.5, 0, 0, "m")
+    assert fp != body_fingerprint([1, 2, 3], 8, 0.0, 0, 1, "m")
+    assert fp != body_fingerprint([1, 2, 3], 8, 0.0, 0, 0, "n")
+
+
+def test_to_request_rebuilds_preempt_shape():
+    from repro.serving.journal import JournalEntry
+    e = JournalEntry(rid=5, prompt=[1, 2, 3], max_new_tokens=10,
+                     temperature=0.9, top_k=4, seed=13,
+                     tokens=[40, 41], wall=time.time() - 2.5,
+                     ikey="k", fp=123)
+    r = e.to_request()
+    assert r.rid == 5 and list(r.prompt) == [1, 2, 3, 40, 41]
+    assert r.out_tokens == [40, 41] and r.prompt_len_orig == 3
+    assert r.idempotency_key == "k"
+    np.testing.assert_array_equal(r.resume_key, key_after(13, 2))
+    # deadlines kept ticking while the process was down
+    assert time.perf_counter() - r.t_submit >= 2.4
+    g = JournalEntry(rid=6, prompt=[1], max_new_tokens=4,
+                     temperature=0.0, top_k=0, seed=0, tokens=[9])
+    assert g.to_request().resume_key is None       # greedy never needs one
+
+
+# ---------------------------------------------------------------------------
+# Crash recovery equivalence (the tentpole bar)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", [
+    {},                                                   # padded window
+    {"packed": True},                                     # token-packed
+    {"packed": True, "paged": True, "page_size": 4},      # paged pool
+], ids=["window", "packed", "paged"])
+def test_crash_recovery_token_identical(tiny, tmp_path, mode):
+    cfg, params = tiny
+    ref_eng = _engine(params, cfg, **mode)
+    for r in _mixed_requests():
+        ref_eng.submit(r)
+    ref_eng.run_until_drained()
+    ref = {o.rid: o.tokens for o in ref_eng.outputs()}
+
+    d = str(tmp_path / "j")
+    j = RequestJournal(d)
+    eng = _engine(params, cfg, journal=j, **mode)
+    for r in _mixed_requests():
+        eng.submit(r)
+    for _ in range(2):                  # die mid-stream
+        eng.step()
+    j.close()                           # the unflushed tail is lost
+
+    j2 = RequestJournal(d)
+    assert j2.live_entries()            # the kill landed mid-run
+    eng2 = _engine(params, cfg, journal=j2, **mode)
+    recovered = eng2.recover_from_journal()
+    assert recovered
+    eng2.run_until_drained()
+    # journal view AND engine-visible streams both match the uncrashed run
+    for rid, toks in ref.items():
+        assert tuple(j2.entries[rid].tokens) == toks, rid
+        assert j2.entries[rid].finish_reason in ("eos", "length")
+    got = {o.rid: o.tokens for o in eng2.outputs()}
+    assert got == ref
+
+
+def test_recovery_finishes_each_request_exactly_once(tiny, tmp_path):
+    """A journaled request whose finish was already durable is never
+    re-run OR re-notified; a live one finishes exactly once post-crash."""
+    cfg, params = tiny
+    d = str(tmp_path / "j")
+    j = RequestJournal(d)
+    eng = _engine(params, cfg, journal=j)
+    short = _req(0, 4, max_new=2)       # finishes quickly
+    long = _req(1, 4, max_new=12)
+    eng.submit(short)
+    eng.submit(long)
+    while short.finish_reason is None:
+        eng.step()
+    j.close()
+
+    j2 = RequestJournal(d)
+    assert j2.entries[0].done
+    fins = []
+    eng2 = _engine(params, cfg, journal=j2)
+
+    def wire(req):
+        req.on_finish = lambda out: fins.append(out.rid)
+
+    recovered = eng2.recover_from_journal(wire=wire)
+    assert [r.rid for r in recovered] == [1]    # rid 0 is NOT re-admitted
+    eng2.run_until_drained()
+    assert fins == [1]                  # exactly one notification, once
+    assert j2.entries[1].done
+
+
+def test_deadline_expired_while_down_times_out_once(tiny, tmp_path):
+    """ISSUE 10 satellite: a journaled request whose deadline passed while
+    the process was dead must finish FINISH_TIMEOUT on restart — before
+    any decode work — with on_finish fired exactly once."""
+    cfg, params = tiny
+    d = str(tmp_path / "j")
+    j = RequestJournal(d)
+    eng = _engine(params, cfg, journal=j)
+    eng.submit(_req(0, 4, max_new=50, deadline_s=0.2))
+    eng.step()
+    j.close()                           # process dies holding a live entry
+
+    time.sleep(0.3)                     # the outage outlives the deadline
+    j2 = RequestJournal(d)
+    fins = []
+    eng2 = _engine(params, cfg, journal=j2)
+
+    def wire(req):
+        req.on_finish = lambda out: fins.append(out)
+
+    recovered = eng2.recover_from_journal(wire=wire)
+    assert recovered == []              # expired: finalized, not re-admitted
+    assert fins and len(fins) == 1
+    assert fins[0].finish_reason == FINISH_TIMEOUT
+    assert j2.entries[0].finish_reason == FINISH_TIMEOUT   # durable too
+    eng2.run_until_drained()
+    assert len(fins) == 1               # and never notified again
+    assert [o.rid for o in eng2.outputs()] == [0]
+
+
+def test_recovery_compacts_journal(tiny, tmp_path):
+    cfg, params = tiny
+    d = str(tmp_path / "j")
+    j = RequestJournal(d)
+    eng = _engine(params, cfg, journal=j)
+    for r in _mixed_requests():
+        eng.submit(r)
+    for _ in range(3):
+        eng.step()
+    j.close()
+
+    j2 = RequestJournal(d)
+    eng2 = _engine(params, cfg, journal=j2)
+    eng2.recover_from_journal()
+    assert len(glob.glob(os.path.join(d, "seg_*.wal"))) == 1
+
+
+# ---------------------------------------------------------------------------
+# HTTP exactly-once: idempotency keys, 409 conflicts, SSE resume
+# ---------------------------------------------------------------------------
+
+async def _call(host, port, method, path, body=None, headers=None):
+    reader, writer = await asyncio.open_connection(host, port)
+    payload = b"" if body is None else json.dumps(body).encode()
+    extra = "".join(f"{k}: {v}\r\n" for k, v in (headers or {}).items())
+    writer.write((f"{method} {path} HTTP/1.1\r\nHost: {host}\r\n"
+                  f"Content-Length: {len(payload)}\r\n" + extra +
+                  "Connection: close\r\n\r\n").encode() + payload)
+    await writer.drain()
+    status = int((await reader.readline()).split()[1])
+    ctype = ""
+    while True:
+        h = await reader.readline()
+        if h in (b"\r\n", b"\n", b""):
+            break
+        k, _, v = h.decode().partition(":")
+        if k.strip().lower() == "content-type":
+            ctype = v.strip()
+    raw = await reader.read()
+    writer.close()
+    if "event-stream" in ctype:
+        events, sid = [], None
+        for line in raw.decode().splitlines():
+            if line.startswith("id: "):
+                sid = int(line[4:])
+            elif line.startswith("data: "):
+                data = line[6:]
+                events.append((sid, data if data == "[DONE]"
+                               else json.loads(data)))
+                sid = None
+        return status, events
+    return status, json.loads(raw or b"{}")
+
+
+def _one_model_gateway(cfg, params, journal):
+    reg = ModelRegistry()
+    reg.register("m", cfg, lambda: params)
+    return ServingGateway(reg, batch_slots=2, buffer_len=64, chunk_size=8,
+                          hw="cpu", journal=journal)
+
+
+def test_http_idempotency_attach_replay_conflict_and_sse_resume(
+        tiny, tmp_path):
+    cfg, params = tiny
+    j = RequestJournal(str(tmp_path / "j"))
+    gw = _one_model_gateway(cfg, params, j)
+    body = {"model": "m", "prompt": [3, 1, 4], "max_tokens": 4,
+            "idempotency_key": "key-a"}
+
+    async def drive():
+        srv = GatewayHTTPServer(gw, port=0)
+        await srv.start()
+        try:
+            h = srv.host, srv.port
+            # two POSTs under ONE key, second while the first is still in
+            # flight: one execution, one shared result (the retry attaches
+            # live, or replays the durable result if the first already won)
+            t1 = asyncio.ensure_future(
+                _call(*h, "POST", "/v1/completions", body))
+            await asyncio.sleep(0.3)
+            s2, r2 = await _call(*h, "POST", "/v1/completions", body)
+            s1, r1 = await t1
+            assert s1 == 200 and s2 == 200
+            toks = r1["choices"][0]["token_ids"]
+            assert toks == r2["choices"][0]["token_ids"]
+            assert r1["id"] == r2["id"]             # same rid: ONE run
+
+            # replay after finish: durable result, still the same stream
+            s3, r3 = await _call(*h, "POST", "/v1/completions", body)
+            assert s3 == 200
+            assert r3["choices"][0]["token_ids"] == toks
+
+            # same key, different body: conflict, never a second execution
+            s4, r4 = await _call(*h, "POST", "/v1/completions",
+                                 dict(body, prompt=[9, 9]))
+            assert s4 == 409
+            assert r4["error"]["code"] == "idempotency_conflict"
+
+            # header spelling of the key works too
+            s5, r5 = await _call(*h, "POST", "/v1/completions",
+                                 {"model": "m", "prompt": [3, 1, 4],
+                                  "max_tokens": 4},
+                                 headers={"Idempotency-Key": "key-a"})
+            assert s5 == 200
+            assert r5["choices"][0]["token_ids"] == toks
+
+            # SSE resume: ids are absolute; Last-Event-ID replays past it
+            s6, ev6 = await _call(*h, "POST", "/v1/completions",
+                                  dict(body, stream=True))
+            ids = [sid for sid, e in ev6
+                   if e != "[DONE]" and e["choices"][0].get("token")
+                   is not None]
+            assert ids == list(range(len(toks)))
+            s7, ev7 = await _call(*h, "POST", "/v1/completions",
+                                  dict(body, stream=True),
+                                  headers={"Last-Event-ID": "1"})
+            resumed = [(sid, e["choices"][0]["token"]) for sid, e in ev7
+                       if e != "[DONE]" and e["choices"][0].get("token")
+                       is not None]
+            assert resumed == [(i, toks[i]) for i in range(2, len(toks))]
+        finally:
+            await srv.stop()
+
+    asyncio.run(drive())
+
+
+def test_http_idempotency_survives_restart(tiny, tmp_path):
+    """The idempotency map is rebuilt from the journal: after a restart a
+    retried key replays the durable result bit-identically, a conflicting
+    body still 409s, and new requests get fresh rids past the journaled
+    high-water mark."""
+    cfg, params = tiny
+    d = str(tmp_path / "j")
+    body = {"model": "m", "prompt": [3, 1, 4], "max_tokens": 4,
+            "temperature": 0.8, "top_k": 8, "seed": 5,
+            "idempotency_key": "key-r"}
+    first: dict = {}
+
+    async def run_once(journal, out):
+        gw = _one_model_gateway(cfg, params, journal)
+        srv = GatewayHTTPServer(gw, port=0)
+        await srv.start()
+        try:
+            n = await srv.recover()
+            out["recovered"] = n
+            st, resp = await _call(srv.host, srv.port, "POST",
+                                   "/v1/completions", body)
+            assert st == 200
+            out["rid"] = resp["id"]
+            out["tokens"] = resp["choices"][0]["token_ids"]
+            st, resp = await _call(srv.host, srv.port, "POST",
+                                   "/v1/completions",
+                                   dict(body, max_tokens=9))
+            out["conflict"] = st
+        finally:
+            await srv.stop()
+
+    j1 = RequestJournal(d)
+    asyncio.run(run_once(j1, first))
+    j1.close()
+    assert first["conflict"] == 409
+
+    second: dict = {}
+    j2 = RequestJournal(d)
+    asyncio.run(run_once(j2, second))
+    j2.close()
+    assert second["recovered"] == 0          # nothing live: fin was durable
+    assert second["tokens"] == first["tokens"]
+    assert second["rid"] == first["rid"]     # replayed, not re-executed
+    assert second["conflict"] == 409
+
+
+# ---------------------------------------------------------------------------
+# Atomic persistence satellites
+# ---------------------------------------------------------------------------
+
+def test_atomic_write_json_leaves_no_tmp(tmp_path):
+    from repro.checkpoint.ckpt import atomic_write_json
+    path = str(tmp_path / "out.json")
+    atomic_write_json(path, {"a": [1, 2]}, indent=2)
+    assert json.load(open(path)) == {"a": [1, 2]}
+    assert os.listdir(str(tmp_path)) == ["out.json"]   # no .tmp debris
+
+
+def test_restore_verifies_by_default_and_names_leaf(tmp_path):
+    import jax.numpy as jnp
+
+    from repro.checkpoint import ckpt
+    tree = {"w": jnp.arange(8.0), "b": jnp.zeros(3)}
+    ckpt.save(tree, str(tmp_path), 1)
+    # leaves are saved in sorted tree-path order: 'b' then 'w'
+    leaf = str(tmp_path / "step_00000001" / "leaf_00001.npy")
+    raw = bytearray(open(leaf, "rb").read())
+    raw[-1] ^= 0x01                     # bit rot in 'w'
+    open(leaf, "wb").write(bytes(raw))
+    template = {"w": jax.ShapeDtypeStruct((8,), jnp.float32),
+                "b": jax.ShapeDtypeStruct((3,), jnp.float32)}
+    with pytest.raises(ValueError, match=r"leaf 'w'.*CRC32"):
+        ckpt.restore(str(tmp_path), template=template)   # verify defaults on
+    back, _ = ckpt.restore(str(tmp_path), template=template, verify=False)
+    assert back["w"].shape == (8,)
